@@ -1,0 +1,38 @@
+"""Shared benchmark helpers: CSV emission + tiny table printer."""
+from __future__ import annotations
+
+import time
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """Record + print one CSV row: name,us_per_call,derived."""
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def header() -> None:
+    print("name,us_per_call,derived")
+
+
+def table(title: str, cols: list[str], rows: list[list]) -> None:
+    print(f"\n## {title}")
+    widths = [max(len(str(c)), max((len(str(r[i])) for r in rows),
+                                   default=0)) for i, c in enumerate(cols)]
+    print("| " + " | ".join(str(c).ljust(w) for c, w in zip(cols, widths))
+          + " |")
+    print("|" + "|".join("-" * (w + 2) for w in widths) + "|")
+    for r in rows:
+        print("| " + " | ".join(str(v).ljust(w) for v, w in zip(r, widths))
+              + " |")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0
+        self.us = self.s * 1e6

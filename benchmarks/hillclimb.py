@@ -1,0 +1,88 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ must precede jax import (production-mesh compiles).
+
+"""§Perf hillclimb driver: A/B roofline terms for one cell under config /
+plan variants. Each invocation is one hypothesis→change→measure cycle;
+results append to perf_log.jsonl for the EXPERIMENTS.md §Perf table.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.hillclimb \
+      --arch qwen3-32b --shape decode_32k --plan zero1 \
+      --tag grouped_attn --set decode_grouped_attn=True
+"""
+import argparse
+import json
+import time
+
+from repro.config import SHAPES_BY_NAME, ShardingPlan, TPU_V5E
+from repro.launch.dryrun import analyze_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    if v in ("True", "False"):
+        return k, v == "True"
+    try:
+        return k, int(v)
+    except ValueError:
+        pass
+    try:
+        return k, float(v)
+    except ValueError:
+        return k, v
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--plan", default="zero1",
+                    choices=["none", "zero1", "zero3"])
+    ap.add_argument("--partition", default="balanced")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi"])
+    ap.add_argument("--mode", default="scan2")
+    ap.add_argument("--tag", required=True,
+                    help="iteration label for the perf log")
+    ap.add_argument("--hypothesis", default="")
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="cfg overrides key=value")
+    ap.add_argument("--log", default="perf_log.jsonl")
+    args = ap.parse_args(argv)
+
+    overrides = dict(parse_override(kv) for kv in args.set)
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    mesh_name = "multi_pod_2x16x16" if args.mesh == "multi" \
+        else "single_pod_16x16"
+    shape = SHAPES_BY_NAME[args.shape]
+    plan = ShardingPlan(grad_sharding=args.plan, partition=args.partition)
+
+    t0 = time.time()
+    r = analyze_cell(args.arch, shape, mesh, mesh_name, plan,
+                     mode=args.mode, verbose=False,
+                     cfg_overrides=overrides or None)
+    t = r["terms_s"]
+    hw = TPU_V5E
+    useful_s = r["model_flops_total"] / r["n_chips"] / hw.peak_flops_bf16
+    frac = useful_s / max(t.values())
+    rec = {
+        "tag": args.tag, "hypothesis": args.hypothesis,
+        "arch": args.arch, "shape": args.shape, "plan": args.plan,
+        "overrides": overrides, "mesh": mesh_name,
+        "compute_ms": t["compute"] * 1e3, "memory_ms": t["memory"] * 1e3,
+        "memory_adj_ms": t.get("memory_adjusted", t["memory"]) * 1e3,
+        "collective_ms": t["collective"] * 1e3, "dominant": r["dominant"],
+        "useful": r["useful_flops_ratio"], "roofline_fraction": frac,
+        "hbm_gb": r["hbm_per_device_gb"],
+        "collective_counts": r["collectives"]["counts"],
+        "wall_compile_s": round(time.time() - t0, 1),
+    }
+    with open(args.log, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

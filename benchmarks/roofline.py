@@ -1,0 +1,92 @@
+"""Roofline report generator: reads dryrun_results/*.json and prints the
+per-(arch × shape × mesh) three-term roofline table for EXPERIMENTS.md.
+
+Definitions (per-device quantities from the compiled SPMD module):
+  compute_s    = HLO_FLOPs_per_device / 197e12         (v5e bf16 peak)
+  memory_s     = HLO_bytes_per_device / 819e9          (HBM bandwidth)
+  collective_s = collective_payload_bytes_per_device / 50e9  (ICI link)
+  bound        = argmax of the three
+  useful       = MODEL_FLOPS/chips / HLO_FLOPs_per_device  (remat/pad waste)
+  roofline_fraction = (MODEL_FLOPS/chips / peak) / max(term)
+      — the fraction of the binding resource's time spent on useful model
+      FLOPs; this is the §Perf score.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from benchmarks.common import emit, table
+from repro.config import TPU_V5E
+
+
+def load_results(out_dir: str = "dryrun_results") -> list[dict]:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        if os.path.basename(fn).startswith("summary"):
+            continue
+        with open(fn) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def roofline_fraction(r: dict) -> float:
+    hw = TPU_V5E
+    useful_s = r["model_flops_total"] / r["n_chips"] / hw.peak_flops_bf16
+    binding = max(r["terms_s"].values())
+    return useful_s / binding if binding else 0.0
+
+
+def _spec_terms(r: dict) -> dict:
+    return {k: v for k, v in r["terms_s"].items()
+            if k in ("compute", "memory", "collective")}
+
+
+def _print_dir(out_dir: str, title: str) -> None:
+    rows = load_results(out_dir)
+    if not rows:
+        print(f"(no dry-run results found in {out_dir}/ — run "
+              f"PYTHONPATH=src python -m repro.launch.dryrun first)")
+        return
+    trows = []
+    for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        t = _spec_terms(r)
+        rf = roofline_fraction(r)
+        plan = r.get("plan", {}).get("grad_sharding", "?")
+        trows.append([
+            r["mesh"], r["arch"], r["shape"], plan,
+            f"{t['compute']*1e3:.1f}", f"{t['memory']*1e3:.1f}",
+            f"{t['collective']*1e3:.1f}", r["dominant"],
+            f"{r['useful_flops_ratio']:.2f}", f"{rf:.3f}",
+            f"{r['hbm_per_device_gb']:.1f}"])
+        emit(f"roofline/{out_dir}/{r['mesh']}/{r['arch']}/{r['shape']}",
+             max(t.values()) * 1e6,
+             f"bound={r['dominant']};fraction={rf:.3f}")
+    table(title, ["mesh", "arch", "shape", "plan", "compute", "memory",
+                  "collective", "bound", "useful", "roofline_frac",
+                  "HBM GB/dev"], trows)
+
+
+def main(out_dir: str = "dryrun_results") -> None:
+    _print_dir(out_dir, "Roofline terms per (mesh × arch × shape) — "
+                        "ms per step [paper-technique baseline]")
+    if os.path.isdir("dryrun_results_opt") and out_dir == "dryrun_results":
+        _print_dir("dryrun_results_opt",
+                   "Roofline terms — beyond-paper optimized "
+                   "(grouped GQA decode + causal block skip + local MoE "
+                   "dispatch)")
+
+
+def roofline_fraction_max(out_dirs=("dryrun_results",
+                                    "dryrun_results_opt")) -> float:
+    best = 0.0
+    for d in out_dirs:
+        for r in load_results(d):
+            best = max(best, roofline_fraction(r))
+    return best
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results")

@@ -1,0 +1,50 @@
+"""Run every benchmark: one per paper table/figure + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus human-readable tables).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (
+    kernels_bench,
+    roofline,
+    rq1_idle,
+    rq1b_lambda,
+    rq2_shard_ablation,
+    rq2b_lambda_sweep,
+    rq3_cross_arch,
+)
+from benchmarks.common import header
+
+BENCHES = [
+    ("rq1_idle (Table III)", rq1_idle.main),
+    ("rq1b_lambda (Table IV)", rq1b_lambda.main),
+    ("rq2_shard_ablation (Table V)", rq2_shard_ablation.main),
+    ("rq2b_lambda_sweep (Table VI)", rq2b_lambda_sweep.main),
+    ("rq3_cross_arch (Table VII)", rq3_cross_arch.main),
+    ("kernels", kernels_bench.main),
+    ("roofline (§Roofline)", roofline.main),
+]
+
+
+def main() -> None:
+    header()
+    failures = []
+    for name, fn in BENCHES:
+        print(f"\n{'='*72}\n== {name}\n{'='*72}")
+        try:
+            fn()
+        except Exception as e:
+            failures.append((name, e))
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} benchmark(s) FAILED: "
+              f"{[n for n, _ in failures]}")
+        sys.exit(1)
+    print(f"\nAll {len(BENCHES)} benchmarks passed.")
+
+
+if __name__ == "__main__":
+    main()

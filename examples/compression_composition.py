@@ -1,0 +1,63 @@
+"""Per-shard gradient compression composed with GradsSharding (paper §VI:
+"compression ... can be composed by compressing each shard before upload").
+
+Each client QSGD-int8-quantizes (or top-k-sparsifies) every shard with the
+Pallas kernels before the PUT; aggregators average dequantized shards. The
+example reports bytes-on-the-wire reduction and the aggregation error it
+introduces vs the exact pipeline.
+
+Run:  PYTHONPATH=src python examples/compression_composition.py
+"""
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.sharding import make_plan, reconstruct, shard
+from repro.kernels import ops
+
+N, M, SIZE = 8, 4, 200_000
+
+
+def main():
+    rng = np.random.default_rng(0)
+    grads = [rng.standard_normal(SIZE).astype(np.float32) for _ in range(N)]
+    plan = make_plan("uniform", SIZE, M)
+    exact = np.stack(grads).mean(axis=0)
+
+    for mode in ("qsgd8", "topk1%"):
+        raw_bytes = comp_bytes = 0
+        avg_shards = []
+        for j in range(M):
+            decoded = []
+            for g in grads:
+                sh = shard(g, plan)[j]
+                raw_bytes += sh.nbytes
+                if mode == "qsgd8":
+                    codes, scales, l = ops.qsgd_compress(jnp.asarray(sh))
+                    comp_bytes += codes.nbytes + scales.nbytes
+                    decoded.append(np.asarray(
+                        ops.qsgd_decompress(codes, scales, l)))
+                else:
+                    k = max(1, (32 * 128) // 100)     # top 1% per tile
+                    sp = ops.topk_sparsify(jnp.asarray(sh), k)
+                    nnz = int(jnp.sum(sp != 0))
+                    comp_bytes += nnz * 8             # value+index pairs
+                    decoded.append(np.asarray(sp))
+            acc = decoded[0].copy()
+            for d in decoded[1:]:
+                acc += d
+            avg_shards.append(acc / N)
+        got = reconstruct(avg_shards, plan)
+        rel = np.linalg.norm(got - exact) / np.linalg.norm(exact)
+        print(f"{mode:7s}: wire bytes {comp_bytes/1e6:7.2f} MB "
+              f"(vs {raw_bytes/1e6:.2f} MB raw, "
+              f"{raw_bytes/comp_bytes:.1f}x smaller), "
+              f"aggregate rel-err {rel:.4f}")
+
+    print("\nS3-transfer implication (paper: I/O is >90% of time & the "
+          "dominant cost): 4x fewer bytes ≈ 4x faster aggregation reads "
+          "and 4x lower Lambda GB-s on the transfer-bound path.")
+
+
+if __name__ == "__main__":
+    main()

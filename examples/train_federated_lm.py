@@ -1,0 +1,99 @@
+"""End-to-end driver: federated training of a transformer LM through the
+serverless GradsSharding aggregation substrate.
+
+N clients each hold a non-IID synthetic Markov token stream; every round
+they train locally (SGD+momentum, the paper's client optimizer), upload
+gradient-shards to the object store, M Lambda aggregators average them,
+and clients reconstruct + apply the update. Loss decreases; swapping
+``--topology`` changes only cost/latency, never the learning trajectory.
+
+Run:  PYTHONPATH=src python examples/train_federated_lm.py \
+          --rounds 10 --clients 4 --shards 4 --topology gradssharding
+"""
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import aggregation as agg
+from repro.core.fedavg import apply_delta, local_sgd_update, model_delta
+from repro.core.sharding import flatten, unflatten
+from repro.data import SyntheticLM
+from repro.models import registry as models
+from repro.serverless import LambdaRuntime
+from repro.store import ObjectStore
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--local_steps", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--topology", default="gradssharding",
+                    choices=["gradssharding", "lambda_fl", "lifl"])
+    ap.add_argument("--partition", default="uniform",
+                    choices=["uniform", "balanced", "layer_contiguous"])
+    args = ap.parse_args(argv)
+
+    cfg = dataclasses.replace(get_arch(args.arch).smoke, vocab=256,
+                              remat=False)
+    params = models.init_params(jax.random.PRNGKey(0), cfg)
+    data = SyntheticLM(vocab=256, seq_len=args.seq, seed=0,
+                       markov_concentration=0.4)
+    store, runtime = LambdaRuntime(), None
+    store, runtime = ObjectStore(), LambdaRuntime()
+
+    def loss_fn(p, b):
+        return models.loss_fn(p, cfg, b)
+
+    _, spec = flatten(params)
+    tensor_sizes = None
+    if args.partition != "uniform":
+        from repro.core.sharding import flatten as _fl
+        f, sp = _fl(params)
+        tensor_sizes = list(sp.sizes)
+
+    print(f"federated {args.arch} ({models.param_count(cfg):,} params), "
+          f"N={args.clients} clients, topology={args.topology} "
+          f"M={args.shards}")
+    t0 = time.time()
+    for rnd in range(args.rounds):
+        flats = []
+        losses = []
+        for c in range(args.clients):
+            local = params
+            vel = None
+            for s in range(args.local_steps):
+                batch = data.batch(c, rnd * args.local_steps + s,
+                                   args.batch)
+                local, vel, l = local_sgd_update(loss_fn, local, batch,
+                                                 lr=args.lr, momentum=0.9)
+            losses.append(float(l))
+            f, spec = flatten(model_delta(params, local))
+            flats.append(np.asarray(f))
+        res = agg.aggregate_round(
+            args.topology, flats, rnd=rnd, store=store, runtime=runtime,
+            n_shards=args.shards, partition=args.partition,
+            tensor_sizes=tensor_sizes)
+        params = apply_delta(params, unflatten(jnp.asarray(res.avg_flat),
+                                               spec))
+        print(f"round {rnd:3d}  client-loss {np.mean(losses):.4f}  "
+              f"agg-wall {res.wall_clock_s:.2f}s  "
+              f"ops {res.puts}P/{res.gets}G  "
+              f"peak-mem {res.peak_memory_mb:.0f}MB")
+    print(f"total lambda cost: ${runtime.total_cost():.6f}  "
+          f"({time.time()-t0:.1f}s real)")
+
+
+if __name__ == "__main__":
+    main()

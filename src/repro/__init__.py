@@ -1,0 +1,7 @@
+"""repro: GradsSharding — serverless federated aggregation via gradient
+partitioning, built as a multi-pod JAX training/serving framework.
+
+Paper: "Shard the Gradient, Scale the Model" (A. Barrak, CS.DC 2026).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.reshard import load_resharded, save_sharded
+
+__all__ = ["CheckpointManager", "load_resharded", "save_sharded"]

@@ -1,0 +1,144 @@
+"""Fault-tolerant checkpointing.
+
+Design for 1000+ node runs (DESIGN.md §5):
+  * atomic: write to ``<dir>/tmp-<step>`` then rename — a crash mid-save
+    never corrupts the latest checkpoint;
+  * manifested: ``manifest.json`` carries step, pytree structure, per-leaf
+    checksums; restore verifies before handing params to the trainer;
+  * resumable: ``latest_step()`` scans for the newest *complete* checkpoint
+    (partial/corrupt ones are skipped), so restart-after-failure is just
+    ``restore(latest_step())``;
+  * bounded: ``keep`` old checkpoints are retained, older ones GC'd.
+
+Storage is npz per leaf-group (pure numpy, no orbax dependency) and is
+shard-layout-agnostic: the elastic M→M′ path lives in ``reshard.py``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import zlib
+from typing import Any
+
+import numpy as np
+
+import jax
+
+Pytree = Any
+
+
+def _leaf_paths(tree: Pytree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out.append((name or "leaf", leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:010d}")
+
+    def save(self, step: int, tree: Pytree, extra: dict | None = None) -> str:
+        tmp = os.path.join(self.directory, f"tmp_{step:010d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        leaves = _leaf_paths(tree)
+        manifest = {"step": step, "leaves": [], "extra": extra or {}}
+        arrays = {}
+        for i, (name, leaf) in enumerate(leaves):
+            arr = np.asarray(leaf)
+            stored_dtype = str(arr.dtype)
+            if arr.dtype.kind not in "fiub" or stored_dtype == "bfloat16":
+                # npz can't round-trip ml_dtypes (bf16/fp8): store f32,
+                # restore() casts back to the reference leaf's dtype.
+                arr = arr.astype(np.float32)
+            key = f"a{i:05d}"
+            arrays[key] = arr
+            manifest["leaves"].append({
+                "name": name, "key": key, "shape": list(arr.shape),
+                "dtype": stored_dtype,
+                "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+            })
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        final = self._step_dir(step)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)               # atomic publish
+        self._gc()
+        return final
+
+    def _complete(self, d: str) -> bool:
+        return (os.path.exists(os.path.join(d, "manifest.json"))
+                and os.path.exists(os.path.join(d, "arrays.npz")))
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and \
+                    self._complete(os.path.join(self.directory, name)):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, step: int, like: Pytree,
+                verify: bool = True) -> tuple[Pytree, dict]:
+        """Restore into the structure of ``like`` (shape/dtype asserted)."""
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        flat_like, treedef = jax.tree_util.tree_flatten(like)
+        entries = manifest["leaves"]
+        if len(entries) != len(flat_like):
+            raise ValueError(
+                f"checkpoint has {len(entries)} leaves, expected "
+                f"{len(flat_like)}")
+        leaves = []
+        for entry, ref in zip(entries, flat_like):
+            arr = data[entry["key"]]
+            if list(arr.shape) != list(ref.shape):
+                raise ValueError(
+                    f"{entry['name']}: shape {arr.shape} != {ref.shape}")
+            if verify:
+                crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+                if crc != entry["crc32"]:
+                    raise IOError(
+                        f"{entry['name']}: checksum mismatch (corrupt "
+                        f"checkpoint at step {step})")
+            if str(arr.dtype) != str(ref.dtype):
+                import jax.numpy as jnp
+                arr = np.asarray(jnp.asarray(arr).astype(ref.dtype))
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, leaves), \
+            manifest.get("extra", {})
+
+    def restore_latest(self, like: Pytree) -> tuple[int, Pytree, dict] | None:
+        """Newest complete+valid checkpoint, skipping corrupt ones."""
+        for step in reversed(self.steps()):
+            try:
+                tree, extra = self.restore(step, like)
+                return step, tree, extra
+            except (IOError, ValueError, KeyError):
+                continue
+        return None
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

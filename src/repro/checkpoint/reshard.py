@@ -1,0 +1,69 @@
+"""Elastic shard-count checkpointing: save at M shards, resume at M′.
+
+The paper's future work ("adaptive shard counts that respond to model and
+memory conditions at runtime") realized at the checkpoint layer: state is
+persisted per *logical shard* together with its PartitionPlan; a restart may
+choose any new M′ (e.g. the cluster shrank from 512 to 256 devices, or a
+Lambda deployment re-tunes M for cost) — the loader reconstructs the flat
+vector from old shards and re-partitions with the new plan.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core.sharding import (
+    PartitionPlan,
+    make_plan,
+    reconstruct,
+    shard,
+)
+
+
+def _plan_to_json(plan: PartitionPlan) -> dict:
+    return {"total": plan.total, "strategy": plan.strategy,
+            "segments": [[list(r) for r in segs] for segs in plan.segments]}
+
+
+def _plan_from_json(d: dict) -> PartitionPlan:
+    segs = tuple(tuple(tuple(r) for r in segs) for segs in d["segments"])
+    return PartitionPlan(d["total"], segs, d["strategy"])
+
+
+def save_sharded(directory: str, flat: np.ndarray, plan: PartitionPlan,
+                 step: int = 0, extra: dict | None = None) -> None:
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, ".tmp_sharded")
+    if os.path.exists(tmp):
+        import shutil
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    shards = shard(np.asarray(flat, np.float32), plan)
+    for j, sh in enumerate(shards):
+        np.save(os.path.join(tmp, f"shard_{j:05d}.npy"), np.asarray(sh))
+    meta = {"plan": _plan_to_json(plan), "step": step, "extra": extra or {}}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    final = os.path.join(directory, f"sharded_{step:010d}")
+    if os.path.exists(final):
+        import shutil
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+
+
+def load_resharded(directory: str, step: int, new_m: int,
+                   strategy: str = "uniform",
+                   tensor_sizes=None) -> tuple[list[np.ndarray],
+                                               PartitionPlan, dict]:
+    """Load a sharded checkpoint and re-partition to ``new_m`` shards."""
+    d = os.path.join(directory, f"sharded_{step:010d}")
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    old_plan = _plan_from_json(meta["plan"])
+    shards = [np.load(os.path.join(d, f"shard_{j:05d}.npy"))
+              for j in range(old_plan.n_shards)]
+    flat = reconstruct(shards, old_plan)
+    new_plan = make_plan(strategy, old_plan.total, new_m, tensor_sizes)
+    return shard(flat, new_plan), new_plan, meta

@@ -1,0 +1,44 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+All 10 assigned architectures plus the paper's own GPT-2 Large workload.
+"""
+from __future__ import annotations
+
+from repro.config import ArchSpec
+
+from repro.configs.whisper_tiny import SPEC as _whisper
+from repro.configs.phi35_moe import SPEC as _phi35
+from repro.configs.dbrx import SPEC as _dbrx
+from repro.configs.qwen25_14b import SPEC as _qwen25
+from repro.configs.h2o_danube import SPEC as _danube
+from repro.configs.tinyllama import SPEC as _tinyllama
+from repro.configs.qwen3_32b import SPEC as _qwen3
+from repro.configs.falcon_mamba import SPEC as _falcon_mamba
+from repro.configs.chameleon import SPEC as _chameleon
+from repro.configs.zamba2 import SPEC as _zamba2
+from repro.configs.paper_workloads import (
+    GPT2_LARGE_SPEC as _gpt2_large,
+    PAPER_WORKLOADS,
+)
+
+ASSIGNED: tuple[ArchSpec, ...] = (
+    _whisper, _phi35, _dbrx, _qwen25, _danube,
+    _tinyllama, _qwen3, _falcon_mamba, _chameleon, _zamba2,
+)
+
+REGISTRY: dict[str, ArchSpec] = {s.arch_id: s for s in ASSIGNED}
+REGISTRY[_gpt2_large.arch_id] = _gpt2_large
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in REGISTRY:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {sorted(REGISTRY)}")
+    return REGISTRY[arch_id]
+
+
+def arch_ids(assigned_only: bool = True) -> list[str]:
+    return [s.arch_id for s in ASSIGNED] if assigned_only else sorted(REGISTRY)
+
+
+__all__ = ["ASSIGNED", "REGISTRY", "PAPER_WORKLOADS", "get_arch", "arch_ids"]

@@ -1,0 +1,3 @@
+from repro.core import aggregation, cost_model, device_agg, fedavg, sharding
+
+__all__ = ["aggregation", "cost_model", "device_agg", "fedavg", "sharding"]

@@ -1,0 +1,258 @@
+"""Analytical cost model for serverless FL aggregation (paper §III, Table II).
+
+Encodes, for each architecture (λ-FL, LIFL, GradsSharding):
+  * per-round S3 operation counts (PUTs / GETs, split by phase),
+  * per-aggregator memory (streaming bound, collect-then-average bound, and
+    the empirical Lambda deployment formula 3·input + 450 MB),
+  * feasibility against Lambda's 10,240 MB ceiling,
+  * modeled wall-clock (S3-transfer-dominated; 45–68 MB/s per stream) and
+    dollar cost (Lambda GB-s + S3 ops), matching the paper's measurements.
+
+All formulas are pure functions of (N, M, |θ|) so they are property-testable.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from repro.config import LambdaLimits
+
+MB = 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# Topology descriptions
+# ---------------------------------------------------------------------------
+
+def lambda_fl_branching(n_clients: int) -> int:
+    """k = max(2, ceil(sqrt(N))) clients per leaf."""
+    return max(2, math.ceil(math.sqrt(n_clients)))
+
+
+def lifl_levels(n_clients: int) -> tuple[int, int]:
+    """(L1, L2) aggregator counts for the 3-level tree, branching ceil(N^{1/3})."""
+    b = max(2, math.ceil(round(n_clients ** (1 / 3), 9)))
+    l1 = math.ceil(n_clients / b)
+    l2 = math.ceil(l1 / b)
+    return l1, l2
+
+
+@dataclass(frozen=True)
+class S3Ops:
+    puts: int
+    gets_agg: int
+    gets_clients: int
+
+    @property
+    def gets(self) -> int:
+        return self.gets_agg + self.gets_clients
+
+    @property
+    def total(self) -> int:
+        return self.puts + self.gets
+
+
+def s3_ops(topology: str, n: int, m: int = 1) -> S3Ops:
+    """Per-round S3 operations (paper Table II)."""
+    if topology == "gradssharding":
+        return S3Ops(puts=n * m + m, gets_agg=n * m, gets_clients=n * m)
+    if topology == "lambda_fl":
+        k = lambda_fl_branching(n)
+        leaves = math.ceil(n / k)
+        return S3Ops(puts=n + leaves + 1, gets_agg=n + leaves, gets_clients=n)
+    if topology == "lifl":
+        l1, l2 = lifl_levels(n)
+        return S3Ops(puts=n + l1 + l2 + 1, gets_agg=n + l1 + l2,
+                     gets_clients=n)
+    raise ValueError(f"unknown topology {topology!r}")
+
+
+def n_aggregators(topology: str, n: int, m: int = 1) -> int:
+    if topology == "gradssharding":
+        return m
+    if topology == "lambda_fl":
+        return math.ceil(n / lambda_fl_branching(n)) + 1
+    if topology == "lifl":
+        l1, l2 = lifl_levels(n)
+        return l1 + l2 + 1
+    raise ValueError(topology)
+
+
+def n_phases(topology: str) -> int:
+    """Sequential aggregation phases (dependency depth)."""
+    return {"gradssharding": 1, "lambda_fl": 2, "lifl": 3}[topology]
+
+
+# ---------------------------------------------------------------------------
+# Memory
+# ---------------------------------------------------------------------------
+
+def input_bytes(topology: str, grad_bytes: int, m: int = 1) -> int:
+    """Bytes of a single incoming object at an aggregator."""
+    if topology == "gradssharding":
+        return math.ceil(grad_bytes / m)
+    return grad_bytes
+
+
+def streaming_memory_bytes(topology: str, grad_bytes: int, m: int = 1) -> int:
+    """Two buffers: running sum + incoming contribution."""
+    return 2 * input_bytes(topology, grad_bytes, m)
+
+
+def collect_memory_bytes(topology: str, grad_bytes: int, n: int,
+                         m: int = 1) -> int:
+    """Collect-then-average: all N contributions + the result (RQ2 Part A)."""
+    k = input_bytes(topology, grad_bytes, m)
+    if topology == "gradssharding":
+        return (n + 1) * k
+    if topology == "lambda_fl":
+        kk = lambda_fl_branching(n)
+        return (kk + 1) * k
+    l1, _ = lifl_levels(n)
+    b = math.ceil(n / l1)
+    return (b + 1) * k
+
+
+def lambda_memory_mb(topology: str, grad_bytes: int, m: int = 1,
+                     limits: LambdaLimits = LambdaLimits()) -> float:
+    """Empirical deployment formula: 3 × input_size + 450 MB (paper RQ3)."""
+    return (limits.mem_multiplier * input_bytes(topology, grad_bytes, m) / MB
+            + limits.runtime_overhead_mb)
+
+
+def allocatable_memory_mb(required_mb: float,
+                          limits: LambdaLimits = LambdaLimits()) -> float:
+    """Round the requirement up to an allocatable Lambda size (1 MB steps,
+    clamped to [min, max])."""
+    return float(min(limits.max_memory_mb,
+                     max(limits.min_memory_mb, math.ceil(required_mb))))
+
+
+def feasible(topology: str, grad_bytes: int, m: int = 1,
+             limits: LambdaLimits = LambdaLimits()) -> bool:
+    return lambda_memory_mb(topology, grad_bytes, m, limits) \
+        <= limits.max_memory_mb
+
+
+def max_feasible_grad_mb(limits: LambdaLimits = LambdaLimits()) -> float:
+    """The paper's ~3,263 MB wall for full-gradient architectures."""
+    return (limits.max_memory_mb - limits.runtime_overhead_mb) \
+        / limits.mem_multiplier
+
+
+def min_shards_for(grad_bytes: int,
+                   limits: LambdaLimits = LambdaLimits()) -> int:
+    """Smallest M that makes GradsSharding feasible (paper: always exists)."""
+    m = 1
+    while not feasible("gradssharding", grad_bytes, m, limits):
+        m *= 2
+        if m > 2 ** 20:
+            raise RuntimeError("unreachable: sharding always fits eventually")
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Time + dollar cost
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PhaseTiming:
+    read_s: float
+    compute_s: float
+    write_s: float
+
+    @property
+    def total_s(self) -> float:
+        return self.read_s + self.compute_s + self.write_s
+
+
+# Effective aggregation arithmetic throughput on a Lambda vCPU, calibrated to
+# the paper's RQ2-B: 1.96 s to accumulate 20 x 512.3 MB => ~5.2 GB/s.
+AGG_COMPUTE_BPS = 5.2e9
+
+
+def aggregator_timing(in_bytes: int, n_contrib: int, out_bytes: int,
+                      limits: LambdaLimits = LambdaLimits()) -> PhaseTiming:
+    read = n_contrib * (in_bytes / (limits.s3_read_mbps * 1e6)
+                        + limits.s3_get_latency_s)
+    compute = n_contrib * in_bytes / AGG_COMPUTE_BPS
+    write = out_bytes / (limits.s3_write_mbps * 1e6)
+    return PhaseTiming(read, compute, write)
+
+
+@dataclass(frozen=True)
+class RoundCost:
+    topology: str
+    n: int
+    m: int
+    grad_bytes: int
+    wall_clock_s: float
+    lambda_gb_s: float
+    lambda_cost: float
+    s3_cost: float
+    ops: S3Ops
+    memory_mb: float
+    n_invocations: int
+    feasible: bool
+    phase_timings: tuple = field(default_factory=tuple)
+
+    @property
+    def total_cost(self) -> float:
+        return self.lambda_cost + self.s3_cost
+
+    @property
+    def cost_per_1k(self) -> float:
+        return 1000.0 * self.total_cost
+
+
+def round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
+               limits: LambdaLimits = LambdaLimits(),
+               concurrent: bool = True,
+               memory_mb_override: float | None = None) -> RoundCost:
+    """Full round-trip model: client uploads -> aggregation -> read-back.
+
+    ``memory_mb_override`` reproduces deployments that fix the allocation
+    (the paper's RQ2-B sweep uses 3,008 MB at every M, which is what shapes
+    its cost hump at M=4)."""
+    ops = s3_ops(topology, n, m)
+    mem_mb = memory_mb_override if memory_mb_override is not None else \
+        allocatable_memory_mb(
+            lambda_memory_mb(topology, grad_bytes, m, limits), limits)
+    ok = feasible(topology, grad_bytes, m, limits)
+
+    timings: list[PhaseTiming] = []
+    if topology == "gradssharding":
+        shard_b = input_bytes(topology, grad_bytes, m)
+        t = aggregator_timing(shard_b, n, shard_b, limits)
+        timings = [t] * m
+        wall = t.total_s if concurrent else t.total_s * m
+        gb_s = m * mem_mb / 1024.0 * t.total_s
+        n_inv = m
+    elif topology == "lambda_fl":
+        k = lambda_fl_branching(n)
+        leaves = math.ceil(n / k)
+        t_leaf = aggregator_timing(grad_bytes, k, grad_bytes, limits)
+        t_root = aggregator_timing(grad_bytes, leaves, grad_bytes, limits)
+        timings = [t_leaf] * leaves + [t_root]
+        wall = t_leaf.total_s + t_root.total_s          # 2 sequential phases
+        gb_s = mem_mb / 1024.0 * (leaves * t_leaf.total_s + t_root.total_s)
+        n_inv = leaves + 1
+    elif topology == "lifl":
+        l1, l2 = lifl_levels(n)
+        b1 = math.ceil(n / l1)
+        b2 = math.ceil(l1 / l2)
+        t1 = aggregator_timing(grad_bytes, b1, grad_bytes, limits)
+        t2 = aggregator_timing(grad_bytes, b2, grad_bytes, limits)
+        t3 = aggregator_timing(grad_bytes, l2, grad_bytes, limits)
+        timings = [t1] * l1 + [t2] * l2 + [t3]
+        wall = t1.total_s + t2.total_s + t3.total_s     # 3 sequential phases
+        gb_s = mem_mb / 1024.0 * (l1 * t1.total_s + l2 * t2.total_s
+                                  + t3.total_s)
+        n_inv = l1 + l2 + 1
+    else:
+        raise ValueError(topology)
+
+    lam_cost = gb_s * limits.gb_s_price
+    s3_cost = ops.puts * limits.s3_put_price + ops.gets * limits.s3_get_price
+    return RoundCost(topology, n, m, grad_bytes, wall, gb_s, lam_cost,
+                     s3_cost, ops, mem_mb, n_inv, ok, tuple(timings))

@@ -1,0 +1,133 @@
+"""Device-parallel aggregation: the paper's topologies as TPU collectives.
+
+The serverless architectures map onto mesh collectives (DESIGN.md §3):
+
+  * full-gradient (λ-FL/LIFL leaf semantics)  -> ``all_reduce_mean``:
+    every replica ends with the full averaged gradient, O(|θ|) memory each.
+  * GradsSharding                             -> ``reduce_scatter_mean``:
+    replica j ends with averaged shard j only, O(|θ|/M) memory each —
+    bit-identical semantics to sharding + per-shard averaging.
+  * shard reconstruct (Step 4)                -> ``all_gather_shards``.
+  * λ-FL's two-level tree                     -> ``hierarchical_all_reduce``:
+    reduce inside the pod (fast ICI ≈ leaf aggregators), then across pods
+    (slow DCI ≈ root) — same math, fewer cross-pod bytes.
+
+All functions run inside ``shard_map`` with per-device views; M = product of
+the replica axis sizes. Used by the ZeRO trainer (`launch/train.py`) and
+verified against the serverless path on 8 fake CPU devices.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# In-shard_map collective primitives (operate on per-device views)
+# ---------------------------------------------------------------------------
+
+def pmean(tree: Pytree, axes) -> Pytree:
+    return jax.tree.map(lambda g: lax.pmean(g, axes), tree)
+
+
+def psum_scatter_mean(flat: jax.Array, axis: str) -> jax.Array:
+    """Per-device flat gradient -> this device's averaged shard.
+
+    flat must be divisible by the axis size; callers pad via
+    ``pad_to_multiple``.
+    """
+    size = lax.psum(1, axis)
+    return lax.psum_scatter(flat, axis, scatter_dimension=0,
+                            tiled=True) / size
+
+
+def all_gather_flat(shard: jax.Array, axis: str) -> jax.Array:
+    return lax.all_gather(shard, axis, axis=0, tiled=True)
+
+
+def hierarchical_mean(tree: Pytree, inner_axis: str,
+                      outer_axis: str) -> Pytree:
+    """Two-stage mean: inner (ICI/pod-local ≈ λ-FL leaves) then outer
+    (DCI/cross-pod ≈ root). Algebraically the joint mean for equal group
+    sizes."""
+    t = jax.tree.map(lambda g: lax.pmean(g, inner_axis), tree)
+    return jax.tree.map(lambda g: lax.pmean(g, outer_axis), t)
+
+
+# ---------------------------------------------------------------------------
+# Padding helpers
+# ---------------------------------------------------------------------------
+
+def pad_to_multiple(flat: jax.Array, m: int) -> tuple[jax.Array, int]:
+    pad = (-flat.shape[0]) % m
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, pad
+
+
+# ---------------------------------------------------------------------------
+# jit-level wrappers over a mesh (gradient pytrees)
+# ---------------------------------------------------------------------------
+
+def _replica_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def all_reduce_mean(mesh: Mesh, grads: Pytree,
+                    hierarchical: bool = False) -> Pytree:
+    """Full-gradient aggregation over the replica axes (λ-FL analogue)."""
+    axes = _replica_axes(mesh)
+    spec = P()  # replicated within replica axes (per-device full grad)
+
+    @partial(shard_map, mesh=mesh, in_specs=spec, out_specs=spec,
+             check_vma=False)
+    def agg(g):
+        if hierarchical and len(axes) > 1:
+            return hierarchical_mean(g, axes[-1], axes[0])
+        return pmean(g, axes)
+
+    return agg(grads)
+
+
+def reduce_scatter_mean_flat(mesh: Mesh, flat: jax.Array) -> jax.Array:
+    """GradsSharding: flat (padded) gradient -> per-device averaged shard.
+
+    Input is replicated over replica axes; output is sharded over them
+    (device d owns shard d)."""
+    axes = _replica_axes(mesh)
+
+    @partial(shard_map, mesh=mesh, in_specs=P(), out_specs=P(axes),
+             check_vma=False)
+    def agg(g):
+        out = g
+        for ax in axes:
+            out = psum_scatter_mean(out, ax) * lax.psum(1, ax)
+        m = 1
+        for ax in axes:
+            m *= lax.psum(1, ax)
+        return out / m
+
+    return agg(flat)
+
+
+def all_gather_shards(mesh: Mesh, shards: jax.Array) -> jax.Array:
+    """Step 4: reconstruct the full flat vector from per-device shards."""
+    axes = _replica_axes(mesh)
+
+    @partial(shard_map, mesh=mesh, in_specs=P(axes), out_specs=P(),
+             check_vma=False)
+    def gather(s):
+        out = s
+        for ax in reversed(axes):
+            out = all_gather_flat(out, ax)
+        return out
+
+    return gather(shards)

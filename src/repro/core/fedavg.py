@@ -1,0 +1,83 @@
+"""FedAvg protocol primitives.
+
+``streaming_mean`` is the paper's aggregator inner loop: one contribution at
+a time, two buffers (running accumulator + incoming), O(shard) memory. The
+same function body runs inside the serverless Lambda simulation, the HPC
+bench, and (re-tiled) the Pallas ``fedavg_stream`` kernel — all three match
+bit-for-bit in fp32 because the per-element accumulation order is identical.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Iterator, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def streaming_mean(chunks: Iterable, weights: Sequence[float] | None = None):
+    """Element-wise (weighted) mean, accumulated one contribution at a time.
+
+    Deterministic accumulation order = iteration order. Sum first, divide
+    once at the end (matches the paper's implementation: running *sum* then
+    scalar division).
+    """
+    acc = None
+    total_w = 0.0
+    n = 0
+    for i, c in enumerate(chunks):
+        w = 1.0 if weights is None else float(weights[i])
+        contrib = c * w if weights is not None else c
+        acc = contrib if acc is None else acc + contrib
+        total_w += w
+        n += 1
+    if acc is None:
+        raise ValueError("streaming_mean of empty iterator")
+    denom = total_w if weights is not None else float(n)
+    return acc / denom
+
+
+def fedavg_pytrees(updates: Sequence, weights: Sequence[float] | None = None):
+    """Average a list of pytrees leaf-wise (reference full-gradient path)."""
+    return jax.tree.map(
+        lambda *leaves: streaming_mean(leaves, weights), *updates)
+
+
+def weighted_merge(partials: Sequence, counts: Sequence[float]):
+    """Combine partial means with their contribution counts (tree topologies:
+    a root averaging leaf outputs must weight by leaf group size)."""
+    total = float(sum(counts))
+    acc = None
+    for p, c in zip(partials, counts):
+        contrib = p * (c / total)
+        acc = contrib if acc is None else acc + contrib
+    return acc
+
+
+def local_sgd_update(loss_fn: Callable, params, batch, lr: float,
+                     momentum: float = 0.0, velocity=None):
+    """One client-side SGD(+momentum) step; returns (params, velocity, loss).
+
+    Used by the federated examples for the client training phase.
+    """
+    (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+    if momentum:
+        if velocity is None:
+            velocity = jax.tree.map(jnp.zeros_like, grads)
+        velocity = jax.tree.map(lambda v, g: momentum * v + g, velocity, grads)
+        step = velocity
+    else:
+        step = grads
+    params = jax.tree.map(lambda p, s: p - lr * s, params, step)
+    return params, velocity, loss
+
+
+def model_delta(old_params, new_params):
+    """Gradient-like update transmitted by a client: old - new (so that
+    applying ``p - lr_server * delta`` with lr_server=1 reproduces new)."""
+    return jax.tree.map(lambda o, n: o - n, old_params, new_params)
+
+
+def apply_delta(params, delta, scale: float = 1.0):
+    return jax.tree.map(lambda p, d: p - scale * d, params, delta)

@@ -1,0 +1,200 @@
+"""Gradient tensor partitioning — the paper's core mechanism (Step 1/4).
+
+A client's gradient pytree is flattened to one contiguous vector
+``g_i ∈ R^{|θ|}`` and split into M shards ``g_i = [g_i^(1), …, g_i^(M)]``.
+Because FedAvg is element-wise, per-shard averaging + concatenation is
+algebraically identical to full-vector averaging (bit-identical when the
+per-element accumulation order matches — tested).
+
+Strategies:
+  * ``uniform``          — the paper's: contiguous, equal element ranges,
+                            ignoring tensor boundaries.
+  * ``layer_contiguous`` — contiguous but aligned to tensor boundaries
+                            (shards are whole tensors; can be imbalanced for
+                            heterogeneous layers — the paper's noted MoE
+                            weakness).
+  * ``balanced``         — the paper's future work: greedy bin-packing of
+                            whole tensors into M bins, minimizing the max
+                            shard (non-contiguous index sets).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Flatten / unflatten
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FlatSpec:
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[Any, ...]
+    sizes: tuple[int, ...]
+
+    @property
+    def total(self) -> int:
+        return int(sum(self.sizes))
+
+
+def flatten(tree: Pytree, dtype=jnp.float32) -> tuple[jax.Array, FlatSpec]:
+    leaves, treedef = jax.tree.flatten(tree)
+    spec = FlatSpec(
+        treedef=treedef,
+        shapes=tuple(tuple(l.shape) for l in leaves),
+        dtypes=tuple(l.dtype for l in leaves),
+        sizes=tuple(int(np.prod(l.shape)) if l.shape else 1 for l in leaves),
+    )
+    flat = jnp.concatenate([jnp.ravel(l).astype(dtype) for l in leaves]) \
+        if leaves else jnp.zeros((0,), dtype)
+    return flat, spec
+
+
+def unflatten(flat: jax.Array, spec: FlatSpec) -> Pytree:
+    leaves = []
+    off = 0
+    for shape, dt, size in zip(spec.shapes, spec.dtypes, spec.sizes):
+        leaves.append(flat[off:off + size].reshape(shape).astype(dt))
+        off += size
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Partition plans
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PartitionPlan:
+    """Assignment of flat-index ranges to M shards.
+
+    ``segments[j]`` is a tuple of (start, stop) ranges owned by shard j —
+    a single range for contiguous strategies, possibly several for
+    ``balanced``. Ranges are disjoint and cover [0, total).
+    """
+
+    total: int
+    segments: tuple[tuple[tuple[int, int], ...], ...]
+    strategy: str
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.segments)
+
+    def shard_sizes(self) -> list[int]:
+        return [sum(b - a for a, b in segs) for segs in self.segments]
+
+    def max_shard(self) -> int:
+        return max(self.shard_sizes())
+
+    def imbalance(self) -> float:
+        sizes = self.shard_sizes()
+        mean = sum(sizes) / len(sizes)
+        return max(sizes) / mean if mean else 1.0
+
+
+def plan_uniform(total: int, m: int) -> PartitionPlan:
+    """The paper's contiguous equal split (last shard takes the remainder)."""
+    if m < 1:
+        raise ValueError("M must be >= 1")
+    base = total // m
+    rem = total % m
+    segs = []
+    off = 0
+    for j in range(m):
+        size = base + (1 if j < rem else 0)
+        segs.append(((off, off + size),))
+        off += size
+    return PartitionPlan(total, tuple(segs), "uniform")
+
+
+def plan_layer_contiguous(sizes: Sequence[int], m: int) -> PartitionPlan:
+    """Contiguous, tensor-aligned: cut at tensor boundaries nearest to the
+    uniform cut points. Imbalanced when single tensors dominate."""
+    total = int(sum(sizes))
+    bounds = np.cumsum([0] + list(sizes))
+    targets = [total * j // m for j in range(1, m)]
+    cuts = [0]
+    for t in targets:
+        i = int(np.argmin(np.abs(bounds - t)))
+        cuts.append(int(bounds[i]))
+    cuts.append(total)
+    cuts = sorted(set(cuts))
+    while len(cuts) < m + 1:          # degenerate (few tensors): pad empty
+        cuts.append(total)
+    segs = tuple((((cuts[j], cuts[j + 1]),)) for j in range(m))
+    return PartitionPlan(total, segs, "layer_contiguous")
+
+
+def plan_balanced(sizes: Sequence[int], m: int) -> PartitionPlan:
+    """Greedy LPT bin-packing of whole tensors into M shards (future work in
+    the paper; evens out MoE/embedding heterogeneity)."""
+    total = int(sum(sizes))
+    offsets = np.cumsum([0] + list(sizes))
+    order = np.argsort(-np.asarray(sizes, dtype=np.int64), kind="stable")
+    loads = [0] * m
+    bins: list[list[int]] = [[] for _ in range(m)]
+    for t in order:
+        j = int(np.argmin(loads))
+        bins[j].append(int(t))
+        loads[j] += int(sizes[t])
+    segs = tuple(
+        tuple(sorted((int(offsets[t]), int(offsets[t + 1])) for t in bin_))
+        for bin_ in bins)
+    return PartitionPlan(total, segs, "balanced")
+
+
+def make_plan(strategy: str, total: int, m: int,
+              sizes: Sequence[int] | None = None) -> PartitionPlan:
+    if strategy == "uniform":
+        return plan_uniform(total, m)
+    if sizes is None:
+        raise ValueError(f"{strategy} partitioning needs per-tensor sizes")
+    if strategy == "layer_contiguous":
+        return plan_layer_contiguous(sizes, m)
+    if strategy == "balanced":
+        return plan_balanced(sizes, m)
+    raise ValueError(f"unknown partition strategy {strategy!r}")
+
+
+# ---------------------------------------------------------------------------
+# Shard / reconstruct (Step 1 and Step 4)
+# ---------------------------------------------------------------------------
+
+def shard(flat, plan: PartitionPlan) -> list:
+    """Split a flat gradient into per-shard arrays (concatenated segments).
+
+    Shards with no segments (balanced packing when M > #tensors) come back
+    as empty arrays — an aggregator for an empty shard is a no-op."""
+    xp = jnp if isinstance(flat, jax.Array) else np
+    out = []
+    for segs in plan.segments:
+        parts = [flat[a:b] for a, b in segs]
+        if not parts:
+            out.append(xp.zeros((0,), flat.dtype))
+        else:
+            out.append(parts[0] if len(parts) == 1 else xp.concatenate(parts))
+    return out
+
+
+def reconstruct(shards: Sequence, plan: PartitionPlan):
+    """Concatenate averaged shards back to the full flat gradient."""
+    xp = jnp if isinstance(shards[0], jax.Array) else np
+    out = xp.zeros((plan.total,), shards[0].dtype)
+    for segs, sh in zip(plan.segments, shards):
+        off = 0
+        for a, b in segs:
+            if isinstance(out, jax.Array):
+                out = out.at[a:b].set(sh[off:off + (b - a)])
+            else:
+                out[a:b] = sh[off:off + (b - a)]
+            off += b - a
+    return out

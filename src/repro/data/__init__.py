@@ -1,0 +1,9 @@
+from repro.data.partition import dirichlet_partition, iid_partition
+from repro.data.synthetic import (
+    SyntheticLM,
+    SyntheticVision,
+    lm_batch_specs,
+)
+
+__all__ = ["SyntheticLM", "SyntheticVision", "dirichlet_partition",
+           "iid_partition", "lm_batch_specs"]

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: streaming (weighted) FedAvg shard accumulation.
+
+The paper's aggregation inner loop — "read one client's shard at a time,
+maintain a running sum, divide once" — re-tiled for the TPU memory
+hierarchy: the shard lives in HBM as an (N, R, 128) stack of client
+contributions; the grid walks (shard-row-block, client) with the client
+dimension iterating fastest, so each (BR, 128) f32 accumulator block stays
+resident in VMEM across all N contributions (the revisiting-output
+accumulation pattern). Memory per core = one accumulator block + one
+incoming block — exactly the paper's two-buffer O(|θ|/M) bound, shrunk from
+Lambda-RAM scale to VMEM-tile scale.
+
+Accumulation order is client-by-client per element, matching the serverless
+streaming implementation's order exactly (the final division may differ by
+≤1 ulp where XLA strength-reduces divide to reciprocal-multiply).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+DEFAULT_BLOCK_ROWS = 32
+
+
+def _fedavg_kernel(x_ref, w_ref, o_ref, *, n_clients: int):
+    """Grid: (row_blocks, N); client index iterates fastest."""
+    n = pl.program_id(1)
+    contrib = x_ref[0].astype(jnp.float32) * w_ref[0]
+
+    @pl.when(n == 0)
+    def _init():
+        o_ref[...] = contrib
+
+    @pl.when(n > 0)
+    def _accum():
+        o_ref[...] += contrib
+
+
+def _finalize_kernel(acc_ref, tw_ref, o_ref):
+    o_ref[...] = acc_ref[...] / tw_ref[0]
+
+
+def fedavg_stream(stacked: jax.Array, weights: jax.Array | None = None, *,
+                  block_rows: int = DEFAULT_BLOCK_ROWS,
+                  interpret: bool = False) -> jax.Array:
+    """stacked: (N, R, 128) client shards -> (R, 128) f32 weighted mean.
+
+    R must be a multiple of ``block_rows`` (ops.py pads). ``weights`` is
+    (N,) f32; None = uniform (divide by N).
+    """
+    n, r, lanes = stacked.shape
+    assert lanes == LANES, f"last dim must be {LANES}, got {lanes}"
+    assert r % block_rows == 0, (r, block_rows)
+    if weights is None:
+        weights = jnp.ones((n,), jnp.float32)
+    total = jnp.sum(weights)
+
+    grid = (r // block_rows, n)
+    acc = pl.pallas_call(
+        functools.partial(_fedavg_kernel, n_clients=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_rows, LANES), lambda i, j: (j, i, 0)),
+            pl.BlockSpec((1,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, LANES), jnp.float32),
+        interpret=interpret,
+    )(stacked, weights)
+
+    # Separate tiny finalize pass keeps the accumulate kernel write-only on
+    # its output blocks (no read-modify-write of the division).
+    return pl.pallas_call(
+        _finalize_kernel,
+        grid=(r // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, LANES), jnp.float32),
+        interpret=interpret,
+    )(acc, total[None])

@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: fused SGD-with-momentum shard update.
+
+The aggregator-side optimizer step of the paper's protocol (server applies
+the averaged gradient with lr/momentum) fused into one pass over the shard:
+v ← μ·v + g; p ← p − η·v. Three HBM reads + two writes per tile instead of
+the five reads/three writes of the unfused jnp sequence. Used by the ZeRO
+trainer on each device's |θ|/M shard.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _sgd_kernel(p_ref, g_ref, v_ref, po_ref, vo_ref, *, lr: float,
+                momentum: float):
+    g = g_ref[...].astype(jnp.float32)
+    v = momentum * v_ref[...] + g
+    vo_ref[...] = v
+    po_ref[...] = (p_ref[...].astype(jnp.float32)
+                   - lr * v).astype(po_ref.dtype)
+
+
+def fused_sgd(params: jax.Array, grads: jax.Array, velocity: jax.Array, *,
+              lr: float, momentum: float = 0.9, block_rows: int = 32,
+              interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """params/grads: (R, 128); velocity: (R, 128) f32. Returns (p', v')."""
+    r, lanes = params.shape
+    assert lanes == LANES and r % block_rows == 0
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_sgd_kernel, lr=lr, momentum=momentum),
+        grid=(r // block_rows,),
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, LANES), params.dtype),
+            jax.ShapeDtypeStruct((r, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(params, grads, velocity)

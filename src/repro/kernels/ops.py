@@ -1,0 +1,151 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Handle flat-vector ⇄ (rows, 128) tiling, padding to block multiples, and
+interpret-mode selection (interpret=True on CPU hosts — the kernel bodies
+execute in Python for validation; on TPU they lower to Mosaic).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fedavg_stream as _fa
+from repro.kernels import fused_sgd as _sgd
+from repro.kernels import quantize as _q
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import topk_sparsify as _tk
+
+LANES = 128
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_tiles(flat: jax.Array, block_rows: int) -> tuple[jax.Array, int]:
+    """flat (L,) -> (R, 128) padded; returns (tiles, original length)."""
+    l = flat.shape[-1]
+    tile = block_rows * LANES
+    pad = (-l) % tile
+    if pad:
+        flat = jnp.pad(flat, [(0, 0)] * (flat.ndim - 1) + [(0, pad)])
+    r = flat.shape[-1] // LANES
+    return flat.reshape(flat.shape[:-1] + (r, LANES)), l
+
+
+def _from_tiles(tiles: jax.Array, l: int) -> jax.Array:
+    return tiles.reshape(tiles.shape[:-2] + (-1,))[..., :l]
+
+
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _fedavg_flat(stacked_flat, weights, block_rows, interpret):
+    tiles, l = _to_tiles(stacked_flat, block_rows)
+    out = _fa.fedavg_stream(tiles, weights, block_rows=block_rows,
+                            interpret=interpret)
+    return _from_tiles(out, l)
+
+
+def fedavg_shards(client_shards: jax.Array,
+                  weights: jax.Array | None = None,
+                  block_rows: int = 32,
+                  interpret: bool | None = None) -> jax.Array:
+    """client_shards: (N, L) flat shards -> (L,) f32 weighted mean."""
+    if interpret is None:
+        interpret = _use_interpret()
+    return _fedavg_flat(client_shards, weights, block_rows, interpret)
+
+
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _quant_flat(flat, block_rows, interpret):
+    tiles, _ = _to_tiles(flat, block_rows)
+    codes, scales = _q.quantize(tiles, block_rows=block_rows,
+                                interpret=interpret)
+    return codes, scales
+
+
+def qsgd_compress(flat: jax.Array, block_rows: int = 32,
+                  interpret: bool | None = None):
+    """(L,) f32 -> (codes (R,128) int8, scales, L). ~4x smaller on the wire."""
+    if interpret is None:
+        interpret = _use_interpret()
+    codes, scales = _quant_flat(flat, block_rows, interpret)
+    return codes, scales, int(flat.shape[-1])
+
+
+@partial(jax.jit, static_argnames=("l", "block_rows", "interpret"))
+def _dequant_flat(codes, scales, l, block_rows, interpret):
+    out = _q.dequantize(codes, scales, block_rows=block_rows,
+                        interpret=interpret)
+    return _from_tiles(out, l)
+
+
+def qsgd_decompress(codes: jax.Array, scales: jax.Array, l: int,
+                    block_rows: int = 32,
+                    interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = _use_interpret()
+    return _dequant_flat(codes, scales, l, block_rows, interpret)
+
+
+@partial(jax.jit, static_argnames=("k_per_block", "block_rows", "interpret"))
+def _topk_flat(flat, k_per_block, block_rows, interpret):
+    tiles, l = _to_tiles(flat, block_rows)
+    out = _tk.topk_sparsify(tiles, k_per_block, block_rows=block_rows,
+                            interpret=interpret)
+    return _from_tiles(out, l)
+
+
+def topk_sparsify(flat: jax.Array, k_per_block: int, block_rows: int = 32,
+                  interpret: bool | None = None) -> jax.Array:
+    """Zero all but ~k_per_block largest-magnitude entries per tile."""
+    if interpret is None:
+        interpret = _use_interpret()
+    return _topk_flat(flat, k_per_block, block_rows, interpret)
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def _rmsnorm(x2d, gamma, eps, block_rows, interpret):
+    rows = x2d.shape[0]
+    pad = (-rows) % block_rows
+    if pad:
+        x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
+    out = _rn.rmsnorm(x2d, gamma, eps=eps, block_rows=block_rows,
+                      interpret=interpret)
+    return out[:rows]
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5,
+            block_rows: int = 8, interpret: bool | None = None) -> jax.Array:
+    """x: (..., d) -> fused rmsnorm * gamma."""
+    if interpret is None:
+        interpret = _use_interpret()
+    shape = x.shape
+    out = _rmsnorm(x.reshape(-1, shape[-1]), gamma, eps, block_rows,
+                   interpret)
+    return out.reshape(shape)
+
+
+@partial(jax.jit, static_argnames=("lr", "momentum", "block_rows",
+                                   "interpret"), donate_argnums=(0, 2))
+def _sgd_flat(p, g, v, lr, momentum, block_rows, interpret):
+    pt, l = _to_tiles(p, block_rows)
+    gt, _ = _to_tiles(g, block_rows)
+    vt, _ = _to_tiles(v, block_rows)
+    po, vo = _sgd.fused_sgd(pt, gt, vt, lr=lr, momentum=momentum,
+                            block_rows=block_rows, interpret=interpret)
+    return _from_tiles(po, l), _from_tiles(vo, l)
+
+
+def sgd_momentum_update(params: jax.Array, grads: jax.Array,
+                        velocity: jax.Array, lr: float,
+                        momentum: float = 0.9, block_rows: int = 32,
+                        interpret: bool | None = None):
+    """Fused v ← μv+g; p ← p−ηv on a flat shard. Donates (p, v)."""
+    if interpret is None:
+        interpret = _use_interpret()
+    return _sgd_flat(params, grads, velocity, lr, momentum, block_rows,
+                     interpret)

@@ -1,0 +1,3 @@
+# Launch layer: mesh construction, multi-pod dry-run, trainer, server.
+# NOTE: do not import dryrun here — it sets XLA_FLAGS at import time and
+# must only be imported as the program entry point.

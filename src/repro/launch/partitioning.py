@@ -1,0 +1,274 @@
+"""GSPMD partition specs for every model family, shape kind, and plan.
+
+Layout summary (DESIGN.md §5):
+  * TP ("model" axis): attention heads, FFN hidden, MoE expert-FFN hidden,
+    Mamba d_inner / SSD heads, vocab (embed rows / lm_head cols).
+  * DP ("pod","data" axes): batch; with zero1, also the optimizer state;
+    with zero3, also the parameters themselves (FSDP — all-gather on use).
+  * Decode caches: batch over data; KV-head over model when divisible, else
+    cache length over model (flash-decoding-style partial softmax, GSPMD
+    inserts the combine); batch=1 long-context shards length over
+    data×model.
+
+The paper's GradsSharding maps to the zero1/zero3 rows: gradients are
+reduce-scattered over the replica axes so each device owns an |θ|/M shard
+of the optimizer update — O(|θ|/M) memory, the paper's bound.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig, ShardingPlan
+
+Pytree = Any
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def replica_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def _leaf_name(path) -> str:
+    return str(getattr(path[-1], "key", getattr(path[-1], "idx", "")))
+
+
+def _param_rule(name: str, shape: tuple[int, ...], cfg: ModelConfig,
+                tp: int) -> tuple:
+    """Trailing-dims spec for a leaf (leading stacked-L dim padded later).
+
+    Every rule is divisibility-guarded: a dim that the `model` axis does not
+    divide falls back to the next-best layout (e.g. whisper's odd 51,865
+    vocab shards d_model instead) or replication."""
+    kh_ok = cfg.n_kv_heads and cfg.n_kv_heads % tp == 0
+    h_ok = cfg.n_heads and cfg.n_heads % tp == 0
+    d_ok = cfg.d_model % tp == 0
+    v_ok = cfg.vocab % tp == 0
+    f_ok = cfg.d_ff % tp == 0 if cfg.d_ff else False
+
+    if name == "embed":
+        if v_ok:
+            return ("model", None)
+        return (None, "model") if d_ok else (None, None)
+    if name == "lm_head":
+        if v_ok:
+            return (None, "model")
+        return ("model", None) if d_ok else (None, None)
+    if name == "frontend_proj":
+        return (None, None)
+    if name == "router":
+        return (None, None)
+    if name in ("wq",):
+        return (None, "model", None) if h_ok else (None, None, None)
+    if name in ("wk", "wv"):
+        return (None, "model", None) if kh_ok else (None, None, None)
+    if name == "bq":
+        return ("model", None) if h_ok else (None, None)
+    if name in ("bk", "bv"):
+        return ("model", None) if kh_ok else (None, None)
+    if name == "wo":
+        return ("model", None, None) if h_ok else (None, None, None)
+    if name in ("w1", "w3"):
+        if len(shape) >= 3 and cfg.moe is not None:      # (E, D, F)
+            return (None, None, "model") if f_ok else (None, None, None)
+        return (None, "model") if f_ok else (None, None)
+    if name == "w2":
+        if len(shape) >= 3 and cfg.moe is not None:      # (E, F, D)
+            return (None, "model", None) if f_ok else (None, None, None)
+        return ("model", None) if f_ok else (None, None)
+    # --- mamba (shard the d_inner / ssd-head axis when divisible) ---
+    di_ok = cfg.ssm is not None and (cfg.ssm.expand * cfg.d_model) % tp == 0
+    mh_ok = (cfg.ssm is not None and cfg.ssm.head_dim
+             and (cfg.ssm.expand * cfg.d_model // cfg.ssm.head_dim) % tp == 0)
+    if name in ("in_x", "in_z", "dt_proj"):
+        return (None, "model") if di_ok else (None, None)
+    if name == "in_dt":
+        return (None, "model") if mh_ok else (None, None)
+    if name in ("conv_w", "conv_xw"):
+        return (None, "model") if di_ok else (None, None)
+    if name in ("conv_b", "conv_xb", "norm_g"):
+        return ("model",) if di_ok else (None,)
+    if name in ("dt_bias", "d_skip"):
+        if cfg.ssm is not None and cfg.ssm.version == 2:
+            return ("model",) if mh_ok else (None,)
+        return ("model",) if di_ok else (None,)
+    if name == "a_log":
+        if len(shape) >= 2 and shape[-1] == (cfg.ssm.d_state if cfg.ssm
+                                             else 0):     # mamba1 (di, ds)
+            return ("model", None) if di_ok else (None, None)
+        return ("model",) if mh_ok else (None,)
+    if name == "x_proj":
+        return ("model", None) if di_ok else (None, None)
+    if name == "out_proj":
+        return ("model", None) if di_ok else (None, None)
+    # norms, small convs (in_b/in_c/conv_bw/...), biases: replicate
+    return tuple(None for _ in shape)
+
+
+_MAMBA_TP_NAMES = {"conv_b", "conv_xb", "dt_bias", "d_skip", "norm_g",
+                   "a_log"}
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh,
+                 plan: ShardingPlan) -> Pytree:
+    """PartitionSpec pytree matching param_specs(cfg)."""
+    from repro.models import param_specs as _specs
+    tp = _axis_size(mesh, "model")
+    fsdp_axes = replica_axes(mesh) if plan.grad_sharding == "zero3" else ()
+    fsdp = sum(_axis_size(mesh, a) for a in fsdp_axes) and fsdp_axes
+    fsdp_size = 1
+    for a in fsdp_axes:
+        fsdp_size *= _axis_size(mesh, a)
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        # mamba per-version dims differ; strip stacked leading L if present
+        full = tuple(leaf.shape)
+        trail_n = len(full)
+        base = _param_rule(name, full, cfg, tp)
+        # right-align base to leaf ndim (leading stacked dims -> None)
+        spec = [None] * (trail_n - len(base)) + list(base)
+        if fsdp:
+            # FSDP: shard the largest currently-unsharded dim over replica
+            # axes (divisibility required).
+            cand = sorted(range(trail_n), key=lambda i: -full[i])
+            for i in cand:
+                if spec[i] is None and full[i] % fsdp_size == 0 \
+                        and full[i] >= fsdp_size:
+                    spec[i] = fsdp_axes if len(fsdp_axes) > 1 \
+                        else fsdp_axes[0]
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, _specs(cfg))
+
+
+def opt_state_pspecs(cfg: ModelConfig, mesh: Mesh, plan: ShardingPlan,
+                     opt_state_like: Pytree, params_pspecs: Pytree) -> Pytree:
+    """Optimizer-state specs. zero1: state leaves (param-shaped) additionally
+    sharded over the replica axes — the GradsSharding/ZeRO-1 memory bound.
+    XLA then lowers the gradient aggregation as reduce-scatter + sharded
+    update + all-gather instead of a full all-reduce."""
+    rep = replica_axes(mesh)
+    rep_size = 1
+    for a in rep:
+        rep_size *= _axis_size(mesh, a)
+
+    flat_p, _ = jax.tree_util.tree_flatten(params_pspecs)
+    # map param-shaped state leaves to their param spec (+replica sharding)
+    def assign(path, leaf):
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return P()
+        # find matching param spec by shape order: state trees built with
+        # tree.map over params keep structure; use path tail name match.
+        base = _match_param_spec(path, leaf, cfg, mesh, plan)
+        spec = list(base) + [None] * (leaf.ndim - len(base))
+        if plan.grad_sharding in ("zero1", "zero3"):
+            for i in sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i]):
+                if spec[i] is None and leaf.shape[i] % rep_size == 0 \
+                        and leaf.shape[i] >= rep_size:
+                    spec[i] = rep if len(rep) > 1 else rep[0]
+                    break
+        return P(*spec)
+
+    def _match_param_spec(path, leaf, cfg=cfg, mesh=mesh, plan=plan):
+        name = _leaf_name(path)
+        tp = _axis_size(mesh, "model")
+        base = _param_rule(name, tuple(leaf.shape), cfg, tp)
+        return [None] * (leaf.ndim - len(base)) + list(base)
+
+    return jax.tree_util.tree_map_with_path(assign, opt_state_like)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Pytree:
+    rep = replica_axes(mesh)
+    rep_size = 1
+    for a in rep:
+        rep_size *= _axis_size(mesh, a)
+    b = shape.global_batch
+    bspec = rep if len(rep) > 1 else (rep[0] if rep else None)
+    if b % rep_size or b < rep_size:
+        bspec = None                         # batch=1 long-context: replicate
+    out = {"tokens": P(bspec, None)}
+    if shape.kind == "train":
+        out["labels"] = P(bspec, None)
+    if cfg.is_encdec or cfg.family in ("audio",):
+        if shape.kind in ("train", "prefill"):
+            out["frames"] = P(bspec, None, None)
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                 cache_like: Pytree) -> Pytree:
+    """Decode-cache partition specs (see module docstring)."""
+    tp = _axis_size(mesh, "model")
+    rep = replica_axes(mesh)
+    rep_size = 1
+    for a in rep:
+        rep_size *= _axis_size(mesh, a)
+    b = shape.global_batch
+    batch_ok = b % rep_size == 0 and b >= rep_size
+    bspec = (rep if len(rep) > 1 else rep[0]) if batch_ok else None
+    kh_ok = cfg.n_kv_heads and cfg.n_kv_heads % tp == 0
+
+    def assign(path, leaf):
+        name = _leaf_name(path)
+        nd = leaf.ndim
+        if name in ("k", "v", "xk", "xv"):
+            # (L, B, T, KH, hd)
+            length = leaf.shape[2]
+            t_ok = length % tp == 0
+            if kh_ok:
+                return P(None, bspec, None, "model", None)
+            if not batch_ok:
+                # batch=1 long-context: shard cache length over everything
+                axes_all = tuple(mesh.axis_names)
+                total = 1
+                for a in axes_all:
+                    total *= _axis_size(mesh, a)
+                if length % total == 0:
+                    return P(None, None, axes_all, None, None)
+                return P(None, None, "model" if t_ok else None, None, None)
+            return P(None, bspec, "model" if t_ok else None, None, None)
+        if name == "h":                       # mamba state
+            # (L,B,di,ds) v1 | (L,B,H,hd,ds) v2
+            third = "model" if leaf.shape[2] % tp == 0 else None
+            return P(*( [None, bspec, third] + [None] * (nd - 3) ))
+        if name.startswith("conv"):           # (L,B,K-1,C)
+            c = leaf.shape[-1]
+            last = "model" if c % tp == 0 else None
+            return P(*( [None, bspec] + [None] * (nd - 3) + [last] ))
+        if name == "idx":
+            return P()
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_like)
+
+
+def decode_token_pspec(shape: ShapeConfig, mesh: Mesh) -> P:
+    rep = replica_axes(mesh)
+    rep_size = 1
+    for a in rep:
+        rep_size *= _axis_size(mesh, a)
+    b = shape.global_batch
+    if b % rep_size == 0 and b >= rep_size:
+        return P(rep if len(rep) > 1 else rep[0], None)
+    return P(None, None)
+
+
+def to_named(mesh: Mesh, pspecs: Pytree) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

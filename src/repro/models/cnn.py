@@ -1,0 +1,101 @@
+"""Compact CNNs for the paper's federated-learning workloads.
+
+The paper evaluates aggregation with ResNet-18 / VGG-16 gradients. The FL
+substrate only needs the flat gradient pytree, so these are faithful-shape
+small CNNs (pure JAX, lax.conv) used by the end-to-end federated examples;
+the *gradient sizes* for cost-model benches come from
+``configs.paper_workloads`` (exact paper numbers).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+sds = jax.ShapeDtypeStruct
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    name: str = "resnet-mini"
+    n_classes: int = 10
+    channels: tuple = (16, 32, 64)      # per stage
+    blocks_per_stage: int = 2
+    in_channels: int = 3
+    img_size: int = 32
+
+
+def conv(x, w, stride=1):
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout)) / math.sqrt(fan_in)
+
+
+def param_specs(cfg: CNNConfig) -> dict:
+    p: dict = {"stem": sds((3, 3, cfg.in_channels, cfg.channels[0]),
+                           jnp.float32)}
+    cin = cfg.channels[0]
+    for si, c in enumerate(cfg.channels):
+        for bi in range(cfg.blocks_per_stage):
+            pre = f"s{si}b{bi}"
+            p[f"{pre}_c1"] = sds((3, 3, cin, c), jnp.float32)
+            p[f"{pre}_c2"] = sds((3, 3, c, c), jnp.float32)
+            if cin != c:
+                p[f"{pre}_proj"] = sds((1, 1, cin, c), jnp.float32)
+            cin = c
+    p["head_w"] = sds((cin, cfg.n_classes), jnp.float32)
+    p["head_b"] = sds((cfg.n_classes,), jnp.float32)
+    return p
+
+
+def init_params(key, cfg: CNNConfig) -> dict:
+    specs = param_specs(cfg)
+    out = {}
+    keys = jax.random.split(key, len(specs))
+    for k, (name, s) in zip(keys, sorted(specs.items())):
+        if name.endswith("_b"):
+            out[name] = jnp.zeros(s.shape, s.dtype)
+        elif s.ndim == 4:
+            out[name] = _conv_init(k, *s.shape)
+        else:
+            out[name] = jax.random.normal(k, s.shape) / math.sqrt(s.shape[0])
+    return out
+
+
+def forward(params: dict, cfg: CNNConfig, images: jax.Array) -> jax.Array:
+    """images (B,H,W,C) -> logits (B,n_classes)."""
+    x = jax.nn.relu(conv(images, params["stem"]))
+    cin = cfg.channels[0]
+    for si, c in enumerate(cfg.channels):
+        for bi in range(cfg.blocks_per_stage):
+            pre = f"s{si}b{bi}"
+            stride = 2 if (bi == 0 and si > 0) else 1
+            h = jax.nn.relu(conv(x, params[f"{pre}_c1"], stride))
+            h = conv(h, params[f"{pre}_c2"])
+            sc = x if cin == c else conv(x, params[f"{pre}_proj"], 1)
+            if stride != 1:
+                sc = lax.reduce_window(sc, 0.0, lax.add, (1, stride, stride, 1),
+                                       (1, stride, stride, 1), "SAME") / stride**2
+                if cin != c:
+                    sc = conv(x, params[f"{pre}_proj"], stride)
+            x = jax.nn.relu(h + sc)
+            cin = c
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ params["head_w"] + params["head_b"]
+
+
+def loss_fn(params: dict, cfg: CNNConfig, batch: dict):
+    logits = forward(params, cfg, batch["images"])
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "acc": acc}

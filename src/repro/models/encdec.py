@@ -1,0 +1,273 @@
+"""Whisper-style encoder-decoder transformer backbone.
+
+The audio conv frontend is a STUB per the assignment: inputs are precomputed
+frame embeddings (B, S_enc, frontend_dim) supplied by ``input_specs`` /
+the data pipeline; a learned linear projection maps them into d_model. The
+encoder is bidirectional; the decoder has causal self-attention plus
+cross-attention to the encoder output. RoPE stands in for whisper's
+sinusoidal/learned positions (positional scheme is irrelevant to the paper's
+aggregation layer, which consumes the flat gradient).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+
+sds = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (no rope, not causal)
+# ---------------------------------------------------------------------------
+
+def _xattn_specs(cfg: ModelConfig, dtype) -> dict:
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    return {"wq": sds((d, h, hd), dtype), "wk": sds((d, kh, hd), dtype),
+            "wv": sds((d, kh, hd), dtype), "wo": sds((h, hd, d), dtype)}
+
+
+def _xattn_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {"wq": L.dense_init(ks[0], (d, h, hd), d, dtype),
+            "wk": L.dense_init(ks[1], (d, kh, hd), d, dtype),
+            "wv": L.dense_init(ks[2], (d, kh, hd), d, dtype),
+            "wo": L.dense_init(ks[3], (h, hd, d), h * hd, dtype)}
+
+
+def cross_kv(p: dict, enc: jax.Array, cd) -> tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("btd,dhk->bthk", enc, p["wk"].astype(cd))
+    v = jnp.einsum("btd,dhk->bthk", enc, p["wv"].astype(cd))
+    return k, v
+
+
+def cross_attention(p: dict, x: jax.Array, k, v, cfg: ModelConfig):
+    cd = cfg.compute_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    s, t = q.shape[1], k.shape[1]
+    o = L.attention(q, k.astype(cd), v.astype(cd),
+                    q_pos=jnp.arange(s), k_pos=jnp.arange(t), causal=False,
+                    chunk=cfg.attn_chunk, unroll=cfg.unroll_scans)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cd))
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def _enc_layer_specs(cfg, dtype):
+    return {"ln1": sds((cfg.d_model,), dtype),
+            "attn": L.attn_param_specs(cfg, dtype),
+            "ln2": sds((cfg.d_model,), dtype),
+            "mlp": L.mlp_param_specs(cfg, dtype)}
+
+
+def _dec_layer_specs(cfg, dtype):
+    return {"ln1": sds((cfg.d_model,), dtype),
+            "attn": L.attn_param_specs(cfg, dtype),
+            "lnx": sds((cfg.d_model,), dtype),
+            "xattn": _xattn_specs(cfg, dtype),
+            "ln2": sds((cfg.d_model,), dtype),
+            "mlp": L.mlp_param_specs(cfg, dtype)}
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    dt = cfg.param_dtype
+    fd = cfg.frontend_dim or cfg.d_model
+    stack = lambda spec: jax.tree.map(
+        lambda s: sds((cfg.encoder_layers,) + s.shape, s.dtype), spec)
+    stack_d = lambda spec: jax.tree.map(
+        lambda s: sds((cfg.n_layers,) + s.shape, s.dtype), spec)
+    return {
+        "frontend_proj": sds((fd, cfg.d_model), dt),
+        "enc_layers": stack(_enc_layer_specs(cfg, dt)),
+        "enc_norm": sds((cfg.d_model,), dt),
+        "embed": sds((cfg.vocab, cfg.d_model), dt),
+        "dec_layers": stack_d(_dec_layer_specs(cfg, dt)),
+        "final_norm": sds((cfg.d_model,), dt),
+        "lm_head": sds((cfg.d_model, cfg.vocab), dt),
+    }
+
+
+def _enc_layer_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": jnp.ones((cfg.d_model,), dtype),
+            "attn": L.attn_init(k1, cfg, dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "mlp": L.mlp_init(k2, cfg, dtype)}
+
+
+def _dec_layer_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": jnp.ones((cfg.d_model,), dtype),
+            "attn": L.attn_init(k1, cfg, dtype),
+            "lnx": jnp.ones((cfg.d_model,), dtype),
+            "xattn": _xattn_init(k2, cfg, dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "mlp": L.mlp_init(k3, cfg, dtype)}
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dt = cfg.param_dtype
+    fd = cfg.frontend_dim or cfg.d_model
+    ks = jax.random.split(key, 5)
+    stack = lambda fn, k, n: jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[fn(ki, cfg, dt) for ki in jax.random.split(k, n)])
+    return {
+        "frontend_proj": L.dense_init(ks[0], (fd, cfg.d_model), fd, dt),
+        "enc_layers": stack(_enc_layer_init, ks[1], cfg.encoder_layers),
+        "enc_norm": jnp.ones((cfg.d_model,), dt),
+        "embed": L.embed_init(ks[2], (cfg.vocab, cfg.d_model), dt),
+        "dec_layers": stack(_dec_layer_init, ks[3], cfg.n_layers),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": L.embed_init(ks[4], (cfg.d_model, cfg.vocab), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _remat(fn, cfg):
+    if not cfg.remat:
+        return fn
+    policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames (B, S_enc, frontend_dim) -> (B, S_enc, D)."""
+    cd = cfg.compute_dtype
+    x = jnp.einsum("bsf,fd->bsd", frames.astype(cd),
+                   params["frontend_proj"].astype(cd))
+    positions = jnp.arange(x.shape[1])
+
+    def enc_layer(xc, lp):
+        h = L.self_attention_block(
+            lp["attn"], L.rmsnorm(xc, lp["ln1"], cfg.norm_eps), cfg,
+            positions=positions, causal=False)
+        xc = xc + h
+        xc = xc + L.mlp_block(lp["mlp"],
+                              L.rmsnorm(xc, lp["ln2"], cfg.norm_eps), cfg)
+        return xc
+
+    body = _remat(enc_layer, cfg)
+    if cfg.scan_layers:
+        x, _ = lax.scan(lambda c, lp: (body(c, lp), None), x,
+                        params["enc_layers"])
+    else:
+        n = jax.tree.leaves(params["enc_layers"])[0].shape[0]
+        for i in range(n):
+            x = body(x, jax.tree.map(lambda a: a[i], params["enc_layers"]))
+    return L.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            frames: jax.Array):
+    """Teacher-forced decoder over full token sequence."""
+    enc = encode(params, cfg, frames)
+    cd = cfg.compute_dtype
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    x = L.embed_tokens(params["embed"], tokens, cd)
+
+    def body(xc, lp):
+        h = L.self_attention_block(
+            lp["attn"], L.rmsnorm(xc, lp["ln1"], cfg.norm_eps), cfg,
+            positions=positions, causal=True)
+        xc = xc + h
+        xk, xv = cross_kv(lp["xattn"], enc, cd)
+        xc = xc + cross_attention(lp["xattn"],
+                                  L.rmsnorm(xc, lp["lnx"], cfg.norm_eps),
+                                  xk, xv, cfg)
+        xc = xc + L.mlp_block(lp["mlp"],
+                              L.rmsnorm(xc, lp["ln2"], cfg.norm_eps), cfg)
+        return xc
+
+    body = _remat(body, cfg)
+    if cfg.scan_layers:
+        x, _ = lax.scan(lambda c, lp: (body(c, lp), None), x,
+                        params["dec_layers"])
+    else:
+        for i in range(cfg.n_layers):
+            x = body(x, jax.tree.map(lambda a: a[i], params["dec_layers"]))
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return L.lm_logits(x, params["lm_head"], cd)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> dict:
+    kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    nl = cfg.n_layers
+    return {
+        "idx": sds((), jnp.int32),
+        "k": sds((nl, batch, max_len, kh, hd), dtype),
+        "v": sds((nl, batch, max_len, kh, hd), dtype),
+        "xk": sds((nl, batch, cfg.encoder_seq, kh, hd), dtype),
+        "xv": sds((nl, batch, cfg.encoder_seq, kh, hd), dtype),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, params=None,
+               frames=None, dtype=jnp.bfloat16) -> dict:
+    c = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                     cache_specs(cfg, batch, max_len, dtype))
+    if params is not None and frames is not None:
+        enc = encode(params, cfg, frames)
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["dec_layers"])
+            k, v = cross_kv(lp["xattn"], enc, cfg.compute_dtype)
+            ks.append(k.astype(dtype))
+            vs.append(v.astype(dtype))
+        c["xk"] = jnp.stack(ks)
+        c["xv"] = jnp.stack(vs)
+    return c
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                cache: dict):
+    """tokens (B,1) -> (logits, new cache). Cross-KV precomputed in cache."""
+    cd = cfg.compute_dtype
+    idx = cache["idx"]
+    x = L.embed_tokens(params["embed"], tokens, cd)
+
+    def body(xc, xs):
+        lp, kc, vc, xk, xv = xs
+        h, nk, nv = L.decode_attention_block(
+            lp["attn"], L.rmsnorm(xc, lp["ln1"], cfg.norm_eps), cfg,
+            k_cache=kc, v_cache=vc, idx=idx)
+        xc = xc + h
+        xc = xc + cross_attention(lp["xattn"],
+                                  L.rmsnorm(xc, lp["lnx"], cfg.norm_eps),
+                                  xk.astype(cd), xv.astype(cd), cfg)
+        xc = xc + L.mlp_block(lp["mlp"],
+                              L.rmsnorm(xc, lp["ln2"], cfg.norm_eps), cfg)
+        return xc, (nk, nv)
+
+    x, (nk, nv) = L._scan_or_loop(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]),
+        use_scan=cfg.scan_layers)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(x, params["lm_head"], cd)
+    new_cache = dict(cache, idx=idx + 1, k=nk, v=nv)
+    return logits, new_cache
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict):
+    logits = forward(params, cfg, batch["tokens"], batch["frames"])
+    loss = L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss, {"loss": loss}

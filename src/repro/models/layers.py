@@ -1,0 +1,407 @@
+"""Shared pure-JAX neural-net layers for the model zoo.
+
+Everything here is functional: params are plain pytrees of jnp arrays,
+layers are functions. Attention supports dense, KV-chunked online-softmax
+(flash-style, bounds activation memory at long context), sliding windows,
+GQA via per-head gather (TP-friendly: q sharded on heads, kv replicated or
+sequence-sharded), and single-token decode against a (ring-buffer) cache.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / math.sqrt(max(1, in_axis_size))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., None, :]                # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention core
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _expand_kv(kv: jax.Array, n_heads: int) -> jax.Array:
+    """(B, T, KH, D) -> (B, T, H, D) via per-q-head gather (GQA).
+
+    A gather (take) keeps the output shardable on the full head axis: each
+    TP shard gathers only the kv heads its q heads need.
+    """
+    kh = kv.shape[2]
+    if kh == n_heads:
+        return kv
+    group = n_heads // kh
+    head_map = jnp.arange(n_heads) // group
+    return jnp.take(kv, head_map, axis=2)
+
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int,
+               k_valid=None) -> jax.Array:
+    """Additive bias (S, T) [or broadcastable] built from positions."""
+    m = jnp.ones(q_pos.shape[-1:] + k_pos.shape[-1:], dtype=bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    if k_valid is not None:
+        m &= k_valid[None, :]
+    return jnp.where(m, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention_dense(q, k, v, *, q_pos, k_pos, causal=True, window=0,
+                    k_valid=None, grouped=False):
+    """q: (B,S,H,D); k,v: (B,T,KH,D). Returns (B,S,H,D). f32 softmax.
+
+    ``grouped=True`` keeps KV at KH heads and runs a grouped-query einsum
+    (q reshaped to (B,S,KH,G,D)) — no KV expansion to H heads, so cache
+    reads stay at the GQA-compressed size. Used on the decode path where q
+    is tiny and un-sharded (the TP reshape constraint doesn't apply).
+    """
+    b, s, h, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    bias = _mask_bias(q_pos, k_pos, causal=causal, window=window,
+                      k_valid=k_valid)
+    if grouped and k.shape[2] != h:
+        kh = k.shape[2]
+        g = h // kh
+        qg = q.reshape(b, s, kh, g, d)
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                            preferred_element_type=jnp.float32) * scale
+        scores = scores + bias[None, None, None]
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(b, s, h, d).astype(q.dtype)
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = scores + bias[None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def _scan_or_loop(body, carry, xs, use_scan: bool):
+    """lax.scan, or a statically-unrolled Python loop (exact HLO cost
+    accounting for the dry-run: XLA's cost_analysis does not multiply
+    while-loop trip counts)."""
+    if use_scan:
+        return lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *e: jnp.stack(e), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+def attention_chunked(q, k, v, *, q_pos, k_pos, causal=True, window=0,
+                      chunk=2048, unroll=False):
+    """Online-softmax attention, scanning KV in chunks.
+
+    Bounds peak activation memory at O(S * chunk) instead of O(S * T): this
+    is the flash-attention recurrence in pure jnp (the Pallas variant tiles
+    the same recurrence into VMEM).
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    if t % chunk != 0:
+        pad = chunk - t % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.concatenate(
+            [k_pos, jnp.full((pad,), -(10 ** 9), k_pos.dtype)])
+        t = t + pad
+    n_chunks = t // chunk
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    kc = k.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(n_chunks, chunk)
+    scale = 1.0 / math.sqrt(d)
+
+    def body(carry, xs):
+        m, l, acc = carry                       # (B,H,S), (B,H,S), (B,S,H,D)
+        k_i, v_i, p_i = xs
+        s_i = jnp.einsum("bshd,bthd->bhst", q, k_i,
+                         preferred_element_type=jnp.float32) * scale
+        s_i = s_i + _mask_bias(q_pos, p_i, causal=causal,
+                               window=window)[None, None]
+        m_i = jnp.max(s_i, axis=-1)
+        m_new = jnp.maximum(m, m_i)
+        p = jnp.exp(s_i - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha.transpose(0, 2, 1)[..., None] + jnp.einsum(
+            "bhst,bthd->bshd", p.astype(v_i.dtype), v_i,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, h, s), NEG_INF, jnp.float32),
+            jnp.zeros((b, h, s), jnp.float32),
+            jnp.zeros((b, s, h, d), jnp.float32))
+    (m, l, acc), _ = _scan_or_loop(body, init, (kc, vc, pc),
+                                   use_scan=not unroll)
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l.transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+def attention_causal_2d(q, k, v, *, positions, window=0, chunk=2048,
+                        unroll=False):
+    """2-D-tiled causal attention: q blocks × kv blocks, skipping blocks
+    that are fully masked (above the diagonal; for SWA also blocks older
+    than the window). This is flash attention's block-skipping structure in
+    pure jnp — halves attention FLOPs/bytes for causal, and cuts SWA to
+    O(S·window). Requires S divisible by chunk (callers guarantee via the
+    chunk>=S fallback in `attention`)."""
+    b, s, h, d = q.shape
+    nq = s // chunk
+    outs = []
+    for i in range(nq):
+        qi = q[:, i * chunk:(i + 1) * chunk]
+        # earliest key block visible to this q block (SWA: the block holding
+        # position i*chunk - window + 1)
+        j0 = max(0, (i * chunk - window + 1) // chunk) if window else 0
+        lo, hi = j0 * chunk, (i + 1) * chunk
+        ki, vi = k[:, lo:hi], v[:, lo:hi]
+        pos_q = positions[i * chunk:(i + 1) * chunk]
+        pos_k = positions[lo:hi]
+        if hi - lo > chunk:
+            out_i = attention_chunked(qi, ki, vi, q_pos=pos_q, k_pos=pos_k,
+                                      causal=True, window=window,
+                                      chunk=chunk, unroll=unroll)
+        else:
+            out_i = attention_dense(qi, ki, vi, q_pos=pos_q, k_pos=pos_k,
+                                    causal=True, window=window)
+        outs.append(out_i)
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention(q, k, v, *, q_pos, k_pos, causal=True, window=0, chunk=0,
+              k_valid=None, unroll=False, causal_skip=False):
+    full_self = (causal and k_valid is None and q.shape[1] == k.shape[1])
+    if (causal_skip and full_self and chunk and q.shape[1] > chunk
+            and q.shape[1] % chunk == 0):
+        return attention_causal_2d(q, k, v, positions=q_pos, window=window,
+                                   chunk=chunk, unroll=unroll)
+    if chunk and k.shape[1] > chunk and k_valid is None:
+        return attention_chunked(q, k, v, q_pos=q_pos, k_pos=k_pos,
+                                 causal=causal, window=window, chunk=chunk,
+                                 unroll=unroll)
+    return attention_dense(q, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal,
+                           window=window, k_valid=k_valid)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+def attn_param_specs(cfg: ModelConfig, dtype) -> dict:
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    sds = jax.ShapeDtypeStruct
+    p = {
+        "wq": sds((d, h, hd), dtype),
+        "wk": sds((d, kh, hd), dtype),
+        "wv": sds((d, kh, hd), dtype),
+        "wo": sds((h, hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p.update(bq=sds((h, hd), dtype), bk=sds((kh, hd), dtype),
+                 bv=sds((kh, hd), dtype))
+    if cfg.qk_norm:
+        p.update(qnorm=sds((hd,), dtype), knorm=sds((hd,), dtype))
+    return p
+
+
+def attn_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), d, dtype),
+        "wk": dense_init(ks[1], (d, kh, hd), d, dtype),
+        "wv": dense_init(ks[2], (d, kh, hd), d, dtype),
+        "wo": dense_init(ks[3], (h, hd, d), h * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p.update(bq=jnp.zeros((h, hd), dtype), bk=jnp.zeros((kh, hd), dtype),
+                 bv=jnp.zeros((kh, hd), dtype))
+    if cfg.qk_norm:
+        p.update(qnorm=jnp.ones((hd,), dtype), knorm=jnp.ones((hd,), dtype))
+    return p
+
+
+def project_qkv(p: dict, x: jax.Array, cfg: ModelConfig, positions):
+    """x: (B,S,D) -> q (B,S,H,hd), k,v (B,S,KH,hd), rope applied."""
+    cd = cfg.compute_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["qnorm"], cfg.norm_eps)
+        k = rmsnorm(k, p["knorm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_out(p: dict, o: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cfg.compute_dtype))
+
+
+def self_attention_block(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                         positions, causal=True) -> jax.Array:
+    """Full-sequence self-attention (train / prefill)."""
+    q, k, v = project_qkv(p, x, cfg, positions)
+    o = attention(q, k, v, q_pos=positions, k_pos=positions, causal=causal,
+                  window=cfg.sliding_window, chunk=cfg.attn_chunk,
+                  unroll=cfg.unroll_scans, causal_skip=cfg.attn_causal_skip)
+    return attn_out(p, o, cfg)
+
+
+def decode_attention_block(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                           k_cache, v_cache, idx) -> tuple:
+    """One-token decode against a (possibly ring-buffer) KV cache.
+
+    x: (B,1,D); k_cache/v_cache: (B,W,KH,hd); idx: tokens already cached.
+    Returns (out (B,1,D), new_k, new_v).
+    """
+    w = k_cache.shape[1]
+    pos = jnp.full((1,), idx, jnp.int32)
+    q, k, v = project_qkv(p, x, cfg, pos)
+    slot = idx % w
+    new_k = lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype),
+                                            slot, axis=1)
+    new_v = lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype),
+                                            slot, axis=1)
+    # Absolute position held by each ring slot after this write.
+    j = jnp.arange(w)
+    k_pos = idx - ((idx - j) % w)
+    k_valid = k_pos >= jnp.maximum(0, idx - w + 1)
+    o = attention_dense(q, new_k.astype(q.dtype), new_v.astype(q.dtype),
+                        q_pos=pos, k_pos=k_pos, causal=True,
+                        window=cfg.sliding_window, k_valid=k_valid,
+                        grouped=cfg.decode_grouped_attn)
+    return attn_out(p, o, cfg), new_k, new_v
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense)
+# ---------------------------------------------------------------------------
+
+def mlp_param_specs(cfg: ModelConfig, dtype) -> dict:
+    sds = jax.ShapeDtypeStruct
+    d, f = cfg.d_model, cfg.d_ff
+    p = {"w1": sds((d, f), dtype), "w2": sds((f, d), dtype)}
+    if cfg.gated_mlp:
+        p["w3"] = sds((d, f), dtype)
+    return p
+
+
+def mlp_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], (d, f), d, dtype),
+         "w2": dense_init(ks[1], (f, d), f, dtype)}
+    if cfg.gated_mlp:
+        p["w3"] = dense_init(ks[2], (d, f), d, dtype)
+    return p
+
+
+def mlp_block(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    cd = cfg.compute_dtype
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"].astype(cd))
+    if cfg.gated_mlp:
+        g = jnp.einsum("bsd,df->bsf", x, p["w3"].astype(cd))
+        h = jax.nn.silu(h) * g
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(cd))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(table: jax.Array, tokens: jax.Array, cd) -> jax.Array:
+    return jnp.take(table, tokens, axis=0).astype(cd)
+
+
+def lm_logits(x: jax.Array, head: jax.Array, cd) -> jax.Array:
+    return jnp.einsum("bsd,dv->bsv", x, head.astype(cd))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Mean next-token CE. logits (B,S,V) any dtype; labels (B,S) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,35 @@
+"""Process-level mesh context for model-internal shard_map blocks.
+
+Set by the trainer/dryrun/server before tracing; model code (e.g. the MoE
+local-dispatch path) reads it to build shard_map calls whose mesh matches
+the enclosing jit's device assignment. None = single-device/test mode.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+_CURRENT = None
+
+
+def set_mesh(mesh) -> None:
+    global _CURRENT
+    _CURRENT = mesh
+
+
+def get_mesh():
+    return _CURRENT
+
+
+def replica_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+@contextmanager
+def use_mesh(mesh):
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = mesh
+    try:
+        yield
+    finally:
+        _CURRENT = prev

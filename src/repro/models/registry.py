@@ -1,0 +1,177 @@
+"""Uniform model API: dispatch by config family.
+
+Every family exposes:
+    param_specs(cfg)                  -> pytree of ShapeDtypeStruct
+    init_params(key, cfg)             -> pytree of arrays
+    loss_fn(params, cfg, batch)       -> (loss, metrics)
+    forward(params, cfg, batch)       -> logits            (full sequence)
+    decode_step(params, cfg, tok, c)  -> (logits, cache)   (single token)
+    cache_specs(cfg, batch, max_len)  -> pytree of ShapeDtypeStruct
+plus `param_count(cfg)` (exact, derived from specs) and
+`input_specs(model, shape)` (dry-run stand-ins, no allocation).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import encdec, transformer
+
+sds = jax.ShapeDtypeStruct
+
+_DECODER_FAMILIES = ("dense", "moe", "vlm", "ssm", "hybrid")
+
+
+def _is_encdec(cfg: ModelConfig) -> bool:
+    return cfg.family in ("audio", "encdec") or cfg.is_encdec
+
+
+def param_specs(cfg: ModelConfig):
+    if _is_encdec(cfg):
+        return encdec.param_specs(cfg)
+    if cfg.family in _DECODER_FAMILIES:
+        return transformer.param_specs(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def init_params(key, cfg: ModelConfig):
+    if _is_encdec(cfg):
+        return encdec.init_params(key, cfg)
+    return transformer.init_params(key, cfg)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    if _is_encdec(cfg):
+        return encdec.loss_fn(params, cfg, batch)
+    return transformer.loss_fn(params, cfg, batch)
+
+
+def forward(params, cfg: ModelConfig, batch):
+    if _is_encdec(cfg):
+        return encdec.forward(params, cfg, batch["tokens"], batch["frames"])
+    return transformer.forward(params, cfg, batch["tokens"])
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache):
+    if _is_encdec(cfg):
+        return encdec.decode_step(params, cfg, tokens, cache)
+    return transformer.decode_step(params, cfg, tokens, cache)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    if _is_encdec(cfg):
+        return encdec.cache_specs(cfg, batch, max_len, dtype)
+    return transformer.cache_specs(cfg, batch, max_len, dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    cs = cache_specs(cfg, batch, max_len, dtype)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cs)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    specs = param_specs(cfg)
+    return int(sum(np.prod(s.shape) for s in jax.tree.leaves(specs)))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: top_k of n_experts)."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    specs = param_specs(cfg)
+    expert = int(sum(
+        np.prod(s.shape) for path, s in
+        jax.tree_util.tree_flatten_with_path(specs)[0]
+        if any(getattr(k, "key", None) in ("w1", "w2", "w3") and "moe" in
+               str(path) for k in path)))
+    active_frac = cfg.moe.top_k / cfg.moe.n_experts
+    return int(total - expert * (1.0 - active_frac))
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input stand-ins
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                cache_dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill -> token batch (+labels / frames); decode -> one new token
+    plus the KV/SSM cache of seq_len.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {"tokens": sds((b, s), jnp.int32),
+               "labels": sds((b, s), jnp.int32)}
+        if _is_encdec(cfg):
+            fd = cfg.frontend_dim or cfg.d_model
+            out["frames"] = sds((b, cfg.encoder_seq, fd), jnp.float32)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": sds((b, s), jnp.int32)}
+        if _is_encdec(cfg):
+            fd = cfg.frontend_dim or cfg.d_model
+            out["frames"] = sds((b, cfg.encoder_seq, fd), jnp.float32)
+        return out
+    if shape.kind == "decode":
+        return {"tokens": sds((b, 1), jnp.int32),
+                "cache": cache_specs(cfg, b, s, cache_dtype)}
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOPs model (6ND for dense; 6·N_active·D for MoE) + attention term
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS for the roofline's usefulness ratio.
+
+    Train: 6 * N_active * tokens (+ attention 12*L*S^2*H*hd per batch elem,
+    causal halved). Prefill: 2 * N_active * tokens + attn fwd. Decode: 2 *
+    N_active * batch (one token each) + cache attention reads (matmul flops).
+    """
+    n_act = active_param_count(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    h = cfg.n_heads
+    nl = cfg.n_layers
+
+    def attn_flops(q_len, k_len, causal=True):
+        # qk + pv matmuls: 2 * 2 * q*k*h*hd, causal halves the useful area
+        eff = 0.5 if (causal and q_len == k_len) else 1.0
+        if cfg.sliding_window and k_len > cfg.sliding_window:
+            eff *= cfg.sliding_window / k_len if not causal else 1.0
+            if causal and q_len == k_len:
+                eff = cfg.sliding_window / k_len  # band instead of triangle
+        return 4.0 * q_len * k_len * h * hd * eff
+
+    if cfg.family in ("ssm",):
+        attn_total = 0.0
+    elif cfg.family == "hybrid":
+        n_attn = nl // max(1, cfg.attn_every)
+        if shape.kind == "decode":
+            attn_total = b * n_attn * attn_flops(1, s, causal=False)
+        else:
+            attn_total = b * n_attn * attn_flops(s, s)
+    else:
+        if shape.kind == "decode":
+            attn_total = b * nl * attn_flops(1, s, causal=False)
+        else:
+            attn_total = b * nl * attn_flops(s, s)
+        if _is_encdec(cfg):
+            e = cfg.encoder_seq
+            attn_total += b * cfg.encoder_layers * attn_flops(e, e, False)
+            q = 1 if shape.kind == "decode" else s
+            attn_total += b * nl * attn_flops(q, e, False)
+
+    if shape.kind == "train":
+        return 6.0 * n_act * b * s + 3.0 * attn_total
+    if shape.kind == "prefill":
+        return 2.0 * n_act * b * s + attn_total
+    return 2.0 * n_act * b + attn_total

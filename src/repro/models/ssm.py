@@ -1,0 +1,370 @@
+"""State-space model blocks: Mamba-1 (selective scan) and Mamba-2 (SSD).
+
+TPU adaptation notes (DESIGN.md §3): the CUDA selective-scan kernel is
+re-thought as a *chunked* scan — within a chunk the recurrence is evaluated
+with an associative scan (Mamba-1) or the quadratic-intra/linear-inter SSD
+form (Mamba-2), and chunks are carried sequentially with `lax.scan`. This
+bounds the materialized state tensor to O(B·chunk·d_inner·d_state) instead
+of O(B·S·d_inner·d_state), which is the VMEM-friendly blocking an MXU wants.
+Decode is an O(1) single-step state update (why `long_500k` runs for SSMs).
+
+Tensor-parallel layout: projections are kept *separate* (in_x/in_z/... rather
+than one fused in_proj) so every weight shards cleanly on the `model` axis
+without GSPMD having to reshard a split of a sharded dimension. d_inner and
+the Mamba-2 head count are the TP-sharded dims; B/C (d_state) are replicated.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, rmsnorm
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return math.ceil(cfg.d_model / 16)
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def m2_heads(cfg: ModelConfig) -> int:
+    return d_inner(cfg) // cfg.ssm.head_dim
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B,S,C); w: (K,C) depthwise; left-padded causal conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = lax.conv_general_dilated(
+        xp, w[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out + b
+
+
+def conv_step(cache: jax.Array, x_t: jax.Array, w: jax.Array,
+              b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Single-token conv using a (B, K-1, C) history cache."""
+    window = jnp.concatenate([cache, x_t[:, None]], axis=1)      # (B,K,C)
+    out = jnp.einsum("bkc,kc->bc", window, w) + b
+    return window[:, 1:], out
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+def mamba1_param_specs(cfg: ModelConfig, dtype) -> dict:
+    sds = jax.ShapeDtypeStruct
+    d, di, ds, r, k = (cfg.d_model, d_inner(cfg), cfg.ssm.d_state,
+                       dt_rank(cfg), cfg.ssm.d_conv)
+    return {
+        "in_x": sds((d, di), dtype),
+        "in_z": sds((d, di), dtype),
+        "conv_w": sds((k, di), dtype),
+        "conv_b": sds((di,), dtype),
+        "x_proj": sds((di, r + 2 * ds), dtype),
+        "dt_proj": sds((r, di), dtype),
+        "dt_bias": sds((di,), jnp.float32),
+        "a_log": sds((di, ds), jnp.float32),
+        "d_skip": sds((di,), jnp.float32),
+        "out_proj": sds((di, d), dtype),
+    }
+
+
+def mamba1_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, di, ds, r, k = (cfg.d_model, d_inner(cfg), cfg.ssm.d_state,
+                       dt_rank(cfg), cfg.ssm.d_conv)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": dense_init(ks[0], (d, di), d, dtype),
+        "in_z": dense_init(ks[1], (d, di), d, dtype),
+        "conv_w": dense_init(ks[2], (k, di), k, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[3], (di, r + 2 * ds), di, dtype),
+        "dt_proj": dense_init(ks[4], (r, di), r, dtype),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),  # softplus ~ 0.01
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (di, d), di, dtype),
+    }
+
+
+def _assoc_scan_chunk(da, db, h0):
+    """h_t = da_t * h_{t-1} + db_t within one chunk via associative scan.
+
+    da, db: (B, C, di, ds) f32; h0: (B, di, ds). Returns (h (B,C,di,ds), h_last).
+    """
+    def comb(l, r):
+        return (r[0] * l[0], r[0] * l[1] + r[1])
+
+    a_cum, b_cum = lax.associative_scan(comb, (da, db), axis=1)
+    h = a_cum * h0[:, None] + b_cum
+    return h, h[:, -1]
+
+
+def mamba1_ssm(dt, bmat, cmat, xc, a, h0, chunk: int, unroll: bool = False):
+    """Chunked selective scan.
+
+    dt, xc: (B,S,di); bmat, cmat: (B,S,ds); a: (di,ds) (negative);
+    h0: (B,di,ds). Returns y (B,S,di), h_last.
+    """
+    b, s, di_ = dt.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError(f"seq {s} not divisible by ssm chunk {chunk}")
+    n = s // chunk
+
+    def chunk_body(h, xs):
+        dt_c, b_c, c_c, x_c = xs                     # (B,C,·)
+        da = jnp.exp(dt_c[..., None] * a)            # (B,C,di,ds)
+        db = (dt_c * x_c)[..., None] * b_c[:, :, None, :]
+        h_seq, h_last = _assoc_scan_chunk(da, db, h)
+        y = jnp.einsum("bcdn,bcn->bcd", h_seq, c_c)
+        return h_last, y
+
+    from repro.models.layers import _scan_or_loop
+    rs = lambda t: t.reshape((b, n, chunk) + t.shape[2:]).swapaxes(0, 1)
+    h_last, ys = _scan_or_loop(
+        chunk_body, h0,
+        (rs(dt.astype(jnp.float32)), rs(bmat.astype(jnp.float32)),
+         rs(cmat.astype(jnp.float32)), rs(xc.astype(jnp.float32))),
+        use_scan=not unroll)
+    y = ys.swapaxes(0, 1).reshape(b, s, di_)
+    return y, h_last
+
+
+def mamba1_block(p: dict, x: jax.Array, cfg: ModelConfig,
+                 h0=None, conv_cache=None, single_step: bool = False):
+    """x: (B,S,D) full-seq, or (B,1,D) with single_step=True.
+
+    Returns (out (B,S,D), (h_last, conv_cache)).
+    """
+    cd = cfg.compute_dtype
+    ds, r = cfg.ssm.d_state, dt_rank(cfg)
+    di_ = d_inner(cfg)
+    b = x.shape[0]
+    if h0 is None:
+        h0 = jnp.zeros((b, di_, ds), jnp.float32)
+
+    x_in = jnp.einsum("bsd,de->bse", x, p["in_x"].astype(cd))
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"].astype(cd))
+
+    if single_step:
+        conv_cache, xc_t = conv_step(conv_cache, x_in[:, 0],
+                                     p["conv_w"].astype(cd),
+                                     p["conv_b"].astype(cd))
+        xc = jax.nn.silu(xc_t)[:, None]
+    else:
+        conv_out = causal_conv1d(x_in, p["conv_w"].astype(cd),
+                                 p["conv_b"].astype(cd))
+        xc = jax.nn.silu(conv_out)
+        conv_cache = None
+
+    proj = jnp.einsum("bsd,de->bse", xc, p["x_proj"].astype(cd))
+    dt_raw, bmat, cmat = jnp.split(proj, [r, r + ds], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_raw, p["dt_proj"].astype(cd))
+        .astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    if single_step:
+        da = jnp.exp(dt[:, 0, :, None] * a)
+        db = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] \
+            * bmat[:, 0, None, :].astype(jnp.float32)
+        h = da * h0 + db
+        y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0].astype(jnp.float32))[:, None]
+        h_last = h
+    else:
+        y, h_last = mamba1_ssm(dt, bmat, cmat, xc, a, h0, cfg.ssm.chunk,
+                               unroll=cfg.unroll_scans)
+
+    y = y + xc.astype(jnp.float32) * p["d_skip"]
+    y = y.astype(cd) * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(cd))
+    return out, (h_last, conv_cache)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+
+def mamba2_param_specs(cfg: ModelConfig, dtype) -> dict:
+    sds = jax.ShapeDtypeStruct
+    d, di, ds, k = cfg.d_model, d_inner(cfg), cfg.ssm.d_state, cfg.ssm.d_conv
+    h = m2_heads(cfg)
+    return {
+        "in_x": sds((d, di), dtype),
+        "in_z": sds((d, di), dtype),
+        "in_b": sds((d, ds), dtype),
+        "in_c": sds((d, ds), dtype),
+        "in_dt": sds((d, h), dtype),
+        "conv_xw": sds((k, di), dtype),
+        "conv_xb": sds((di,), dtype),
+        "conv_bw": sds((k, ds), dtype),
+        "conv_bb": sds((ds,), dtype),
+        "conv_cw": sds((k, ds), dtype),
+        "conv_cb": sds((ds,), dtype),
+        "dt_bias": sds((h,), jnp.float32),
+        "a_log": sds((h,), jnp.float32),
+        "d_skip": sds((h,), jnp.float32),
+        "norm_g": sds((di,), dtype),
+        "out_proj": sds((di, d), dtype),
+    }
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, di, ds, k = cfg.d_model, d_inner(cfg), cfg.ssm.d_state, cfg.ssm.d_conv
+    h = m2_heads(cfg)
+    ks = jax.random.split(key, 9)
+    return {
+        "in_x": dense_init(ks[0], (d, di), d, dtype),
+        "in_z": dense_init(ks[1], (d, di), d, dtype),
+        "in_b": dense_init(ks[2], (d, ds), d, dtype),
+        "in_c": dense_init(ks[3], (d, ds), d, dtype),
+        "in_dt": dense_init(ks[4], (d, h), d, dtype),
+        "conv_xw": dense_init(ks[5], (k, di), k, dtype),
+        "conv_xb": jnp.zeros((di,), dtype),
+        "conv_bw": dense_init(ks[6], (k, ds), k, dtype),
+        "conv_bb": jnp.zeros((ds,), dtype),
+        "conv_cw": dense_init(ks[7], (k, ds), k, dtype),
+        "conv_cb": jnp.zeros((ds,), dtype),
+        "dt_bias": jnp.full((h,), -4.6, jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_g": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[8], (di, d), di, dtype),
+    }
+
+
+def ssd_chunked(xh, dt, bmat, cmat, a_head, h0, chunk: int,
+                unroll: bool = False):
+    """Mamba-2 SSD: quadratic intra-chunk, linear inter-chunk.
+
+    xh: (B,S,H,P); dt: (B,S,H) f32; bmat/cmat: (B,S,N); a_head: (H,) (<0);
+    h0: (B,H,P,N). Returns y (B,S,H,P), h_last.
+    """
+    b, s, h, p_ = xh.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError(f"seq {s} not divisible by ssd chunk {chunk}")
+    nc = s // chunk
+
+    log_a = dt * a_head                               # (B,S,H)  <= 0
+
+    def chunk_body(hstate, xs):
+        x_c, dt_c, la_c, b_c, c_c = xs                # (B,C,·)
+        cl = jnp.cumsum(la_c, axis=1)                 # (B,C,H) inclusive
+        # intra-chunk: y_i += sum_{j<=i} exp(cl_i - cl_j) dt_j (C_i.B_j) x_j
+        g = jnp.einsum("bin,bjn->bij", c_c, b_c)      # (B,C,C)
+        decay = jnp.exp(cl[:, :, None, :] - cl[:, None, :, :])  # (B,C,C,H)
+        mask = jnp.tril(jnp.ones((x_c.shape[1], x_c.shape[1]), bool))
+        w = jnp.where(mask[None, :, :, None], g[..., None] * decay, 0.0)
+        w = w * dt_c[:, None, :, :]                   # scale by dt_j
+        y = jnp.einsum("bijh,bjhp->bihp", w, x_c)
+        # carry-in contribution: exp(cl_i) * C_i . h0
+        y = y + jnp.einsum("bin,bhpn,bih->bihp", c_c, hstate, jnp.exp(cl))
+        # next state: exp(cl_last - cl_j) dt_j x_j (x) B_j  summed over j
+        rev = jnp.exp(cl[:, -1:, :] - cl)             # (B,C,H)
+        contrib = jnp.einsum("bjh,bjhp,bjn->bhpn", rev * dt_c, x_c, b_c)
+        h_next = hstate * jnp.exp(cl[:, -1])[..., None, None] + contrib
+        return h_next, y
+
+    from repro.models.layers import _scan_or_loop
+    rs = lambda t: t.reshape((b, nc, chunk) + t.shape[2:]).swapaxes(0, 1)
+    h_last, ys = _scan_or_loop(
+        chunk_body, h0.astype(jnp.float32),
+        (rs(xh.astype(jnp.float32)), rs(dt), rs(log_a),
+         rs(bmat.astype(jnp.float32)), rs(cmat.astype(jnp.float32))),
+        use_scan=not unroll)
+    y = ys.swapaxes(0, 1).reshape(b, s, h, p_)
+    return y, h_last
+
+
+def mamba2_block(p: dict, x: jax.Array, cfg: ModelConfig,
+                 h0=None, conv_cache=None, single_step: bool = False):
+    """Mamba-2 block. x: (B,S,D). conv_cache: dict(x=,b=,c=) histories.
+
+    Returns (out, (h_last, conv_cache)).
+    """
+    cd = cfg.compute_dtype
+    ds = cfg.ssm.d_state
+    di_ = d_inner(cfg)
+    nh, hd = m2_heads(cfg), cfg.ssm.head_dim
+    b, s, _ = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, hd, ds), jnp.float32)
+
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"].astype(cd))
+    xr = jnp.einsum("bsd,de->bse", x, p["in_x"].astype(cd))
+    br = jnp.einsum("bsd,de->bse", x, p["in_b"].astype(cd))
+    cr = jnp.einsum("bsd,de->bse", x, p["in_c"].astype(cd))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["in_dt"].astype(cd))
+
+    if single_step:
+        cx, xt = conv_step(conv_cache["x"], xr[:, 0],
+                           p["conv_xw"].astype(cd), p["conv_xb"].astype(cd))
+        cb, bt = conv_step(conv_cache["b"], br[:, 0],
+                           p["conv_bw"].astype(cd), p["conv_bb"].astype(cd))
+        cc, ct = conv_step(conv_cache["c"], cr[:, 0],
+                           p["conv_cw"].astype(cd), p["conv_cb"].astype(cd))
+        xr = jax.nn.silu(xt)[:, None]
+        br = jax.nn.silu(bt)[:, None]
+        cr = jax.nn.silu(ct)[:, None]
+        conv_cache = {"x": cx, "b": cb, "c": cc}
+    else:
+        xr = jax.nn.silu(causal_conv1d(xr, p["conv_xw"].astype(cd),
+                                       p["conv_xb"].astype(cd)))
+        br = jax.nn.silu(causal_conv1d(br, p["conv_bw"].astype(cd),
+                                       p["conv_bb"].astype(cd)))
+        cr = jax.nn.silu(causal_conv1d(cr, p["conv_cw"].astype(cd),
+                                       p["conv_cb"].astype(cd)))
+        conv_cache = None
+
+    xh = xr.reshape(b, s, nh, hd)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a_head = -jnp.exp(p["a_log"])
+
+    if single_step:
+        la = dt[:, 0] * a_head                         # (B,H)
+        h = h0 * jnp.exp(la)[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, 0], xh[:, 0].astype(jnp.float32),
+            br[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bhpn,bn->bhp", h, cr[:, 0].astype(jnp.float32))[:, None]
+        h_last = h
+    else:
+        y, h_last = ssd_chunked(xh, dt, br, cr, a_head, h0, cfg.ssm.chunk,
+                                unroll=cfg.unroll_scans)
+
+    y = y + xh.astype(jnp.float32) * p["d_skip"][:, None]
+    y = y.reshape(b, s, di_).astype(cd)
+    # gated RMSNorm (mamba-2): norm(y * silu(z))
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_g"], cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(cd))
+    return out, (h_last, conv_cache)
+
+
+def mamba_cache_specs(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    """Per-layer decode cache specs (leading dim = n_layers added by caller)."""
+    sds = jax.ShapeDtypeStruct
+    k = cfg.ssm.d_conv
+    if cfg.ssm.version == 1:
+        return {"h": sds((batch, d_inner(cfg), cfg.ssm.d_state), jnp.float32),
+                "conv": sds((batch, k - 1, d_inner(cfg)), dtype)}
+    return {"h": sds((batch, m2_heads(cfg), cfg.ssm.head_dim, cfg.ssm.d_state),
+                     jnp.float32),
+            "conv_x": sds((batch, k - 1, d_inner(cfg)), dtype),
+            "conv_b": sds((batch, k - 1, cfg.ssm.d_state), dtype),
+            "conv_c": sds((batch, k - 1, cfg.ssm.d_state), dtype)}

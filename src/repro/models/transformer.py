@@ -1,0 +1,368 @@
+"""Decoder-only LM stack covering dense / MoE / VLM / SSM / hybrid families.
+
+Layers are stored *stacked* (leading dim = n_layers) and iterated with
+`lax.scan` (compile-time O(1) in depth) or unrolled (exact HLO cost
+accounting for the dry-run roofline) per ``cfg.scan_layers``. Activation
+remat wraps each layer body when ``cfg.remat``.
+
+The hybrid (zamba2) family groups ``attn_every`` Mamba-2 layers per scan
+step and applies a single shared-weight attention block once per group.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+
+Pytree = Any
+sds = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# Per-layer param specs / init
+# ---------------------------------------------------------------------------
+
+def _layer_param_specs(cfg: ModelConfig, dtype) -> dict:
+    fam = cfg.family
+    if fam == "ssm":
+        return {"ln": sds((cfg.d_model,), dtype),
+                "mamba": SSM.mamba1_param_specs(cfg, dtype)}
+    if fam == "hybrid":
+        return {"ln": sds((cfg.d_model,), dtype),
+                "mamba": SSM.mamba2_param_specs(cfg, dtype)}
+    p = {"ln1": sds((cfg.d_model,), dtype),
+         "attn": L.attn_param_specs(cfg, dtype),
+         "ln2": sds((cfg.d_model,), dtype)}
+    if cfg.moe is not None:
+        p["moe"] = MOE.moe_param_specs(cfg, dtype)
+    else:
+        p["mlp"] = L.mlp_param_specs(cfg, dtype)
+    return p
+
+
+def _layer_init(key, cfg: ModelConfig, dtype) -> dict:
+    fam = cfg.family
+    k1, k2 = jax.random.split(key)
+    if fam == "ssm":
+        return {"ln": jnp.ones((cfg.d_model,), dtype),
+                "mamba": SSM.mamba1_init(k1, cfg, dtype)}
+    if fam == "hybrid":
+        return {"ln": jnp.ones((cfg.d_model,), dtype),
+                "mamba": SSM.mamba2_init(k1, cfg, dtype)}
+    p = {"ln1": jnp.ones((cfg.d_model,), dtype),
+         "attn": L.attn_init(k1, cfg, dtype),
+         "ln2": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.moe is not None:
+        p["moe"] = MOE.moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = L.mlp_init(k2, cfg, dtype)
+    return p
+
+
+def _shared_attn_specs(cfg: ModelConfig, dtype) -> dict:
+    """Zamba2-style shared transformer block (attn + MLP, shared weights)."""
+    return {"ln1": sds((cfg.d_model,), dtype),
+            "attn": L.attn_param_specs(cfg, dtype),
+            "ln2": sds((cfg.d_model,), dtype),
+            "mlp": L.mlp_param_specs(cfg, dtype)}
+
+
+def _shared_attn_init(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": jnp.ones((cfg.d_model,), dtype),
+            "attn": L.attn_init(k1, cfg, dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "mlp": L.mlp_init(k2, cfg, dtype)}
+
+
+def _stack(fn, key, n, *args):
+    keys = jax.random.split(key, n)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *[fn(k, *args) for k in keys])
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    dt = cfg.param_dtype
+    layer = _layer_param_specs(cfg, dt)
+    stacked = jax.tree.map(
+        lambda s: sds((cfg.n_layers,) + s.shape, s.dtype), layer)
+    p = {
+        "embed": sds((cfg.vocab, cfg.d_model), dt),
+        "layers": stacked,
+        "final_norm": sds((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = sds((cfg.d_model, cfg.vocab), dt)
+    if cfg.family == "hybrid":
+        p["shared_attn"] = _shared_attn_specs(cfg, dt)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 4)
+    p = {
+        "embed": L.embed_init(ks[0], (cfg.vocab, cfg.d_model), dt),
+        "layers": _stack(_layer_init, ks[1], cfg.n_layers, cfg, dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.embed_init(ks[2], (cfg.d_model, cfg.vocab), dt)
+    if cfg.family == "hybrid":
+        p["shared_attn"] = _shared_attn_init(ks[3], cfg, dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies
+# ---------------------------------------------------------------------------
+
+def _remat(fn, cfg: ModelConfig):
+    if not cfg.remat:
+        return fn
+    policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _attn_mlp_layer(lp: dict, x: jax.Array, cfg: ModelConfig, positions):
+    h = L.self_attention_block(lp["attn"], L.rmsnorm(x, lp["ln1"], cfg.norm_eps),
+                               cfg, positions=positions)
+    x = x + h
+    xi = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        x = x + MOE.moe_block(lp["moe"], xi, cfg)
+    else:
+        x = x + L.mlp_block(lp["mlp"], xi, cfg)
+    return x
+
+
+def _mamba_layer(lp: dict, x: jax.Array, cfg: ModelConfig):
+    block = SSM.mamba1_block if cfg.ssm.version == 1 else SSM.mamba2_block
+    h, _ = block(lp["mamba"], L.rmsnorm(x, lp["ln"], cfg.norm_eps), cfg)
+    return x + h
+
+
+def _shared_attn_apply(sp: dict, x: jax.Array, cfg: ModelConfig, positions):
+    h = L.self_attention_block(sp["attn"], L.rmsnorm(x, sp["ln1"], cfg.norm_eps),
+                               cfg, positions=positions)
+    x = x + h
+    x = x + L.mlp_block(sp["mlp"], L.rmsnorm(x, sp["ln2"], cfg.norm_eps), cfg)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _iterate_layers(body, x, stacked, cfg: ModelConfig):
+    """Apply `body(x, layer_params) -> x` over stacked layers."""
+    body = _remat(body, cfg)
+    if cfg.scan_layers:
+        x, _ = lax.scan(lambda c, lp: (body(c, lp), None), x, stacked)
+        return x
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    for i in range(n):
+        x = body(x, jax.tree.map(lambda a: a[i], stacked))
+    return x
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array):
+    """tokens (B,S) int32 -> logits (B,S,V) in compute dtype."""
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    x = L.embed_tokens(params["embed"], tokens, cfg.compute_dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        body = partial(_flip(_attn_mlp_layer), cfg=cfg, positions=positions)
+        x = _iterate_layers(body, x, params["layers"], cfg)
+    elif fam == "ssm":
+        body = partial(_flip(_mamba_layer), cfg=cfg)
+        x = _iterate_layers(body, x, params["layers"], cfg)
+    elif fam == "hybrid":
+        x = _hybrid_forward(params, cfg, x, positions)
+    else:
+        raise ValueError(f"forward() does not handle family {fam!r}")
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return L.lm_logits(x, head, cfg.compute_dtype)
+
+
+def _flip(f):
+    return lambda x, lp, **kw: f(lp, x, **kw)
+
+
+def _hybrid_forward(params, cfg: ModelConfig, x, positions):
+    """Groups of ``attn_every`` mamba layers + one shared attn block each."""
+    g = cfg.n_layers // cfg.attn_every
+    grouped = jax.tree.map(
+        lambda a: a.reshape((g, cfg.attn_every) + a.shape[1:]),
+        params["layers"])
+    shared = params["shared_attn"]
+
+    def group_body(xc, glp):
+        body = _remat(partial(_flip(_mamba_layer), cfg=cfg), cfg)
+        if cfg.scan_layers:
+            xc, _ = lax.scan(lambda c, lp: (body(c, lp), None), xc, glp)
+        else:
+            for i in range(cfg.attn_every):
+                xc = body(xc, jax.tree.map(lambda a: a[i], glp))
+        xc = _remat(partial(_flip(_shared_attn_apply), cfg=cfg,
+                            positions=positions), cfg)(xc, shared)
+        return xc
+
+    if cfg.scan_layers:
+        x, _ = lax.scan(lambda c, glp: (group_body(c, glp), None), x, grouped)
+    else:
+        for i in range(g):
+            x = group_body(x, jax.tree.map(lambda a: a[i], grouped))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token against cache)
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> dict:
+    """Decode-cache ShapeDtypeStructs. Ring-buffer window for SWA."""
+    fam = cfg.family
+    w = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    c: dict = {"idx": sds((), jnp.int32)}
+    if fam in ("dense", "moe", "vlm"):
+        c["k"] = sds((cfg.n_layers, batch, w, kh, hd), dtype)
+        c["v"] = sds((cfg.n_layers, batch, w, kh, hd), dtype)
+    elif fam == "ssm":
+        per = SSM.mamba_cache_specs(cfg, batch, dtype)
+        c["mamba"] = jax.tree.map(
+            lambda s: sds((cfg.n_layers,) + s.shape, s.dtype), per)
+    elif fam == "hybrid":
+        per = SSM.mamba_cache_specs(cfg, batch, dtype)
+        c["mamba"] = jax.tree.map(
+            lambda s: sds((cfg.n_layers,) + s.shape, s.dtype), per)
+        g = cfg.n_layers // cfg.attn_every
+        c["k"] = sds((g, batch, w, kh, hd), dtype)
+        c["v"] = sds((g, batch, w, kh, hd), dtype)
+    else:
+        raise ValueError(fam)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, max_len, dtype))
+
+
+def _mamba_decode_layer(lp, x, mc, cfg):
+    block = SSM.mamba1_block if cfg.ssm.version == 1 else SSM.mamba2_block
+    conv_cache = mc["conv"] if cfg.ssm.version == 1 else \
+        {"x": mc["conv_x"], "b": mc["conv_b"], "c": mc["conv_c"]}
+    h, (h_new, conv_new) = block(
+        lp["mamba"], L.rmsnorm(x, lp["ln"], cfg.norm_eps), cfg,
+        h0=mc["h"], conv_cache=conv_cache, single_step=True)
+    if cfg.ssm.version == 1:
+        new_mc = {"h": h_new, "conv": conv_new}
+    else:
+        new_mc = {"h": h_new, "conv_x": conv_new["x"],
+                  "conv_b": conv_new["b"], "conv_c": conv_new["c"]}
+    return x + h, new_mc
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                cache: dict):
+    """tokens (B,1) -> (logits (B,1,V), new cache)."""
+    idx = cache["idx"]
+    x = L.embed_tokens(params["embed"], tokens, cfg.compute_dtype)
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(xc, xs):
+            lp, kc, vc = xs
+            h, nk, nv = L.decode_attention_block(
+                lp["attn"], L.rmsnorm(xc, lp["ln1"], cfg.norm_eps), cfg,
+                k_cache=kc, v_cache=vc, idx=idx)
+            xc = xc + h
+            xi = L.rmsnorm(xc, lp["ln2"], cfg.norm_eps)
+            if cfg.moe is not None:
+                xc = xc + MOE.moe_block(lp["moe"], xi, cfg)
+            else:
+                xc = xc + L.mlp_block(lp["mlp"], xi, cfg)
+            return xc, (nk, nv)
+
+        x, (nk, nv) = L._scan_or_loop(body, x, (params["layers"], cache["k"],
+                                                cache["v"]),
+                                      use_scan=cfg.scan_layers)
+        new_cache = {"idx": idx + 1, "k": nk, "v": nv}
+
+    elif fam == "ssm":
+        def body(xc, xs):
+            lp, mc = xs
+            xc, new_mc = _mamba_decode_layer(lp, xc, mc, cfg)
+            return xc, new_mc
+
+        x, new_mamba = L._scan_or_loop(body, x,
+                                       (params["layers"], cache["mamba"]),
+                                       use_scan=cfg.scan_layers)
+        new_cache = {"idx": idx + 1, "mamba": new_mamba}
+
+    elif fam == "hybrid":
+        g = cfg.n_layers // cfg.attn_every
+        grouped = jax.tree.map(
+            lambda a: a.reshape((g, cfg.attn_every) + a.shape[1:]),
+            params["layers"])
+        gm = jax.tree.map(
+            lambda a: a.reshape((g, cfg.attn_every) + a.shape[1:]),
+            cache["mamba"])
+        shared = params["shared_attn"]
+
+        def group_body(xc, xs):
+            glp, gmc, kc, vc = xs
+
+            def inner(xc2, xs2):
+                lp, mc = xs2
+                xc2, new_mc = _mamba_decode_layer(lp, xc2, mc, cfg)
+                return xc2, new_mc
+
+            xc, new_gmc = L._scan_or_loop(inner, xc, (glp, gmc),
+                                          use_scan=cfg.scan_layers)
+            h, nk, nv = L.decode_attention_block(
+                shared["attn"], L.rmsnorm(xc, shared["ln1"], cfg.norm_eps),
+                cfg, k_cache=kc, v_cache=vc, idx=idx)
+            xc = xc + h
+            xc = xc + L.mlp_block(shared["mlp"],
+                                  L.rmsnorm(xc, shared["ln2"], cfg.norm_eps),
+                                  cfg)
+            return xc, (new_gmc, nk, nv)
+
+        x, (new_gm, nk, nv) = L._scan_or_loop(
+            group_body, x, (grouped, gm, cache["k"], cache["v"]),
+            use_scan=cfg.scan_layers)
+        new_mamba = jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), new_gm)
+        new_cache = {"idx": idx + 1, "mamba": new_mamba, "k": nk, "v": nv}
+    else:
+        raise ValueError(fam)
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return L.lm_logits(x, head, cfg.compute_dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict):
+    logits = forward(params, cfg, batch["tokens"])
+    loss = L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss, {"loss": loss}

@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    apply_updates,
+    global_norm,
+    sgd,
+)
+
+__all__ = ["Optimizer", "adamw", "apply_updates", "global_norm", "sgd"]

@@ -1,0 +1,106 @@
+"""Pure-JAX optimizers (no optax dependency).
+
+`(init, update)` pairs operating on arbitrary pytrees — including *flat
+sharded* gradient vectors, which is how the ZeRO/GradsSharding trainer uses
+them: each device updates only its |θ|/M shard, so optimizer state is
+O(|θ|/M) per device (the paper's memory bound, applied to the optimizer).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree], tuple[Pytree, Pytree]]
+    # update(grads, opt_state, params) -> (updates, new_state);
+    # apply:  params + updates
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+        params, updates)
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+# ---------------------------------------------------------------------------
+# SGD (+momentum) — the paper's client/server optimizer (lr 0.01, m 0.9)
+# ---------------------------------------------------------------------------
+
+def sgd(lr: float, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params=None):
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr * g, grads), ()
+        new_v = jax.tree.map(
+            lambda v, g: momentum * v + g.astype(jnp.float32), state, grads)
+        if nesterov:
+            step = jax.tree.map(
+                lambda v, g: momentum * v + g.astype(jnp.float32),
+                new_v, grads)
+        else:
+            step = new_v
+        return jax.tree.map(lambda s: -lr * s, step), new_v
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Pytree
+    nu: Pytree
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0,
+          grad_clip_norm: float | None = None) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return AdamState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(z, params), jax.tree.map(z, params))
+
+    def update(grads, state, params):
+        if grad_clip_norm is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, grad_clip_norm / (gn + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state.step + 1
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2)
+            * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            u = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                u = u - lr * weight_decay * p.astype(jnp.float32)
+            return u
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamState(step, mu, nu)
+
+    return Optimizer(init, update)

@@ -1,0 +1,12 @@
+from repro.serverless.runtime import (
+    FaultPlan,
+    InjectedFault,
+    InvocationRecord,
+    LambdaContext,
+    LambdaOOM,
+    LambdaRuntime,
+    LambdaTimeout,
+)
+
+__all__ = ["FaultPlan", "InjectedFault", "InvocationRecord", "LambdaContext",
+           "LambdaOOM", "LambdaRuntime", "LambdaTimeout"]

@@ -1,0 +1,3 @@
+from repro.store.object_store import ObjectStore, StoreStats
+
+__all__ = ["ObjectStore", "StoreStats"]

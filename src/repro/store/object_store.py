@@ -1,0 +1,109 @@
+"""S3-simulating object store.
+
+The communication substrate for all three aggregation architectures (paper:
+"PyWren-style object storage as the data plane"). Tracks every PUT/GET with
+byte counts so benchmarks recover the paper's Table II op counts and dollar
+costs exactly. First-write-wins conditional PUTs give idempotent aggregator
+retries (fault tolerance / speculative straggler duplicates).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+class NoSuchKey(KeyError):
+    pass
+
+
+@dataclass
+class StoreStats:
+    puts: int = 0
+    gets: int = 0
+    deletes: int = 0
+    bytes_written: int = 0
+    bytes_read: int = 0
+    put_log: list = field(default_factory=list)   # (key, nbytes)
+    get_log: list = field(default_factory=list)
+
+    def reset(self) -> None:
+        self.puts = self.gets = self.deletes = 0
+        self.bytes_written = self.bytes_read = 0
+        self.put_log.clear()
+        self.get_log.clear()
+
+
+def _nbytes(value) -> int:
+    if isinstance(value, np.ndarray):
+        return value.nbytes
+    if isinstance(value, (bytes, bytearray)):
+        return len(value)
+    return int(np.asarray(value).nbytes)
+
+
+class ObjectStore:
+    """In-memory object store with S3 semantics (flat keyspace, atomic
+    whole-object PUT/GET, list-by-prefix, eventual-consistency-free)."""
+
+    def __init__(self) -> None:
+        self._objects: dict[str, np.ndarray | bytes] = {}
+        self._lock = threading.Lock()
+        self.stats = StoreStats()
+
+    # -- data plane ---------------------------------------------------------
+    def put(self, key: str, value, *, if_none_match: bool = False) -> bool:
+        """PUT. With ``if_none_match`` (S3 conditional write), the PUT is a
+        no-op if the key exists — first write wins. Returns True if stored."""
+        if isinstance(value, np.ndarray):
+            value = np.ascontiguousarray(value)
+        with self._lock:
+            if if_none_match and key in self._objects:
+                return False
+            self._objects[key] = value
+            self.stats.puts += 1
+            nb = _nbytes(value)
+            self.stats.bytes_written += nb
+            self.stats.put_log.append((key, nb))
+            return True
+
+    def get(self, key: str):
+        with self._lock:
+            if key not in self._objects:
+                raise NoSuchKey(key)
+            value = self._objects[key]
+            self.stats.gets += 1
+            nb = _nbytes(value)
+            self.stats.bytes_read += nb
+            self.stats.get_log.append((key, nb))
+            return value
+
+    def head(self, key: str) -> int:
+        """Metadata-only existence/size check (not billed as a GET here;
+        S3 HEADs are billed like GETs — tracked separately if needed)."""
+        with self._lock:
+            if key not in self._objects:
+                raise NoSuchKey(key)
+            return _nbytes(self._objects[key])
+
+    def exists(self, key: str) -> bool:
+        with self._lock:
+            return key in self._objects
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            self._objects.pop(key, None)
+            self.stats.deletes += 1
+
+    def list(self, prefix: str = "") -> list[str]:
+        with self._lock:
+            return sorted(k for k in self._objects if k.startswith(prefix))
+
+    def total_bytes(self) -> int:
+        with self._lock:
+            return sum(_nbytes(v) for v in self._objects.values())
+
+    def clear(self) -> None:
+        with self._lock:
+            self._objects.clear()

@@ -1,0 +1,7 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# host's single real device. Multi-device tests spawn subprocesses with
+# --xla_force_host_platform_device_count set (see test_distributed.py).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,209 @@
+"""The paper's central claims: bit-identity, op counts, memory, topology."""
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.core import cost_model as cm
+from repro.core.fedavg import streaming_mean
+from repro.core.sharding import make_plan
+from repro.serverless import FaultPlan, LambdaRuntime
+from repro.store import ObjectStore
+
+
+def _grads(n, size, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal(size).astype(np.float32) for _ in range(n)]
+
+
+def _reference_mean(grads):
+    """Single-server streaming FedAvg (the paper's ground truth)."""
+    acc = grads[0].astype(np.float32).copy()
+    for g in grads[1:]:
+        acc += g
+    return acc / len(grads)
+
+
+# ---------------------------------------------------------------------------
+# Aggregation equivalence (paper §III-A3 "Aggregation equivalence")
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [1, 2, 4, 8, 16])
+@pytest.mark.parametrize("partition", ["uniform", "balanced"])
+def test_gradssharding_bit_identical(m, partition):
+    grads = _grads(20, 5_003)
+    store, rt = ObjectStore(), LambdaRuntime()
+    sizes = [1_000, 3, 4_000]  # tensor sizes for balanced
+    r = agg.aggregate_round("gradssharding", grads, rnd=0, store=store,
+                            runtime=rt, n_shards=m, partition=partition,
+                            tensor_sizes=sizes)
+    assert np.array_equal(r.avg_flat, _reference_mean(grads)), \
+        "sharded averaging must be bit-identical to full-vector averaging"
+
+
+@pytest.mark.parametrize("topology", ["lambda_fl", "lifl"])
+@pytest.mark.parametrize("n", [5, 9, 20, 27])
+def test_tree_topologies_equivalent(topology, n):
+    grads = _grads(n, 2_048)
+    store, rt = ObjectStore(), LambdaRuntime()
+    r = agg.aggregate_round(topology, grads, rnd=0, store=store, runtime=rt)
+    # trees reassociate fp additions: mathematically equal, fp-tolerant
+    np.testing.assert_allclose(r.avg_flat, _reference_mean(grads),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_all_three_agree():
+    grads = _grads(20, 4_096)
+    results = {}
+    for topo in ("gradssharding", "lambda_fl", "lifl"):
+        store, rt = ObjectStore(), LambdaRuntime()
+        results[topo] = agg.aggregate_round(topo, grads, rnd=0, store=store,
+                                            runtime=rt, n_shards=4).avg_flat
+    np.testing.assert_allclose(results["gradssharding"],
+                               results["lambda_fl"], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(results["gradssharding"],
+                               results["lifl"], rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# S3 op counts measured == Table II analytical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topology,m", [("gradssharding", 1),
+                                        ("gradssharding", 4),
+                                        ("gradssharding", 16),
+                                        ("lambda_fl", 1), ("lifl", 1)])
+@pytest.mark.parametrize("n", [8, 20])
+def test_measured_ops_match_table_ii(topology, m, n):
+    grads = _grads(n, 512)
+    store, rt = ObjectStore(), LambdaRuntime()
+    r = agg.aggregate_round(topology, grads, rnd=0, store=store, runtime=rt,
+                            n_shards=m)
+    expect = cm.s3_ops(topology, n, m)
+    assert r.puts == expect.puts, (r.puts, expect.puts)
+    assert r.gets == expect.gets, (r.gets, expect.gets)
+
+
+def test_paper_table_vii_op_counts():
+    """N=20, M=4: 84 PUTs + 160 GETs = 244 ops (GradsSharding);
+    25/44 (λ-FL); 31/50 (LIFL)."""
+    assert cm.s3_ops("gradssharding", 20, 4) == cm.S3Ops(84, 80, 80)
+    lfl = cm.s3_ops("lambda_fl", 20)
+    assert (lfl.puts, lfl.gets) == (25, 44)
+    lifl = cm.s3_ops("lifl", 20)
+    assert (lifl.puts, lifl.gets) == (31, 50)
+
+
+# ---------------------------------------------------------------------------
+# Memory: streaming bound + the 3x+450 deployment formula
+# ---------------------------------------------------------------------------
+
+def test_memory_scales_inverse_m():
+    grads = _grads(6, 65_536)  # 256 KB gradient
+    peaks = {}
+    for m in (1, 2, 4):
+        store, rt = ObjectStore(), LambdaRuntime()
+        r = agg.aggregate_round("gradssharding", grads, rnd=0, store=store,
+                                runtime=rt, n_shards=m)
+        peaks[m] = r.peak_memory_mb - rt.limits.runtime_overhead_mb
+    # above-overhead peak halves as M doubles (paper Table V)
+    assert peaks[2] == pytest.approx(peaks[1] / 2, rel=0.05)
+    assert peaks[4] == pytest.approx(peaks[1] / 4, rel=0.05)
+
+
+def test_aggregator_peak_is_3x_input():
+    grads = _grads(5, 262_144)  # 1 MB
+    store, rt = ObjectStore(), LambdaRuntime()
+    r = agg.aggregate_round("gradssharding", grads, rnd=0, store=store,
+                            runtime=rt, n_shards=1)
+    expect_mb = 3 * 1.0 + rt.limits.runtime_overhead_mb
+    assert r.peak_memory_mb == pytest.approx(expect_mb, rel=0.01)
+
+
+# ---------------------------------------------------------------------------
+# Phases / wall clock structure
+# ---------------------------------------------------------------------------
+
+def test_phase_structure():
+    grads = _grads(20, 1_024)
+    walls = {}
+    for topo, phases in (("gradssharding", 1), ("lambda_fl", 2), ("lifl", 3)):
+        store, rt = ObjectStore(), LambdaRuntime()
+        r = agg.aggregate_round(topo, grads, rnd=0, store=store, runtime=rt,
+                                n_shards=4)
+        assert len(r.phases_s) == phases
+        assert r.wall_clock_s == pytest.approx(sum(r.phases_s))
+        walls[topo] = r.wall_clock_s
+    # single-phase concurrent beats multi-phase trees at equal grad size
+    assert walls["gradssharding"] < walls["lambda_fl"] < walls["lifl"]
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance: retry + stragglers
+# ---------------------------------------------------------------------------
+
+def test_aggregator_failure_retried_idempotently():
+    grads = _grads(8, 2_048)
+    faults = FaultPlan(fail={("r0-shard1", 0), ("r0-shard1", 1)})
+    store, rt = ObjectStore(), LambdaRuntime(faults=faults)
+    r = agg.aggregate_round("gradssharding", grads, rnd=0, store=store,
+                            runtime=rt, n_shards=4)
+    assert np.array_equal(r.avg_flat, _reference_mean(grads))
+    attempts = [rec for rec in rt.records if rec.fn_name == "r0-shard1"]
+    assert len(attempts) == 3 and attempts[-1].failed is False
+
+
+def test_all_attempts_fail_raises():
+    grads = _grads(4, 256)
+    faults = FaultPlan(fail={("r0-shard0", a) for a in range(5)})
+    store, rt = ObjectStore(), LambdaRuntime(faults=faults)
+    with pytest.raises(RuntimeError, match="attempts failed"):
+        agg.aggregate_round("gradssharding", grads, rnd=0, store=store,
+                            runtime=rt, n_shards=2)
+
+
+def test_straggler_speculative_duplicate():
+    grads = _grads(8, 2_048)
+    faults = FaultPlan(slow={("r0-shard0", 0): 25.0})  # 25x straggler
+    store, rt = ObjectStore(), LambdaRuntime(faults=faults)
+    r = agg.aggregate_round("gradssharding", grads, rnd=0, store=store,
+                            runtime=rt, n_shards=2,
+                            straggler_threshold_s=1.0)
+    assert np.array_equal(r.avg_flat, _reference_mean(grads))
+    spec = [rec for rec in rt.records if rec.speculative]
+    assert spec, "speculative duplicate should have been launched"
+    # wall clock reflects the duplicate, not the straggler
+    slow = [rec for rec in rt.records
+            if rec.fn_name == "r0-shard0" and not rec.speculative]
+    assert r.wall_clock_s < slow[0].duration_s
+
+
+# ---------------------------------------------------------------------------
+# LIFL colocation fast path
+# ---------------------------------------------------------------------------
+
+def test_lifl_colocated_fewer_s3_ops_and_faster():
+    grads = _grads(20, 65_536)
+    store1, rt1 = ObjectStore(), LambdaRuntime()
+    r_lambda = agg.lifl_round(grads, rnd=0, store=store1, runtime=rt1,
+                              colocated=False)
+    store2, rt2 = ObjectStore(), LambdaRuntime()
+    r_coloc = agg.lifl_round(grads, rnd=0, store=store2, runtime=rt2,
+                             colocated=True)
+    np.testing.assert_allclose(r_coloc.avg_flat, r_lambda.avg_flat,
+                               rtol=1e-6)
+    assert r_coloc.puts < r_lambda.puts
+    assert r_coloc.wall_clock_s < r_lambda.wall_clock_s
+
+
+# ---------------------------------------------------------------------------
+# streaming_mean core
+# ---------------------------------------------------------------------------
+
+def test_streaming_mean_weighted():
+    xs = [np.full(4, 1.0, np.float32), np.full(4, 3.0, np.float32)]
+    out = streaming_mean(xs, weights=[1.0, 3.0])
+    np.testing.assert_allclose(out, np.full(4, 2.5))
+    out_u = streaming_mean(xs)
+    np.testing.assert_allclose(out_u, np.full(4, 2.0))
+    with pytest.raises(ValueError):
+        streaming_mean([])

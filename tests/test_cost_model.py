@@ -1,0 +1,172 @@
+"""Analytical cost model vs the paper's published numbers (Tables II–VII)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import LambdaLimits
+from repro.core import cost_model as cm
+
+MB = 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# Table II formulas
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(2, 500), m=st.integers(1, 128))
+@settings(max_examples=200, deadline=None)
+def test_gradssharding_ops_formula(n, m):
+    ops = cm.s3_ops("gradssharding", n, m)
+    assert ops.puts == n * m + m
+    assert ops.gets == 2 * n * m
+    assert ops.total == 3 * n * m + m          # the paper's 3NM + M
+
+
+@given(n=st.integers(2, 500))
+@settings(max_examples=100, deadline=None)
+def test_lambda_fl_ops_formula(n):
+    k = cm.lambda_fl_branching(n)
+    leaves = math.ceil(n / k)
+    ops = cm.s3_ops("lambda_fl", n)
+    assert ops.puts == n + leaves + 1
+    assert ops.gets == n + leaves + n
+
+
+def test_lifl_levels_n20():
+    assert cm.lifl_levels(20) == (7, 3)        # paper: 7 L1 + 3 L2 + 1 root
+    assert cm.n_aggregators("lifl", 20) == 11
+    assert cm.n_aggregators("lambda_fl", 20) == 5
+    assert cm.lambda_fl_branching(20) == 5
+
+
+# ---------------------------------------------------------------------------
+# Memory formulas and the feasibility wall
+# ---------------------------------------------------------------------------
+
+def test_feasibility_wall_is_3263mb():
+    assert cm.max_feasible_grad_mb() == pytest.approx(3263.33, abs=0.1)
+
+
+def test_paper_memory_numbers():
+    """Table VII memory column, exact."""
+    cases = [
+        ("gradssharding", 42.7, 4, 482.0),     # resnet: 3*10.675+450
+        ("lambda_fl", 512.3, 1, 1987.0),
+        ("gradssharding", 512.3, 4, 835.0),
+        ("gradssharding", 2953.0, 4, 2665.0),
+        ("gradssharding", 5120.0, 8, 2370.0),
+        ("lambda_fl", 2953.0, 1, 9309.0),
+        ("lambda_fl", 5120.0, 1, 15810.0),
+    ]
+    for topo, grad_mb, m, expect in cases:
+        got = cm.lambda_memory_mb(topo, int(grad_mb * MB), m)
+        assert got == pytest.approx(expect, abs=2.0), (topo, grad_mb, m)
+
+
+def test_feasibility_decisions_match_paper():
+    gpt2l = int(2953 * MB)
+    syn5 = int(5120 * MB)
+    assert cm.feasible("lambda_fl", gpt2l)            # 9,309 < 10,240 (91%)
+    assert not cm.feasible("lambda_fl", syn5)         # 15,810 > 10,240
+    assert not cm.feasible("lifl", syn5)
+    assert cm.feasible("gradssharding", gpt2l, 4)
+    assert cm.feasible("gradssharding", syn5, 8)
+
+
+@given(grad_mb=st.floats(1, 200_000))
+@settings(max_examples=100, deadline=None)
+def test_min_shards_always_exists(grad_mb):
+    m = cm.min_shards_for(int(grad_mb * MB))
+    assert cm.feasible("gradssharding", int(grad_mb * MB), m)
+
+
+@given(grad=st.integers(MB, 100 * 1024 * MB), m=st.integers(1, 256))
+@settings(max_examples=100, deadline=None)
+def test_memory_monotone_in_m(grad, m):
+    a = cm.lambda_memory_mb("gradssharding", grad, m)
+    b = cm.lambda_memory_mb("gradssharding", grad, 2 * m)
+    assert b <= a
+    stream = cm.streaming_memory_bytes("gradssharding", grad, m)
+    assert stream == 2 * math.ceil(grad / m)
+
+
+# ---------------------------------------------------------------------------
+# Cost reproduction (Tables VI/VII shapes)
+# ---------------------------------------------------------------------------
+
+def test_vgg16_cost_crossover():
+    """Paper: at VGG-16 scale GradsSharding ~2.7x cheaper than λ-FL."""
+    vgg = int(512.3 * MB)
+    g = cm.round_cost("gradssharding", vgg, 20, 4)
+    l = cm.round_cost("lambda_fl", vgg, 20)
+    ratio = l.total_cost / g.total_cost
+    assert 2.0 < ratio < 3.5, ratio
+    assert g.wall_clock_s < l.wall_clock_s
+
+
+def test_resnet_scale_lambda_fl_cheapest():
+    """Paper: below ~500 MB λ-FL wins on S3 op count."""
+    resnet = int(42.7 * MB)
+    g = cm.round_cost("gradssharding", resnet, 20, 4)
+    l = cm.round_cost("lambda_fl", resnet, 20)
+    assert l.total_cost < g.total_cost
+    assert g.wall_clock_s < l.wall_clock_s     # but sharding is fastest
+
+
+def test_cost_crossover_region():
+    """Crossover where GradsSharding becomes cheaper: ~500 MB (paper)."""
+    def cheaper_at(mb):
+        b = int(mb * MB)
+        return (cm.round_cost("gradssharding", b, 20, 4).total_cost
+                < cm.round_cost("lambda_fl", b, 20).total_cost)
+    assert not cheaper_at(43)
+    assert cheaper_at(512)
+    # crossover lies between
+    lo, hi = 43, 512
+    for _ in range(20):
+        mid = (lo + hi) / 2
+        if cheaper_at(mid):
+            hi = mid
+        else:
+            lo = mid
+    assert 50 < hi < 520
+
+
+def test_sweep_speedup_near_linear():
+    """Paper Table VI: concurrent execution -> near-linear speedup with M
+    (16.2x measured at M=16; the per-GET latency floor makes it slightly
+    sublinear in the model, as in reality)."""
+    vgg = int(512.3 * MB)
+    t1 = cm.round_cost("gradssharding", vgg, 20, 1).wall_clock_s
+    t16 = cm.round_cost("gradssharding", vgg, 20, 16).wall_clock_s
+    assert 12 < t1 / t16 <= 16.5
+
+
+def test_fixed_memory_sweep_cost_premium():
+    """Paper RQ2-B deploys 3,008 MB at every M: latency buys a modest cost
+    premium (19% at M=16 in the paper; the exact M=4 hump of Table VI is
+    within their run variance)."""
+    vgg = int(512.3 * MB)
+    costs = {m: cm.round_cost("gradssharding", vgg, 20, m,
+                              memory_mb_override=3008.0).total_cost
+             for m in (1, 2, 4, 8, 16)}
+    assert costs[1] < costs[16]                # M=1 cheapest
+    assert costs[16] < 1.35 * costs[1]         # premium stays modest
+
+
+def test_s3_io_grows_linearly_with_m():
+    vgg = int(512.3 * MB)
+    s3 = [cm.round_cost("gradssharding", vgg, 20, m).s3_cost
+          for m in (1, 2, 4, 8, 16)]
+    for a, b in zip(s3, s3[1:]):
+        assert b == pytest.approx(2 * a, rel=0.1)
+
+
+def test_io_dominates_time():
+    """Paper: S3 reads are 91-99% of aggregation time."""
+    for mb in (42.7, 512.3, 2953.0):
+        rc = cm.round_cost("gradssharding", int(mb * MB), 20, 4)
+        t = rc.phase_timings[0]
+        assert t.read_s / t.total_s > 0.9

@@ -1,0 +1,142 @@
+"""End-to-end federated learning over the serverless substrate.
+
+N clients train a small CNN locally (synthetic vision), gradients are
+aggregated through the simulated-Lambda topologies, the global model
+improves — and all three architectures produce the same trajectory.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation as agg
+from repro.core.fedavg import model_delta, apply_delta, local_sgd_update
+from repro.core.sharding import FlatSpec, flatten, unflatten
+from repro.data import SyntheticVision, dirichlet_partition
+from repro.models import cnn
+from repro.serverless import LambdaRuntime
+from repro.store import ObjectStore
+
+
+CFG = cnn.CNNConfig(n_classes=4, channels=(8, 16), blocks_per_stage=1,
+                    img_size=8)
+DATA = SyntheticVision(n_classes=4, img_size=8, seed=0, noise=0.4)
+
+
+def _loss_fn(params, batch):
+    return cnn.loss_fn(params, CFG, batch)
+
+
+def run_federated(topology: str, rounds: int = 3, n_clients: int = 4,
+                  n_shards: int = 4, seed: int = 0, local_steps: int = 4):
+    params = cnn.init_params(jax.random.PRNGKey(seed), CFG)
+    store, rt = ObjectStore(), LambdaRuntime()
+    accs = []
+    spec = None
+    for rnd in range(rounds):
+        deltas = []
+        for c in range(n_clients):
+            local, vel = params, None
+            for step in range(local_steps):    # local epochs
+                batch = DATA.batch(c, rnd * 10 + step, 32)
+                local, vel, _ = local_sgd_update(_loss_fn, local, batch,
+                                                 lr=0.05, momentum=0.9,
+                                                 velocity=vel)
+            deltas.append(model_delta(params, local))
+        flats = []
+        for d in deltas:
+            f, spec = flatten(d)
+            flats.append(np.asarray(f))
+        r = agg.aggregate_round(topology, flats, rnd=rnd, store=store,
+                                runtime=rt, n_shards=n_shards)
+        params = apply_delta(params, unflatten(jnp.asarray(r.avg_flat),
+                                               spec))
+        test = DATA.batch(99, 999, 128)
+        _, m = cnn.loss_fn(params, CFG, test)
+        accs.append(float(m["acc"]))
+    return params, accs
+
+
+def test_federated_training_improves():
+    _, accs = run_federated("gradssharding", rounds=6)
+    assert accs[-1] > 0.5, accs               # 4-class: chance = 0.25
+    assert accs[-1] >= accs[0] - 0.05
+
+
+def test_topologies_produce_same_model():
+    p1, _ = run_federated("gradssharding", rounds=2)
+    p2, _ = run_federated("lambda_fl", rounds=2)
+    p3, _ = run_federated("lifl", rounds=2)
+    f1, _ = flatten(p1)
+    f2, _ = flatten(p2)
+    f3, _ = flatten(p3)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f3),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_noniid_dirichlet_still_learns():
+    labels = np.random.default_rng(0).integers(0, 4, 2000)
+    parts = dirichlet_partition(labels, 4, alpha=0.5, seed=1)
+    params = cnn.init_params(jax.random.PRNGKey(0), CFG)
+    store, rt = ObjectStore(), LambdaRuntime()
+    for rnd in range(8):
+        flats = []
+        spec = None
+        for c in range(4):
+            client_labels = labels[parts[c][:32]]
+            local, vel = params, None
+            for step in range(2):
+                batch = DATA.batch(c, rnd * 2 + step, 32,
+                                   labels=client_labels)
+                local, vel, _ = local_sgd_update(_loss_fn, local, batch,
+                                                 lr=0.05, momentum=0.9,
+                                                 velocity=vel)
+            f, spec = flatten(model_delta(params, local))
+            flats.append(np.asarray(f))
+        r = agg.aggregate_round("gradssharding", flats, rnd=rnd,
+                                store=store, runtime=rt, n_shards=2)
+        params = apply_delta(params, unflatten(jnp.asarray(r.avg_flat),
+                                               spec))
+    test = DATA.batch(99, 999, 128)
+    _, m = cnn.loss_fn(params, CFG, test)
+    assert float(m["acc"]) > 0.4
+
+
+def test_lm_federated_round_with_transformer():
+    """The paper's aggregation is model-agnostic: run one round with a tiny
+    transformer LM gradient through all three topologies."""
+    from repro.configs import get_arch
+    from repro.models import registry as R
+    cfg = dataclasses.replace(get_arch("tinyllama-1.1b").smoke, n_layers=2,
+                              remat=False)
+    params = R.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    flats, spec = [], None
+    for c in range(4):
+        toks = rng.integers(0, cfg.vocab, (2, 17))
+        batch = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+                 "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+        _, grads = jax.value_and_grad(R.loss_fn, has_aux=True)(
+            params, cfg, batch)
+        f, spec = flatten(grads)
+        flats.append(np.asarray(f))
+    outs = {}
+    for topo in ("gradssharding", "lambda_fl", "lifl"):
+        store, rt = ObjectStore(), LambdaRuntime()
+        outs[topo] = agg.aggregate_round(topo, flats, rnd=0, store=store,
+                                         runtime=rt, n_shards=4).avg_flat
+    np.testing.assert_allclose(outs["gradssharding"], outs["lambda_fl"],
+                               rtol=1e-5, atol=1e-6)
+    # applying the averaged delta must keep the model finite
+    new = apply_delta(params, unflatten(jnp.asarray(
+        outs["gradssharding"]), spec), scale=0.01)
+    toks = rng.integers(0, cfg.vocab, (2, 17))
+    loss, _ = R.loss_fn(new, cfg, {
+        "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+        "labels": jnp.asarray(toks[:, 1:], jnp.int32)})
+    assert bool(jnp.isfinite(loss))

@@ -1,0 +1,115 @@
+"""Lambda runtime semantics: memory cap, billing, cold starts, timeouts."""
+import numpy as np
+import pytest
+
+from repro.config import LambdaLimits
+from repro.serverless import (
+    FaultPlan,
+    LambdaOOM,
+    LambdaRuntime,
+    LambdaTimeout,
+)
+from repro.store import ObjectStore
+
+MB = 1024 * 1024
+
+
+def test_oom_when_buffers_exceed_allocation():
+    rt = LambdaRuntime()
+
+    def body(ctx):
+        ctx.alloc(600 * MB)
+
+    with pytest.raises(LambdaOOM):
+        rt.invoke(body, fn_name="f", memory_mb=1000)   # 450 overhead + 600
+
+
+def test_fits_with_enough_memory():
+    rt = LambdaRuntime()
+
+    def body(ctx):
+        ctx.alloc(500 * MB)
+        ctx.free(500 * MB)
+        return "ok"
+
+    out, rec = rt.invoke(body, fn_name="f", memory_mb=1000)
+    assert out == "ok"
+    assert rec.peak_memory_mb == pytest.approx(950, rel=0.01)
+
+
+def test_platform_max_rejected():
+    rt = LambdaRuntime()
+    with pytest.raises(LambdaOOM, match="platform max"):
+        rt.invoke(lambda ctx: None, fn_name="f", memory_mb=20_000)
+
+
+def test_timeout_enforced():
+    rt = LambdaRuntime()
+    store = ObjectStore()
+    store.put("big", np.zeros(200 * MB // 4, np.float32))
+
+    def body(ctx):
+        for _ in range(300):
+            ctx.get(store, "big")
+
+    with pytest.raises(LambdaTimeout):
+        rt.invoke(body, fn_name="f", memory_mb=2000, timeout_s=300)
+
+
+def test_billing_memory_times_duration():
+    rt = LambdaRuntime()
+    store = ObjectStore()
+    store.put("x", np.zeros(52 * MB // 4, np.float32))  # 52 MB -> 1 s read
+
+    def body(ctx):
+        ctx.get(store, "x")
+
+    _, rec = rt.invoke(body, fn_name="f", memory_mb=1024)
+    # cold start (3 s) + ~1 s read
+    assert rec.duration_s == pytest.approx(4.0, rel=0.05)
+    assert rec.billed_gb_s == pytest.approx(rec.duration_s * 1.0, rel=0.01)
+    assert rec.cold_start
+
+
+def test_warm_invocations_skip_cold_start():
+    rt = LambdaRuntime()
+    _, r1 = rt.invoke(lambda ctx: None, fn_name="f", memory_mb=512)
+    _, r2 = rt.invoke(lambda ctx: None, fn_name="f", memory_mb=512)
+    assert r1.cold_start and not r2.cold_start
+    assert r2.duration_s < r1.duration_s
+
+
+def test_injected_fault_recorded_not_raised():
+    rt = LambdaRuntime(faults=FaultPlan(fail={("f", 0)}))
+    out, rec = rt.invoke(lambda ctx: "ok", fn_name="f", memory_mb=512)
+    assert out is None and rec.failed
+
+
+def test_invoke_reliable_retries():
+    rt = LambdaRuntime(faults=FaultPlan(fail={("f", 0)}))
+    out, rec = rt.invoke_reliable(lambda ctx: "ok", fn_name="f",
+                                  memory_mb=512)
+    assert out == "ok" and rec.attempt == 1
+    assert rt.total_cost() > 0                  # failed attempt still billed
+
+
+def test_store_first_write_wins():
+    store = ObjectStore()
+    assert store.put("k", np.ones(4), if_none_match=True)
+    assert not store.put("k", np.zeros(4), if_none_match=True)
+    np.testing.assert_array_equal(store.get("k"), np.ones(4))
+    assert store.put("k", np.zeros(4))          # unconditional overwrites
+
+
+def test_store_accounting():
+    store = ObjectStore()
+    arr = np.zeros(1024, np.float32)
+    store.put("a", arr)
+    store.get("a")
+    store.get("a")
+    assert store.stats.puts == 1 and store.stats.gets == 2
+    assert store.stats.bytes_written == arr.nbytes
+    assert store.stats.bytes_read == 2 * arr.nbytes
+    assert store.list("a") == ["a"]
+    store.delete("a")
+    assert not store.exists("a")
