@@ -12,6 +12,15 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
 
 
+def emit_timing(name: str, seconds: float, **derived) -> None:
+    """emit() for host wall-clock measurements: seconds in, k=v;k=v derived
+    fields formatted uniformly (floats to 4 significant digits)."""
+    parts = []
+    for k, v in derived.items():
+        parts.append(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}")
+    emit(name, seconds * 1e6, ";".join(parts))
+
+
 def header() -> None:
     print("name,us_per_call,derived")
 

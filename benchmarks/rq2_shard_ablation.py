@@ -9,12 +9,14 @@ quantities are rescaled.
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from benchmarks.common import emit, table
 from repro.config import LambdaLimits
 from repro.core import cost_model as cm
-from repro.core.sharding import plan_uniform, shard
+from repro.core.sharding import plan_uniform, shard_views
 
 MB = 1024 * 1024
 N = 20
@@ -38,12 +40,13 @@ def main() -> None:
             # collect-then-average: N shards + result live simultaneously
             measured_mem = (N + 1) * shard_mb
             stream_mem = 2 * shard_mb
-            import time
             t0 = time.perf_counter()
+            # zero-copy shard views: plan sliced once per client, not once
+            # per (client, aggregator) pair as the eager seed loop did
+            views = [shard_views(g, plan) for g in grads]
             outs = []
             for j in range(m):                     # sequential (HPC mode)
-                parts = [shard(g, plan)[j] for g in grads]
-                buf = np.stack(parts)              # collect
+                buf = np.stack([v[j].materialize() for v in views])  # collect
                 outs.append(buf.mean(axis=0))      # then average
             compute_s = time.perf_counter() - t0
             got = np.concatenate(outs)

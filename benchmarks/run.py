@@ -8,6 +8,7 @@ import sys
 import traceback
 
 from benchmarks import (
+    agg_engine_bench,
     kernels_bench,
     roofline,
     rq1_idle,
@@ -24,6 +25,7 @@ BENCHES = [
     ("rq2_shard_ablation (Table V)", rq2_shard_ablation.main),
     ("rq2b_lambda_sweep (Table VI)", rq2b_lambda_sweep.main),
     ("rq3_cross_arch (Table VII)", rq3_cross_arch.main),
+    ("agg_engine (engines)", agg_engine_bench.main),
     ("kernels", kernels_bench.main),
     ("roofline (§Roofline)", roofline.main),
 ]

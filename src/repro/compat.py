@@ -1,0 +1,42 @@
+"""Version compatibility shims for the jax 0.4.x ↔ ≥0.5 API split.
+
+* ``shard_map`` moved from ``jax.experimental.shard_map`` (0.4.x, keyword
+  ``check_rep``) to ``jax.shard_map`` (≥0.5, keyword ``check_vma``).
+* ``jax.sharding.AxisType`` (and ``jax.make_mesh(..., axis_types=...)``)
+  only exist on ≥0.5; 0.4.x meshes are implicitly Auto.
+
+Import from here so call sites run on either version.
+"""
+from __future__ import annotations
+
+import jax
+
+try:                                     # jax >= 0.5: native, takes check_vma
+    from jax import shard_map as _shard_map
+    _NATIVE = True
+except ImportError:                      # jax 0.4.x: experimental, check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _NATIVE = False
+
+try:
+    from jax.sharding import AxisType as _AxisType
+except ImportError:                      # jax 0.4.x: implicitly Auto
+    _AxisType = None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+              **kwargs):
+    if _NATIVE:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma, **kwargs)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, **kwargs)
+
+
+def make_auto_mesh(shape, axes):
+    """``jax.make_mesh`` with every axis in Auto mode — explicitly on ≥0.5,
+    implicitly (no ``axis_types`` kwarg) on 0.4.x."""
+    if _AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(_AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)

@@ -1,3 +1,11 @@
-from repro.core import aggregation, cost_model, device_agg, fedavg, sharding
+from repro.core import (
+    agg_engine,
+    aggregation,
+    cost_model,
+    device_agg,
+    fedavg,
+    sharding,
+)
 
-__all__ = ["aggregation", "cost_model", "device_agg", "fedavg", "sharding"]
+__all__ = ["agg_engine", "aggregation", "cost_model", "device_agg", "fedavg",
+           "sharding"]

@@ -1,0 +1,498 @@
+"""Pluggable aggregation execution engines.
+
+The simulated-Lambda aggregation path has two concerns that this module
+separates:
+
+  * **modeled platform accounting** — S3 op counts, transfer/compute time,
+    billed GB-s, peak memory. Always per-invocation, always identical.
+  * **actual arithmetic** — the real numpy averaging whose result feeds the
+    bit-identity checks and the training loop.
+
+Two backends implement the same primitive-op protocol:
+
+  * ``"streaming"`` — the reference. Arithmetic runs inline inside each
+    simulated invocation, one contribution at a time (the paper's two-buffer
+    aggregator). This is the seed implementation, byte for byte.
+  * ``"batched"`` — the fast path. Invocation bodies run with *lazy handles*
+    (size-typed placeholders); at round end the recorded DAG of averages is
+    evaluated in one chunked, cache-resident pass that keeps accumulators in
+    L2-sized blocks, fuses all phases of a topology per chunk (tree partials
+    never round-trip through DRAM), threads across disjoint element ranges,
+    and — when a TPU is present (or ``REPRO_AGG_PALLAS=1``) — dispatches
+    unweighted shard averages to the Pallas ``fedavg_multi`` kernel.
+
+Both backends drive the **same invocation body template**, so every
+accounting field (``puts``/``gets``, ``billed_gb_s``, ``peak_memory_mb``,
+``duration_s``, phase walls) is identical by construction. The batched
+numpy evaluator replays the exact per-element IEEE operation sequence of
+the streaming reference (left-fold accumulate, single divide, f32 cast), so
+``avg_flat`` is **bit-identical** — the paper's invariance-by-construction
+property, enforced in ``tests/test_agg_engine.py``.
+
+Caveat: the Pallas path shares the accumulation order but may differ by
+≤1 ulp in the final division (XLA reciprocal strength-reduction), and in
+interpret mode (non-TPU hosts) it is far slower than the numpy evaluator —
+hence it is only auto-enabled on TPU backends.
+
+Selection: pass ``engine="streaming" | "batched"`` to ``aggregate_round``
+(or any topology function), or set ``REPRO_AGG_ENGINE`` in the environment;
+the default is ``"batched"``.
+"""
+from __future__ import annotations
+
+import os
+from concurrent.futures import ThreadPoolExecutor
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.sharding import PartitionPlan, ShardView, shard, shard_views
+from repro.store import ObjectStore
+
+# Fold-chunk size in elements: 256 K elements = 1 MB f32 / 2 MB f64, small
+# enough that the running accumulator stays cache-resident (measured ~1.6x
+# over full-size temporaries on 2-core hosts, more where DRAM is slower).
+CHUNK_ELEMS = 1 << 18
+# Below this many total elements the evaluator stays single-threaded (the
+# pool costs more than it saves on test-sized arrays).
+PARALLEL_MIN_ELEMS = 1 << 21
+_MAX_WORKERS = max(1, min(4, os.cpu_count() or 1))
+
+_pool: ThreadPoolExecutor | None = None
+
+
+def _get_pool() -> ThreadPoolExecutor:
+    global _pool
+    if _pool is None:
+        _pool = ThreadPoolExecutor(max_workers=_MAX_WORKERS)
+    return _pool
+
+
+# ---------------------------------------------------------------------------
+# Lazy values
+# ---------------------------------------------------------------------------
+
+def _size_of(x) -> int:
+    return int(x.shape[0])
+
+
+def _chunk_of(x, s: int, e: int) -> np.ndarray:
+    """Chunk [s, e) of an input: ndarray slice, ShardView gather, or a lazy
+    node's already-evaluated output slice."""
+    if isinstance(x, LazyAverage):
+        return x.out[s:e]
+    if isinstance(x, ShardView):
+        return x.read(s, e)
+    return x[s:e]
+
+
+class _PendingAcc:
+    """Accumulator under construction inside a deferred invocation body.
+
+    Only its byte size matters to the runtime: f64 while accumulating a
+    weighted mean (matching the streaming reference's float64 running sum),
+    f32 otherwise.
+    """
+
+    __slots__ = ("inputs", "weighted", "size")
+
+    def __init__(self, first, weighted: bool):
+        self.inputs = [first]
+        self.weighted = weighted
+        self.size = _size_of(first)
+
+    @property
+    def nbytes(self) -> int:
+        return (8 if self.weighted else 4) * self.size
+
+
+class LazyAverage:
+    """Deferred (weighted) streaming mean of its inputs.
+
+    Inputs are ndarrays, :class:`ShardView` s, or other ``LazyAverage``
+    nodes (tree topologies) — the captured objects themselves, so
+    materialization never re-reads the object store. ``out`` is filled by
+    the chunked DAG evaluator; until then the handle stands in for the f32
+    result array in the store (same ``nbytes``/``shape``/``dtype``).
+    """
+
+    __slots__ = ("inputs", "weights", "size", "out")
+
+    dtype = np.dtype(np.float32)
+
+    def __init__(self, inputs: list, weights: list[float] | None):
+        self.inputs = inputs
+        self.weights = weights
+        self.size = _size_of(inputs[0]) if inputs else 0
+        self.out: np.ndarray | None = None
+
+    @property
+    def shape(self) -> tuple:
+        return (self.size,)
+
+    @property
+    def nbytes(self) -> int:
+        return 4 * self.size
+
+    def _ancestors(self) -> list["LazyAverage"]:
+        seen, order = set(), []
+
+        def visit(node):
+            if id(node) in seen:
+                return
+            seen.add(id(node))
+            for x in node.inputs:
+                if isinstance(x, LazyAverage) and x.out is None:
+                    visit(x)
+            order.append(node)
+
+        visit(self)
+        return order
+
+    def materialize(self) -> np.ndarray:
+        if self.out is None:
+            _evaluate_nodes(self._ancestors())
+        return self.out
+
+
+def _materialize(x):
+    if isinstance(x, np.ndarray):
+        return x
+    if hasattr(x, "materialize"):
+        return x.materialize()
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Chunked DAG evaluator (bit-identical to the streaming reference)
+# ---------------------------------------------------------------------------
+
+class _Scratch:
+    """Per-worker fold buffers, reused across chunks and nodes."""
+
+    __slots__ = ("acc32", "acc64", "buf64")
+
+    def __init__(self, chunk: int):
+        self.acc32 = np.empty(chunk, np.float32)
+        self.acc64 = np.empty(chunk, np.float64)
+        self.buf64 = np.empty(chunk, np.float64)
+
+
+def _node_chunk(nd: LazyAverage, s: int, e: int, scr: _Scratch) -> None:
+    """Evaluate node ``nd`` over elements [s, e).
+
+    Replays the exact IEEE op sequence of :class:`StreamingBackend`:
+    unweighted — f32 left-fold then one f32 divide; weighted — f64
+    ``x_i * w_i`` left-fold, one f64 divide by ``float(sum(w))``, f32 cast.
+    """
+    m = e - s
+    ins = nd.inputs
+    if nd.weights is None:
+        acc = scr.acc32[:m]
+        np.copyto(acc, _chunk_of(ins[0], s, e))
+        for x in ins[1:]:
+            np.add(acc, _chunk_of(x, s, e), out=acc)
+        np.divide(acc, np.float32(float(len(ins))), out=nd.out[s:e])
+    else:
+        # dtype=np.float64 forces the f64 ufunc loop (cast-then-multiply in
+        # one buffered pass) on every numpy scalar-promotion regime — the
+        # streaming reference's ``arr.astype(np.float64) * w``. A weight of
+        # exactly 1.0 scales exactly, so the multiply is skipped and the
+        # cast fuses into the accumulate.
+        acc, buf = scr.acc64[:m], scr.buf64[:m]
+        w = nd.weights
+        if w[0] == 1.0:
+            np.copyto(acc, _chunk_of(ins[0], s, e))
+        else:
+            np.multiply(_chunk_of(ins[0], s, e), w[0], out=acc,
+                        dtype=np.float64)
+        for i in range(1, len(ins)):
+            if w[i] == 1.0:
+                np.add(acc, _chunk_of(ins[i], s, e), out=acc,
+                       dtype=np.float64)
+            else:
+                np.multiply(_chunk_of(ins[i], s, e), w[i], out=buf,
+                            dtype=np.float64)
+                np.add(acc, buf, out=acc)
+        np.divide(acc, float(sum(w)), out=buf)
+        nd.out[s:e] = buf          # f64 -> f32 cast, same as astype
+
+
+def _evaluate_nodes(nodes: Sequence[LazyAverage],
+                    chunk: int = CHUNK_ELEMS) -> None:
+    """Fill ``out`` for every pending node.
+
+    Nodes are grouped by element count; within a group they are kept in
+    creation (= phase/topological) order and evaluated chunk-by-chunk, all
+    nodes per chunk, so a tree's level-2 fold reads its level-1 partials
+    while those chunks are still cache-hot, and partials hit DRAM exactly
+    once (their final f32 write). Disjoint element ranges go to worker
+    threads; chunking is element-wise so the result is bit-identical
+    regardless of chunk size or thread count.
+    """
+    pending = [nd for nd in nodes if nd.out is None]
+    if not pending:
+        return
+    groups: dict[int, list[LazyAverage]] = {}
+    for nd in pending:
+        nd.out = np.empty(nd.size, np.float32)
+        groups.setdefault(nd.size, []).append(nd)
+
+    for size, group in groups.items():
+        if size == 0:
+            continue
+
+        def run(lo: int, hi: int, group=group):
+            scr = _Scratch(chunk)
+            for s in range(lo, hi, chunk):
+                e = min(s + chunk, hi)
+                for nd in group:
+                    _node_chunk(nd, s, e, scr)
+
+        if size >= PARALLEL_MIN_ELEMS and _MAX_WORKERS > 1:
+            span = -(-size // _MAX_WORKERS)
+            span += (-span) % chunk               # align splits to chunks
+            tasks = [(lo, min(lo + span, size))
+                     for lo in range(0, size, span)]
+            list(_get_pool().map(lambda t: run(*t), tasks))
+        else:
+            run(0, size)
+
+
+# ---------------------------------------------------------------------------
+# Invocation body templates (shared by both backends)
+# ---------------------------------------------------------------------------
+
+def _avg_body(backend: "ExecutionBackend", store: ObjectStore,
+              in_keys: Sequence[str], out_key: str,
+              weights: Sequence[float] | None = None):
+    """Read one contribution at a time, hold (sum, incoming) buffers, write
+    mean. Accumulation order = in_keys order (bit-reproducible). The ctx
+    models the paper's 3×input+450 MB peak: sum buffer + incoming buffer +
+    transient deserialization copy. The backend supplies the arithmetic
+    (inline numpy or lazy handles); every ctx call is identical either way.
+    """
+
+    def body(ctx):
+        acc = None
+        n = len(in_keys)
+        for i, key in enumerate(in_keys):
+            arr = ctx.get(store, key)                 # transient tracked
+            ctx.alloc(backend.nbytes(arr))            # incoming buffer
+            if acc is None:
+                acc = backend.init_acc(arr, weights)
+                ctx.alloc(backend.nbytes(acc))
+            else:
+                acc = backend.accumulate(acc, arr, i, weights)
+                ctx.compute(backend.nbytes(arr))
+            ctx.free(backend.nbytes(arr))             # incoming released
+        out = backend.finalize(acc, weights, n)
+        ctx.compute(backend.nbytes(out))
+        ctx.put(store, out_key, out, if_none_match=True)  # idempotent
+        ctx.free(backend.nbytes(out))
+        return out
+
+    return body
+
+
+def _colocated_body(backend: "ExecutionBackend", shared_mem: dict,
+                    store: ObjectStore, in_keys: Sequence[str],
+                    weights: Sequence[float], out_key: str, is_global: bool):
+    """LIFL shared-memory fast path: read partials from node-local memory
+    (no S3, no transfer time); only the global result is PUT."""
+
+    def body(ctx):
+        acc = None
+        for i, key in enumerate(in_keys):
+            arr = shared_mem[key]                     # no S3, no transfer
+            if acc is None:
+                acc = backend.init_acc(arr, weights)
+                ctx.alloc(backend.nbytes(acc))
+            else:
+                acc = backend.accumulate(acc, arr, i, weights)
+                ctx.compute(backend.nbytes(arr))
+        out = backend.finalize(acc, weights, len(in_keys))
+        ctx.compute(backend.nbytes(out))
+        if is_global:
+            ctx.put(store, out_key, out, if_none_match=True)
+        else:
+            shared_mem[out_key] = out
+        ctx.free(backend.nbytes(out))
+        return out
+
+    return body
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+class ExecutionBackend:
+    """Primitive-op protocol an engine implements (see module docstring)."""
+
+    name = "?"
+
+    # -- arithmetic primitives used by the body templates --------------------
+    def init_acc(self, arr, weights):
+        raise NotImplementedError
+
+    def accumulate(self, acc, arr, i, weights):
+        raise NotImplementedError
+
+    def finalize(self, acc, weights, n):
+        raise NotImplementedError
+
+    def nbytes(self, x) -> int:
+        return int(x.nbytes)
+
+    # -- body construction ---------------------------------------------------
+    def avg_body(self, store, in_keys, out_key, weights=None):
+        return _avg_body(self, store, in_keys, out_key, weights)
+
+    def colocated_body(self, shared_mem, store, in_keys, weights, out_key,
+                       is_global):
+        return _colocated_body(self, shared_mem, store, in_keys, weights,
+                               out_key, is_global)
+
+    # -- client-side sharding ------------------------------------------------
+    def shard_values(self, flat: np.ndarray, plan: PartitionPlan) -> list:
+        """Per-shard values a client uploads (arrays or zero-copy views)."""
+        return shard(flat, plan)
+
+    # -- round lifecycle -----------------------------------------------------
+    def end_round(self, store: ObjectStore) -> None:
+        """Execute any deferred arithmetic and materialize store contents."""
+
+
+class StreamingBackend(ExecutionBackend):
+    """Reference backend: the seed's inline client-by-client numpy loop."""
+
+    name = "streaming"
+
+    def init_acc(self, arr, weights):
+        if weights is not None:
+            return arr.astype(np.float64) * weights[0]
+        return arr.astype(np.float32).copy()
+
+    def accumulate(self, acc, arr, i, weights):
+        if weights is not None:
+            acc += arr.astype(np.float64) * weights[i]
+        else:
+            acc += arr
+        return acc
+
+    def finalize(self, acc, weights, n):
+        if weights is not None:
+            return (acc / float(sum(weights))).astype(np.float32)
+        return (acc / float(n)).astype(np.float32)
+
+
+class BatchedBackend(ExecutionBackend):
+    """Deferred backend: bodies build a DAG of :class:`LazyAverage` nodes;
+    ``end_round`` evaluates it vectorized (numpy chunked fold, or the Pallas
+    ``fedavg_multi`` kernel for unweighted nodes on TPU hosts)."""
+
+    name = "batched"
+
+    def __init__(self, use_pallas: bool | None = None):
+        self._use_pallas = use_pallas
+        self._nodes: list[LazyAverage] = []
+        self._memo: dict = {}
+
+    # -- arithmetic primitives ----------------------------------------------
+    def init_acc(self, arr, weights):
+        return _PendingAcc(arr, weighted=weights is not None)
+
+    def accumulate(self, acc, arr, i, weights):
+        acc.inputs.append(arr)
+        return acc
+
+    def finalize(self, acc, weights, n):
+        w = [float(x) for x in weights] if weights is not None else None
+        key = (tuple(id(x) for x in acc.inputs),
+               tuple(w) if w is not None else None)
+        node = self._memo.get(key)
+        if node is None:
+            # retries / speculative duplicates reuse the same node, exactly
+            # as their first-write-wins PUTs reuse the same stored value
+            node = LazyAverage(acc.inputs, w)
+            self._memo[key] = node
+            self._nodes.append(node)
+        return node
+
+    # -- client-side sharding ------------------------------------------------
+    def shard_values(self, flat: np.ndarray, plan: PartitionPlan) -> list:
+        return shard_views(flat, plan)
+
+    # -- round lifecycle -----------------------------------------------------
+    def _pallas_enabled(self) -> bool:
+        if self._use_pallas is not None:
+            return self._use_pallas
+        env = os.environ.get("REPRO_AGG_PALLAS")
+        if env is not None:
+            return env not in ("", "0", "false", "False")
+        try:
+            import jax
+            return jax.default_backend() == "tpu"
+        except Exception:
+            return False
+
+    def _evaluate_pallas(self) -> None:
+        """Dispatch unweighted pending nodes whose inputs are all concrete
+        (no lazy ancestors) to the fused Pallas kernel — one launch per
+        client count. May differ from numpy by ≤1 ulp in the division."""
+        from repro.kernels import ops as kops
+
+        ready = [nd for nd in self._nodes
+                 if nd.out is None and nd.weights is None and nd.size > 0
+                 and not any(isinstance(x, LazyAverage) and x.out is None
+                             for x in nd.inputs)]
+        by_n: dict[int, list[LazyAverage]] = {}
+        for nd in ready:
+            by_n.setdefault(len(nd.inputs), []).append(nd)
+        for nds in by_n.values():
+            stacks = [np.stack([np.asarray(_materialize(x), np.float32)
+                                for x in nd.inputs]) for nd in nds]
+            outs = kops.fedavg_multi(stacks)
+            for nd, out in zip(nds, outs):
+                nd.out = np.asarray(out, np.float32)
+
+    def end_round(self, store: ObjectStore) -> None:
+        if self._pallas_enabled():
+            self._evaluate_pallas()
+        _evaluate_nodes(self._nodes)
+        for key in store.list():
+            v = store.peek(key)
+            if not isinstance(v, (np.ndarray, bytes, bytearray)) \
+                    and hasattr(v, "materialize"):
+                store.swap(key, v.materialize())
+        # release the round's DAG (it pins every client gradient) so a
+        # backend instance reused across rounds doesn't accumulate them
+        self._nodes = []
+        self._memo = {}
+
+
+# ---------------------------------------------------------------------------
+# Selection
+# ---------------------------------------------------------------------------
+
+DEFAULT_ENGINE = "batched"
+
+
+def get_backend(engine: str | ExecutionBackend | None = None
+                ) -> ExecutionBackend:
+    """Resolve the engine knob: an instance, a name, ``None``/"auto" (env
+    ``REPRO_AGG_ENGINE``, else ``"batched"``).
+
+    Backends are stateful per round — this returns a fresh instance.
+    """
+    if isinstance(engine, ExecutionBackend):
+        return engine
+    if engine is None or engine == "auto":
+        engine = os.environ.get("REPRO_AGG_ENGINE", DEFAULT_ENGINE)
+    if engine == "streaming":
+        return StreamingBackend()
+    if engine == "batched":
+        return BatchedBackend()
+    raise ValueError(f"unknown aggregation engine {engine!r} "
+                     "(expected 'streaming', 'batched', or 'auto')")

@@ -1,15 +1,24 @@
 """The three serverless FL aggregation architectures (paper §III-A).
 
-All three execute their arithmetic for real (numpy streaming accumulation)
-inside the simulated Lambda runtime, against the simulated object store, so
-a round yields: the actual averaged gradient (bit-identical checks), the
-measured S3 op counts (Table II), modeled wall-clock (phase-structured), and
-dollar cost.
+All three execute on a pluggable **aggregation execution engine**
+(:mod:`repro.core.agg_engine`) that separates modeled platform accounting
+(time, memory, S3 ops — always per-invocation) from the actual averaging
+arithmetic. A round yields: the actual averaged gradient (bit-identical
+checks), the measured S3 op counts (Table II), modeled wall-clock
+(phase-structured), and dollar cost — identical under every engine.
 
   * GradsSharding — M concurrent shard aggregators, single phase.
   * λ-FL          — two-level tree, ⌈√N⌉ branching, 2 sequential phases.
   * LIFL          — three-level tree, ⌈∛N⌉ branching, 3 sequential phases;
                     optional colocated shared-memory mode (zero-copy).
+
+Engine selection: every round function takes ``engine=`` —
+``"streaming"`` (the reference client-by-client numpy loop),
+``"batched"`` (deferred, vectorized, Pallas-ready; the default), or
+``"auto"``/None (env ``REPRO_AGG_ENGINE``, falling back to batched).
+``avg_flat`` is bit-identical across engines by construction; the Pallas
+kernel path (TPU, or ``REPRO_AGG_PALLAS=1``) may differ by ≤1 ulp in the
+final division and is therefore off on interpret-mode (CPU) hosts.
 """
 from __future__ import annotations
 
@@ -21,11 +30,14 @@ import numpy as np
 
 from repro.config import FLConfig, LambdaLimits
 from repro.core import cost_model as cm
-from repro.core.sharding import PartitionPlan, make_plan, reconstruct, shard
+from repro.core.agg_engine import ExecutionBackend, get_backend
+from repro.core.sharding import PartitionPlan, make_plan, reconstruct
 from repro.serverless.runtime import InvocationRecord, LambdaRuntime
 from repro.store import ObjectStore
 
 MB = 1024 * 1024
+
+Engine = str | ExecutionBackend | None
 
 
 # ---------------------------------------------------------------------------
@@ -63,6 +75,7 @@ class AggregationResult:
     gets: int = 0
     memory_mb: float = 0.0
     peak_memory_mb: float = 0.0
+    engine: str = "streaming"
 
     @property
     def lambda_cost(self) -> float:
@@ -74,47 +87,6 @@ class AggregationResult:
 
     def total_cost(self, limits: LambdaLimits = LambdaLimits()) -> float:
         return self.lambda_cost + self.s3_cost(limits)
-
-
-# ---------------------------------------------------------------------------
-# Streaming aggregator body (shared by all three topologies)
-# ---------------------------------------------------------------------------
-
-def _streaming_avg_body(store: ObjectStore, in_keys: Sequence[str],
-                        out_key: str, weights: Sequence[float] | None = None):
-    """Read one contribution at a time, hold (sum, incoming) buffers, write
-    mean. Accumulation order = in_keys order (bit-reproducible). The ctx
-    models the paper's 3×input+450 MB peak: sum buffer + incoming buffer +
-    transient deserialization copy."""
-
-    def body(ctx):
-        acc = None
-        n = len(in_keys)
-        for i, key in enumerate(in_keys):
-            arr = ctx.get(store, key)                 # transient tracked
-            ctx.alloc(arr.nbytes)                     # incoming buffer
-            if acc is None:
-                w = weights[0] if weights is not None else 1.0
-                acc = arr.astype(np.float64) * w if weights is not None \
-                    else arr.astype(np.float32).copy()
-                ctx.alloc(acc.nbytes)
-            else:
-                if weights is not None:
-                    acc += arr.astype(np.float64) * weights[i]
-                else:
-                    acc += arr
-                ctx.compute(arr.nbytes)
-            ctx.free(arr.nbytes)                      # incoming released
-        if weights is not None:
-            acc = (acc / float(sum(weights))).astype(np.float32)
-        else:
-            acc = (acc / float(n)).astype(np.float32)
-        ctx.compute(acc.nbytes)
-        ctx.put(store, out_key, acc, if_none_match=True)  # idempotent
-        ctx.free(acc.nbytes)
-        return acc
-
-    return body
 
 
 def _alloc_mb(in_bytes: int, limits: LambdaLimits) -> float:
@@ -130,32 +102,34 @@ def _alloc_mb(in_bytes: int, limits: LambdaLimits) -> float:
 def gradssharding_round(client_grads: Sequence[np.ndarray], *, rnd: int,
                         plan: PartitionPlan, store: ObjectStore,
                         runtime: LambdaRuntime,
-                        straggler_threshold_s: float | None = None
-                        ) -> AggregationResult:
+                        straggler_threshold_s: float | None = None,
+                        engine: Engine = None) -> AggregationResult:
     """One aggregation round. ``client_grads`` are flat f32 vectors."""
+    backend = get_backend(engine)
     n = len(client_grads)
     m = plan.n_shards
     limits = runtime.limits
     p0, g0 = store.stats.puts, store.stats.gets
 
-    # Step 1+2 — shard and upload (client side: N*M PUTs).
+    # Step 1+2 — shard and upload (client side: N*M PUTs; zero-copy views
+    # under the batched engine).
     for i, g in enumerate(client_grads):
-        for j, sh in enumerate(shard(np.asarray(g, np.float32), plan)):
+        flat = np.asarray(g, np.float32)
+        for j, sh in enumerate(backend.shard_values(flat, plan)):
             store.put(k_client_shard(rnd, i, j), sh)
 
     # Step 3 — M concurrent shard aggregators.
-    durations = []
-    rec_start = len(runtime.records)
     shard_sizes = plan.shard_sizes()
+    ph = runtime.phase()
     for j in range(m):
         in_keys = [k_client_shard(rnd, i, j) for i in range(n)]
-        body = _streaming_avg_body(store, in_keys, k_avg_shard(rnd, j))
+        body = backend.avg_body(store, in_keys, k_avg_shard(rnd, j))
         mem = _alloc_mb(shard_sizes[j] * 4, limits)
-        _, rec = runtime.invoke_reliable(
+        ph.invoke_reliable(
             body, fn_name=f"r{rnd}-shard{j}", memory_mb=mem,
             straggler_threshold_s=straggler_threshold_s)
-        durations.append(rec.duration_s)
-    wall = max(durations)                 # single concurrent phase
+    wall = ph.wall_s                      # single concurrent phase
+    backend.end_round(store)
 
     # Step 4 — clients read back all M averaged shards (N*M GETs).
     shards = [store.get(k_avg_shard(rnd, j)) for j in range(m)]
@@ -164,13 +138,14 @@ def gradssharding_round(client_grads: Sequence[np.ndarray], *, rnd: int,
             store.get(k_avg_shard(rnd, j))
     avg = reconstruct(shards, plan)
 
-    recs = runtime.records[rec_start:]
+    recs = ph.records
     return AggregationResult(
         topology="gradssharding", avg_flat=np.asarray(avg),
         wall_clock_s=wall, phases_s=(wall,), records=recs,
         puts=store.stats.puts - p0, gets=store.stats.gets - g0,
         memory_mb=max(r.memory_mb for r in recs),
-        peak_memory_mb=max(r.peak_memory_mb for r in recs))
+        peak_memory_mb=max(r.peak_memory_mb for r in recs),
+        engine=backend.name)
 
 
 # ---------------------------------------------------------------------------
@@ -178,8 +153,9 @@ def gradssharding_round(client_grads: Sequence[np.ndarray], *, rnd: int,
 # ---------------------------------------------------------------------------
 
 def lambda_fl_round(client_grads: Sequence[np.ndarray], *, rnd: int,
-                    store: ObjectStore, runtime: LambdaRuntime
-                    ) -> AggregationResult:
+                    store: ObjectStore, runtime: LambdaRuntime,
+                    engine: Engine = None) -> AggregationResult:
+    backend = get_backend(engine)
     n = len(client_grads)
     k = cm.lambda_fl_branching(n)
     n_leaves = math.ceil(n / k)
@@ -194,25 +170,24 @@ def lambda_fl_round(client_grads: Sequence[np.ndarray], *, rnd: int,
 
     # Phase 1 — leaf aggregators (concurrent).
     group_counts = []
-    leaf_durs = []
+    ph1 = runtime.phase()
     for leaf in range(n_leaves):
         members = list(range(leaf * k, min((leaf + 1) * k, n)))
         group_counts.append(len(members))
-        body = _streaming_avg_body(
+        body = backend.avg_body(
             store, [k_client_grad(rnd, i) for i in members],
             k_partial(rnd, 1, leaf))
-        _, rec = runtime.invoke_reliable(
-            body, fn_name=f"r{rnd}-leaf{leaf}", memory_mb=mem)
-        leaf_durs.append(rec.duration_s)
-    phase1 = max(leaf_durs)
+        ph1.invoke_reliable(body, fn_name=f"r{rnd}-leaf{leaf}", memory_mb=mem)
+    phase1 = ph1.wall_s
 
     # Phase 2 — root combines leaf partial means, weighted by group size.
-    body = _streaming_avg_body(
+    ph2 = runtime.phase()
+    body = backend.avg_body(
         store, [k_partial(rnd, 1, leaf) for leaf in range(n_leaves)],
         k_global(rnd), weights=[float(c) for c in group_counts])
-    _, rec = runtime.invoke_reliable(
-        body, fn_name=f"r{rnd}-root", memory_mb=mem)
-    phase2 = rec.duration_s
+    ph2.invoke_reliable(body, fn_name=f"r{rnd}-root", memory_mb=mem)
+    phase2 = ph2.wall_s
+    backend.end_round(store)
 
     avg = store.get(k_global(rnd))
     for _ in range(1, n):
@@ -225,7 +200,8 @@ def lambda_fl_round(client_grads: Sequence[np.ndarray], *, rnd: int,
         records=recs, puts=store.stats.puts - p0,
         gets=store.stats.gets - g0,
         memory_mb=max(r.memory_mb for r in recs),
-        peak_memory_mb=max(r.peak_memory_mb for r in recs))
+        peak_memory_mb=max(r.peak_memory_mb for r in recs),
+        engine=backend.name)
 
 
 # ---------------------------------------------------------------------------
@@ -234,11 +210,13 @@ def lambda_fl_round(client_grads: Sequence[np.ndarray], *, rnd: int,
 
 def lifl_round(client_grads: Sequence[np.ndarray], *, rnd: int,
                store: ObjectStore, runtime: LambdaRuntime,
-               colocated: bool = False) -> AggregationResult:
+               colocated: bool = False,
+               engine: Engine = None) -> AggregationResult:
     """Three-level tree. ``colocated=False`` is the Lambda adaptation (all
     transfers via S3, as deployed in the paper); ``colocated=True`` models
     LIFL's native shared-memory fast path (zero-copy between levels: no S3
     ops and no transfer time for inter-aggregator hops)."""
+    backend = get_backend(engine)
     n = len(client_grads)
     l1, l2 = cm.lifl_levels(n)
     limits = runtime.limits
@@ -250,47 +228,34 @@ def lifl_round(client_grads: Sequence[np.ndarray], *, rnd: int,
     for i, g in enumerate(client_grads):
         store.put(k_client_grad(rnd, i), np.asarray(g, np.float32))
 
-    shared_mem: dict[str, np.ndarray] = {}
+    shared_mem: dict = {}
 
     def level_pass(in_keys_groups, level, weights_groups):
-        durs, out_keys, out_counts = [], [], []
+        ph = runtime.phase()
+        out_keys, out_counts = [], []
         for g_idx, (in_keys, w) in enumerate(
                 zip(in_keys_groups, weights_groups)):
             out_key = k_partial(rnd, level, g_idx) if level <= 2 \
                 else k_global(rnd)
             if colocated and level >= 2:
                 # zero-copy: read partials from node-local shared memory
-                def body(ctx, in_keys=in_keys, w=w, out_key=out_key):
-                    acc = None
-                    for i, key in enumerate(in_keys):
-                        arr = shared_mem[key]          # no S3, no transfer
-                        if acc is None:
-                            acc = arr.astype(np.float64) * w[0]
-                            ctx.alloc(acc.nbytes)
-                        else:
-                            acc += arr.astype(np.float64) * w[i]
-                            ctx.compute(arr.nbytes)
-                    acc = (acc / float(sum(w))).astype(np.float32)
-                    ctx.compute(acc.nbytes)
-                    if out_key == k_global(rnd):
-                        ctx.put(store, out_key, acc, if_none_match=True)
-                    else:
-                        shared_mem[out_key] = acc
-                    ctx.free(acc.nbytes)
-                    return acc
+                body = backend.colocated_body(
+                    shared_mem, store, in_keys, w, out_key,
+                    is_global=(out_key == k_global(rnd)))
             else:
-                def body(ctx, in_keys=in_keys, w=w, out_key=out_key):
-                    inner = _streaming_avg_body(store, in_keys, out_key, w)
-                    result = inner(ctx)
-                    if colocated:
+                inner = backend.avg_body(store, in_keys, out_key, w)
+                if colocated:
+                    def body(ctx, inner=inner, out_key=out_key):
+                        result = inner(ctx)
                         shared_mem[out_key] = result
-                    return result
-            _, rec = runtime.invoke_reliable(
+                        return result
+                else:
+                    body = inner
+            ph.invoke_reliable(
                 body, fn_name=f"r{rnd}-l{level}g{g_idx}", memory_mb=mem)
-            durs.append(rec.duration_s)
             out_keys.append(out_key)
             out_counts.append(float(sum(w)))
-        return max(durs), out_keys, out_counts
+        return ph.wall_s, out_keys, out_counts
 
     b = max(2, math.ceil(round(n ** (1 / 3), 9)))
     groups1 = [list(range(g * b, min((g + 1) * b, n))) for g in range(l1)]
@@ -304,6 +269,7 @@ def lifl_round(client_grads: Sequence[np.ndarray], *, rnd: int,
     phase2, out2, c2 = level_pass(keys2, 2, w2)
 
     phase3, _, _ = level_pass([out2], 3, [c2])
+    backend.end_round(store)
 
     avg = store.get(k_global(rnd))
     for _ in range(1, n):
@@ -316,7 +282,8 @@ def lifl_round(client_grads: Sequence[np.ndarray], *, rnd: int,
         phases_s=(phase1, phase2, phase3), records=recs,
         puts=store.stats.puts - p0, gets=store.stats.gets - g0,
         memory_mb=max(r.memory_mb for r in recs),
-        peak_memory_mb=max(r.peak_memory_mb for r in recs))
+        peak_memory_mb=max(r.peak_memory_mb for r in recs),
+        engine=backend.name)
 
 
 # ---------------------------------------------------------------------------
@@ -327,16 +294,18 @@ def aggregate_round(topology: str, client_grads: Sequence[np.ndarray], *,
                     rnd: int, store: ObjectStore, runtime: LambdaRuntime,
                     n_shards: int = 4, partition: str = "uniform",
                     tensor_sizes: Sequence[int] | None = None,
+                    engine: Engine = None,
                     **kw) -> AggregationResult:
     if topology == "gradssharding":
         total = int(np.asarray(client_grads[0]).size)
         plan = make_plan(partition, total, n_shards, tensor_sizes)
         return gradssharding_round(client_grads, rnd=rnd, plan=plan,
-                                   store=store, runtime=runtime, **kw)
+                                   store=store, runtime=runtime,
+                                   engine=engine, **kw)
     if topology == "lambda_fl":
         return lambda_fl_round(client_grads, rnd=rnd, store=store,
-                               runtime=runtime, **kw)
+                               runtime=runtime, engine=engine, **kw)
     if topology == "lifl":
         return lifl_round(client_grads, rnd=rnd, store=store,
-                          runtime=runtime, **kw)
+                          runtime=runtime, engine=engine, **kw)
     raise ValueError(f"unknown topology {topology!r}")

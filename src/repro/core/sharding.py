@@ -169,8 +169,81 @@ def make_plan(strategy: str, total: int, m: int,
 # Shard / reconstruct (Step 1 and Step 4)
 # ---------------------------------------------------------------------------
 
+class ShardView:
+    """Zero-copy view of one shard: the plan's segments over a flat vector,
+    presented as a single logical 1-D array without materializing the
+    concatenation. Used by the batched aggregation engine to skip the N·M
+    per-shard copies of eager sharding; contiguous-strategy shards stay pure
+    numpy views even after :meth:`materialize`."""
+
+    __slots__ = ("flat", "segments", "_sizes", "_cum", "_mat")
+
+    def __init__(self, flat: np.ndarray, segments):
+        self.flat = flat
+        self.segments = tuple(segments)
+        self._sizes = [b - a for a, b in self.segments]
+        self._cum = np.cumsum([0] + self._sizes)
+        self._mat = None
+
+    @property
+    def size(self) -> int:
+        return int(self._cum[-1])
+
+    @property
+    def shape(self) -> tuple:
+        return (self.size,)
+
+    @property
+    def dtype(self):
+        return self.flat.dtype
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * self.flat.dtype.itemsize
+
+    def read(self, start: int, stop: int) -> np.ndarray:
+        """Chunk [start, stop) in concatenated-index space; a view whenever
+        the chunk falls inside one segment."""
+        lo = int(np.searchsorted(self._cum, start, side="right")) - 1
+        hi = int(np.searchsorted(self._cum, stop, side="left"))
+        parts = []
+        for k in range(max(lo, 0), hi):
+            a, b = self.segments[k]
+            s = a + max(0, start - int(self._cum[k]))
+            e = a + min(b - a, stop - int(self._cum[k]))
+            if s < e:
+                parts.append(self.flat[s:e])
+        if not parts:
+            return self.flat[0:0]
+        return parts[0] if len(parts) == 1 else np.concatenate(parts)
+
+    def materialize(self) -> np.ndarray:
+        """The shard as one array — a view for single-segment plans, a
+        cached concatenation otherwise."""
+        if self._mat is None:
+            if not self.segments:
+                self._mat = self.flat[0:0]
+            elif len(self.segments) == 1:
+                a, b = self.segments[0]
+                self._mat = self.flat[a:b]
+            else:
+                self._mat = np.concatenate(
+                    [self.flat[a:b] for a, b in self.segments])
+        return self._mat
+
+
+def shard_views(flat: np.ndarray, plan: PartitionPlan) -> list[ShardView]:
+    """Zero-copy counterpart of :func:`shard`: per-shard segment views."""
+    flat = np.asarray(flat)
+    return [ShardView(flat, segs) for segs in plan.segments]
+
+
 def shard(flat, plan: PartitionPlan) -> list:
     """Split a flat gradient into per-shard arrays (concatenated segments).
+
+    Single-segment shards are returned as views (zero-copy); multi-segment
+    (``balanced``) shards require a concatenation copy — use
+    :func:`shard_views` for the fully lazy, zero-copy representation.
 
     Shards with no segments (balanced packing when M > #tensors) come back
     as empty arrays — an aggregator for an empty shard is a no-op."""

@@ -59,6 +59,39 @@ def fedavg_shards(client_shards: jax.Array,
     return _fedavg_flat(client_shards, weights, block_rows, interpret)
 
 
+def fedavg_multi(shard_stacks, weights: jax.Array | None = None,
+                 block_rows: int = 32,
+                 interpret: bool | None = None) -> list:
+    """Batched multi-shard entry point: average M shard stacks in ONE kernel
+    launch instead of M.
+
+    ``shard_stacks`` is a sequence of (N, L_j) arrays — all M shards of the
+    same round, every stack holding the same N clients in the same order.
+    The stacks are concatenated along L into a single (N, ΣL_j) launch (one
+    grid, one pad) and the averaged vector is split back per shard. Because
+    FedAvg is element-wise, each slice is exactly ``fedavg_shards`` of the
+    corresponding stack.
+
+    Returns a list of (L_j,) f32 means, one per input stack.
+    """
+    stacks = [jnp.asarray(s) for s in shard_stacks]
+    if not stacks:
+        return []
+    n = stacks[0].shape[0]
+    assert all(s.shape[0] == n for s in stacks), \
+        "all shard stacks must hold the same N clients"
+    lengths = [int(s.shape[1]) for s in stacks]
+    fused = stacks[0] if len(stacks) == 1 \
+        else jnp.concatenate(stacks, axis=1)
+    avg = fedavg_shards(fused, weights, block_rows=block_rows,
+                        interpret=interpret)
+    out, off = [], 0
+    for l in lengths:
+        out.append(avg[off:off + l])
+        off += l
+    return out
+
+
 @partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def _quant_flat(flat, block_rows, interpret):
     tiles, _ = _to_tiles(flat, block_rows)

@@ -153,7 +153,7 @@ def make_shardmap_train_step(cfg: ModelConfig, mesh: Mesh, lr: float,
             idx = idx * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
         return idx
 
-    from jax import shard_map
+    from repro.compat import shard_map
     b_axes = rep if len(rep) > 1 else rep[0]
     smapped = shard_map(
         step, mesh=mesh,

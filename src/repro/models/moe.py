@@ -67,7 +67,7 @@ def moe_block(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
 def _moe_block_local(p: dict, x: jax.Array, cfg: ModelConfig, mesh):
     from functools import partial as _partial
 
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.models.meshctx import replica_axes
 

@@ -6,7 +6,8 @@ from repro.serverless.runtime import (
     LambdaOOM,
     LambdaRuntime,
     LambdaTimeout,
+    PhaseHandle,
 )
 
 __all__ = ["FaultPlan", "InjectedFault", "InvocationRecord", "LambdaContext",
-           "LambdaOOM", "LambdaRuntime", "LambdaTimeout"]
+           "LambdaOOM", "LambdaRuntime", "LambdaTimeout", "PhaseHandle"]

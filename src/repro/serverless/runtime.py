@@ -69,10 +69,11 @@ class InvocationRecord:
     attempt: int = 0
     failed: bool = False
     speculative: bool = False
-
-    @property
-    def read_s(self) -> float:
-        return self._read_s
+    # modeled time split (pre-slowdown; duration_s applies the straggler
+    # multiplier on top of cold start + these three components)
+    read_s: float = 0.0
+    write_s: float = 0.0
+    compute_s: float = 0.0
 
     @property
     def cost(self) -> float:
@@ -97,6 +98,9 @@ class LambdaContext:
         self.read_bytes = 0
         self.write_bytes = 0
         self.compute_bytes = 0
+        self.read_s = 0.0
+        self.write_s = 0.0
+        self.compute_s = 0.0
         self._held = 0
         self.peak_bytes = 0
         self.time_s = 0.0
@@ -119,9 +123,11 @@ class LambdaContext:
         value = store.get(key)
         nb = value.nbytes if hasattr(value, "nbytes") else len(value)
         self.read_bytes += nb
+        t = nb / (self.limits.s3_read_mbps * 1e6)
+        self.read_s += t
         # transient deserialization copy: the 3x formula's third buffer
         self.alloc(nb)
-        self._advance(nb / (self.limits.s3_read_mbps * 1e6))
+        self._advance(t)
         self.free(nb)
         return value
 
@@ -129,13 +135,17 @@ class LambdaContext:
             if_none_match: bool = False) -> bool:
         nb = value.nbytes if hasattr(value, "nbytes") else len(value)
         self.write_bytes += nb
-        self._advance(nb / (self.limits.s3_write_mbps * 1e6))
+        t = nb / (self.limits.s3_write_mbps * 1e6)
+        self.write_s += t
+        self._advance(t)
         return store.put(key, value, if_none_match=if_none_match)
 
     def compute(self, nbytes: int) -> None:
         """Model arithmetic over nbytes of data (element-wise accumulate)."""
         self.compute_bytes += int(nbytes)
-        self._advance(nbytes / AGG_COMPUTE_BPS)
+        t = nbytes / AGG_COMPUTE_BPS
+        self.compute_s += t
+        self._advance(t)
 
     def _advance(self, seconds: float) -> None:
         self.time_s += seconds
@@ -143,6 +153,38 @@ class LambdaContext:
             raise LambdaTimeout(
                 f"{self.fn_name}: {self.time_s:.1f} s > timeout "
                 f"{self.timeout_s:.0f} s")
+
+
+class PhaseHandle:
+    """One concurrent aggregation phase under the logical clock.
+
+    Invocations issued through the handle run logically in parallel: the
+    phase's wall-clock is the max duration over *winning* attempts (failed
+    retries and speculative losers are billed but don't define the phase).
+    Because invocation accounting is value-agnostic (keyed on byte counts,
+    not array contents), a deferred execution engine can run a whole phase's
+    invocations with lazy handles and batch the actual arithmetic afterwards
+    while every per-invocation record stays identical.
+    """
+
+    def __init__(self, runtime: "LambdaRuntime"):
+        self._rt = runtime
+        self.rec_start = len(runtime.records)
+        self.winners: list[InvocationRecord] = []
+
+    def invoke_reliable(self, fn, **kw):
+        result, rec = self._rt.invoke_reliable(fn, **kw)
+        self.winners.append(rec)
+        return result, rec
+
+    @property
+    def wall_s(self) -> float:
+        return max((r.duration_s for r in self.winners), default=0.0)
+
+    @property
+    def records(self) -> list[InvocationRecord]:
+        """All attempts of this phase, incl. failed and speculative ones."""
+        return self._rt.records[self.rec_start:]
 
 
 class LambdaRuntime:
@@ -154,6 +196,11 @@ class LambdaRuntime:
         self.faults = faults or FaultPlan()
         self.records: list[InvocationRecord] = []
         self._warm: set[str] = set()
+
+    # ------------------------------------------------------------------
+    def phase(self) -> PhaseHandle:
+        """Start a concurrent phase (see :class:`PhaseHandle`)."""
+        return PhaseHandle(self)
 
     # ------------------------------------------------------------------
     def invoke(self, fn: Callable[[LambdaContext], Any], *, fn_name: str,
@@ -193,7 +240,9 @@ class LambdaRuntime:
                 compute_bytes=ctx.compute_bytes,
                 peak_memory_mb=self.limits.runtime_overhead_mb
                 + ctx.peak_bytes / MB,
-                attempt=attempt, failed=failed, speculative=speculative)
+                attempt=attempt, failed=failed, speculative=speculative,
+                read_s=ctx.read_s, write_s=ctx.write_s,
+                compute_s=ctx.compute_s)
             self.records.append(rec)
         if failed:
             return None, rec

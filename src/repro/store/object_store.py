@@ -40,6 +40,8 @@ def _nbytes(value) -> int:
         return value.nbytes
     if isinstance(value, (bytes, bytearray)):
         return len(value)
+    if hasattr(value, "nbytes"):          # lazy handles (simulation mode)
+        return int(value.nbytes)
     return int(np.asarray(value).nbytes)
 
 
@@ -78,6 +80,27 @@ class ObjectStore:
             self.stats.bytes_read += nb
             self.stats.get_log.append((key, nb))
             return value
+
+    # -- simulation plane (not billed, no stats) ------------------------------
+    def peek(self, key: str):
+        """Read without touching stats. Simulation-internal: used by deferred
+        aggregation engines to materialize lazy values whose GETs were
+        already accounted during the simulated invocation."""
+        with self._lock:
+            if key not in self._objects:
+                raise NoSuchKey(key)
+            return self._objects[key]
+
+    def swap(self, key: str, value) -> None:
+        """Replace a stored object in place without touching stats. Used to
+        substitute a materialized array for the lazy handle that was PUT
+        (and billed) during the simulated invocation."""
+        with self._lock:
+            if key not in self._objects:
+                raise NoSuchKey(key)
+            if isinstance(value, np.ndarray):
+                value = np.ascontiguousarray(value)
+            self._objects[key] = value
 
     def head(self, key: str) -> int:
         """Metadata-only existence/size check (not billed as a GET here;

@@ -1,0 +1,154 @@
+"""Minimal deterministic stand-in for ``hypothesis`` on bare environments.
+
+Provides just the surface this test suite uses — ``given``, ``settings``,
+and ``strategies.integers/floats/lists/sampled_from/booleans`` — so the
+property tests still collect and run (with seeded pseudo-random examples
+plus the strategy boundary values) when hypothesis isn't installed. Real
+hypothesis, when present, is always preferred (see the try/except import
+in each test module).
+"""
+from __future__ import annotations
+
+
+import itertools
+import random
+import zlib
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def sample(self, rng: random.Random):
+        raise NotImplementedError
+
+    def boundary(self) -> list:
+        return []
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def sample(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+    def boundary(self):
+        return [self.lo, self.hi] if self.lo != self.hi else [self.lo]
+
+
+class _Floats(_Strategy):
+    def __init__(self, lo: float, hi: float):
+        self.lo, self.hi = float(lo), float(hi)
+
+    def sample(self, rng):
+        return rng.uniform(self.lo, self.hi)
+
+    def boundary(self):
+        return [self.lo, self.hi]
+
+
+class _Booleans(_Strategy):
+    def sample(self, rng):
+        return rng.random() < 0.5
+
+    def boundary(self):
+        return [False, True]
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def sample(self, rng):
+        return rng.choice(self.options)
+
+    def boundary(self):
+        return self.options[:2]
+
+
+class _Lists(_Strategy):
+    def __init__(self, elem: _Strategy, min_size: int = 0,
+                 max_size: int | None = None):
+        self.elem = elem
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+
+    def sample(self, rng):
+        size = rng.randint(self.min_size, self.max_size)
+        return [self.elem.sample(rng) for _ in range(size)]
+
+    def boundary(self):
+        out = []
+        for size in {self.min_size, self.max_size}:
+            bnd = self.elem.boundary() or [self.elem.sample(random.Random(0))]
+            out.append([bnd[i % len(bnd)] for i in range(size)])
+        return out
+
+
+class strategies:          # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Booleans()
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        return _SampledFrom(options)
+
+    @staticmethod
+    def lists(elem: _Strategy, min_size: int = 0,
+              max_size: int | None = None) -> _Strategy:
+        return _Lists(elem, min_size, max_size)
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the test with boundary combinations first, then seeded random
+    examples, up to the @settings max_examples budget."""
+
+    def deco(fn):
+        n_examples = getattr(fn, "_fallback_max_examples", _DEFAULT_EXAMPLES)
+
+        # no functools.wraps: pytest would follow __wrapped__ to the original
+        # signature and demand fixtures for the strategy parameters
+        def wrapper(*args, **kwargs):
+            # crc32, not hash(): str hashing is salted per process and would
+            # make the examples irreproducible across runs
+            rng = random.Random(zlib.crc32(fn.__name__.encode()))
+            names = list(kw_strategies)
+            strats = list(arg_strategies) + [kw_strategies[k] for k in names]
+
+            def call(values):
+                pos = values[:len(arg_strategies)]
+                kw = dict(zip(names, values[len(arg_strategies):]))
+                fn(*args, *pos, **{**kwargs, **kw})
+
+            runs = 0
+            bounds = [s.boundary() or [s.sample(rng)] for s in strats]
+            for combo in itertools.islice(itertools.product(*bounds),
+                                          max(1, n_examples // 2)):
+                call(list(combo))
+                runs += 1
+            while runs < n_examples:
+                call([s.sample(rng) for s in strats])
+                runs += 1
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

@@ -3,7 +3,11 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # bare env: deterministic fallback
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
 
 from repro.config import LambdaLimits
 from repro.core import cost_model as cm

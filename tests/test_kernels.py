@@ -2,7 +2,11 @@
 (interpret=True executes kernel bodies on CPU)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # bare env: deterministic fallback
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
 
 import jax
 import jax.numpy as jnp

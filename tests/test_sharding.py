@@ -1,7 +1,11 @@
 """Gradient partitioning invariants (paper Step 1 / Step 4)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # bare env: deterministic fallback
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
 
 import jax
 import jax.numpy as jnp
