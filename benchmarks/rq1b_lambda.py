@@ -40,18 +40,20 @@ def main() -> None:
                  for _ in range(N)]
         store, rt = ObjectStore(), LambdaRuntime()
         # pre-warm (paper excludes cold starts: 14 warm invocations)
-        for j in range(m):
-            rt._warm.add(f"r0-shard{j}")
+        rt.prewarm(*(f"r0-shard{j}" for j in range(m)))
         res = agg.aggregate_round("gradssharding", grads, rnd=0,
                                   store=store, runtime=rt, n_shards=m)
+        # bytes scale linearly back to paper size; the per-GET latency
+        # floor does not (it is size-independent: N GETs per aggregator)
         scale = SIM_SCALE
         read_s = sum(r.read_bytes for r in res.records) / len(res.records) \
-            / (limits.s3_read_mbps * 1e6) * scale
+            / (limits.s3_read_mbps * 1e6) * scale \
+            + N * limits.s3_get_latency_s
         comp_s = sum(r.compute_bytes for r in res.records) \
             / len(res.records) / 5.2e9 * scale
         write_s = sum(r.write_bytes for r in res.records) \
             / len(res.records) / (limits.s3_write_mbps * 1e6) * scale
-        total_s = res.wall_clock_s * scale
+        total_s = read_s + comp_s + write_s
         # Lambda compute cost with the paper's fixed memory configuration
         gb_s = m * mem_mb / 1024.0 * total_s
         cost_1k = 1000 * gb_s * limits.gb_s_price

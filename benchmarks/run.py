@@ -9,6 +9,7 @@ import traceback
 
 from benchmarks import (
     agg_engine_bench,
+    event_pipeline_bench,
     kernels_bench,
     roofline,
     rq1_idle,
@@ -26,6 +27,7 @@ BENCHES = [
     ("rq2b_lambda_sweep (Table VI)", rq2b_lambda_sweep.main),
     ("rq3_cross_arch (Table VII)", rq3_cross_arch.main),
     ("agg_engine (engines)", agg_engine_bench.main),
+    ("event_pipeline (schedules)", event_pipeline_bench.main),
     ("kernels", kernels_bench.main),
     ("roofline (§Roofline)", roofline.main),
 ]

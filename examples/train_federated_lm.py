@@ -5,10 +5,15 @@ N clients each hold a non-IID synthetic Markov token stream; every round
 they train locally (SGD+momentum, the paper's client optimizer), upload
 gradient-shards to the object store, M Lambda aggregators average them,
 and clients reconstruct + apply the update. Loss decreases; swapping
-``--topology`` changes only cost/latency, never the learning trajectory.
+``--topology`` changes only cost/latency, never the learning trajectory —
+and so does swapping ``--schedule``: the pipelined schedule overlaps
+client uploads with streaming shard folds (and round r+1 uploads with
+round r read-back), cutting modeled wall-clock while ``avg_flat`` stays
+bit-identical to the barrier schedule.
 
 Run:  PYTHONPATH=src python examples/train_federated_lm.py \
-          --rounds 10 --clients 4 --shards 4 --topology gradssharding
+          --rounds 10 --clients 4 --shards 4 --topology gradssharding \
+          --schedule pipelined --upload-mbps 16 --jitter-s 2
 """
 import argparse
 import dataclasses
@@ -20,13 +25,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch
-from repro.core import aggregation as agg
+from repro.core.cost_model import UploadModel
 from repro.core.fedavg import apply_delta, local_sgd_update, model_delta
 from repro.core.sharding import flatten, unflatten
 from repro.data import SyntheticLM
+from repro.launch.train import federated_train_loop
 from repro.models import registry as models
-from repro.serverless import LambdaRuntime
-from repro.store import ObjectStore
 
 
 def main(argv=None):
@@ -43,55 +47,80 @@ def main(argv=None):
                     choices=["gradssharding", "lambda_fl", "lifl"])
     ap.add_argument("--partition", default="uniform",
                     choices=["uniform", "balanced", "layer_contiguous"])
+    ap.add_argument("--schedule", default=None,
+                    choices=["barrier", "pipelined"],
+                    help="round schedule (default: REPRO_AGG_SCHEDULE / "
+                         "barrier)")
+    ap.add_argument("--engine", default=None,
+                    choices=["streaming", "batched", "incremental"])
+    ap.add_argument("--upload-mbps", type=float, default=None,
+                    help="per-client uplink MB/s (None = instantaneous)")
+    ap.add_argument("--download-mbps", type=float, default=None)
+    ap.add_argument("--jitter-s", type=float, default=0.0,
+                    help="max per-client upload start jitter (seconds)")
+    ap.add_argument("--rate-jitter", type=float, default=0.0)
     args = ap.parse_args(argv)
 
     cfg = dataclasses.replace(get_arch(args.arch).smoke, vocab=256,
                               remat=False)
     params = models.init_params(jax.random.PRNGKey(0), cfg)
     data = SyntheticLM(vocab=256, seq_len=args.seq, seed=0,
-                       markov_concentration=0.4)
-    store, runtime = LambdaRuntime(), None
-    store, runtime = ObjectStore(), LambdaRuntime()
+                      markov_concentration=0.4)
 
     def loss_fn(p, b):
         return models.loss_fn(p, cfg, b)
 
-    _, spec = flatten(params)
     tensor_sizes = None
     if args.partition != "uniform":
-        from repro.core.sharding import flatten as _fl
-        f, sp = _fl(params)
+        _, sp = flatten(params)
         tensor_sizes = list(sp.sizes)
+
+    upload = None
+    if args.upload_mbps or args.download_mbps or args.jitter_s \
+            or args.rate_jitter:
+        upload = UploadModel(mbps=args.upload_mbps,
+                             download_mbps=args.download_mbps,
+                             jitter_s=args.jitter_s,
+                             rate_jitter=args.rate_jitter)
+
+    state = {"params": params, "spec": None, "losses": []}
+
+    def client_grads(rnd):
+        flats, losses = [], []
+        for c in range(args.clients):
+            local, vel, l = state["params"], None, 0.0
+            for s in range(args.local_steps):
+                batch = data.batch(c, rnd * args.local_steps + s, args.batch)
+                local, vel, l = local_sgd_update(loss_fn, local, batch,
+                                                 lr=args.lr, momentum=0.9,
+                                                 velocity=vel)
+            losses.append(float(l))
+            f, state["spec"] = flatten(model_delta(state["params"], local))
+            flats.append(np.asarray(f))
+        state["losses"] = losses
+        return flats
+
+    def on_round(rnd, res):
+        state["params"] = apply_delta(
+            state["params"], unflatten(jnp.asarray(res.avg_flat),
+                                       state["spec"]))
+        print(f"round {rnd:3d}  client-loss {np.mean(state['losses']):.4f}  "
+              f"agg-wall {res.wall_clock_s:.2f}s  "
+              f"ops {res.puts}P/{res.gets}G  "
+              f"peak-mem {res.peak_memory_mb:.0f}MB  [{res.schedule}]")
 
     print(f"federated {args.arch} ({models.param_count(cfg):,} params), "
           f"N={args.clients} clients, topology={args.topology} "
-          f"M={args.shards}")
+          f"M={args.shards}, schedule={args.schedule or 'barrier'}")
     t0 = time.time()
-    for rnd in range(args.rounds):
-        flats = []
-        losses = []
-        for c in range(args.clients):
-            local = params
-            vel = None
-            for s in range(args.local_steps):
-                batch = data.batch(c, rnd * args.local_steps + s,
-                                   args.batch)
-                local, vel, l = local_sgd_update(loss_fn, local, batch,
-                                                 lr=args.lr, momentum=0.9)
-            losses.append(float(l))
-            f, spec = flatten(model_delta(params, local))
-            flats.append(np.asarray(f))
-        res = agg.aggregate_round(
-            args.topology, flats, rnd=rnd, store=store, runtime=runtime,
-            n_shards=args.shards, partition=args.partition,
-            tensor_sizes=tensor_sizes)
-        params = apply_delta(params, unflatten(jnp.asarray(res.avg_flat),
-                                               spec))
-        print(f"round {rnd:3d}  client-loss {np.mean(losses):.4f}  "
-              f"agg-wall {res.wall_clock_s:.2f}s  "
-              f"ops {res.puts}P/{res.gets}G  "
-              f"peak-mem {res.peak_memory_mb:.0f}MB")
-    print(f"total lambda cost: ${runtime.total_cost():.6f}  "
+    out = federated_train_loop(
+        client_grads, rounds=args.rounds, topology=args.topology,
+        n_shards=args.shards, partition=args.partition,
+        tensor_sizes=tensor_sizes, engine=args.engine,
+        schedule=args.schedule, upload=upload, on_round=on_round)
+    print(f"session wall (modeled): {out['session_wall_s']:.2f}s  "
+          f"vs sum-of-round-walls {out['sum_round_walls_s']:.2f}s")
+    print(f"total lambda cost: ${out['lambda_cost']:.6f}  "
           f"({time.time()-t0:.1f}s real)")
 
 

@@ -242,6 +242,19 @@ class LambdaLimits:
     min_memory_mb: int = 128
 
 
+# Shared default instance: LambdaLimits is frozen, so every hot-path consumer
+# (per-invocation cost properties, runtime construction) reuses this one
+# object instead of re-running the dataclass constructor per call.
+DEFAULT_LIMITS = LambdaLimits()
+
+# Effective aggregation arithmetic throughput on a Lambda vCPU, calibrated to
+# the paper's RQ2-B: 1.96 s to accumulate 20 x 512.3 MB => ~5.2 GB/s. Lives
+# here (not in core.cost_model) so the serverless runtime can import it
+# without initializing the repro.core package (import-cycle hygiene);
+# cost_model re-exports it.
+AGG_COMPUTE_BPS = 5.2e9
+
+
 # ---------------------------------------------------------------------------
 # TPU hardware model (v5e) for roofline
 # ---------------------------------------------------------------------------

@@ -8,7 +8,7 @@ separates:
   * **actual arithmetic** — the real numpy averaging whose result feeds the
     bit-identity checks and the training loop.
 
-Two backends implement the same primitive-op protocol:
+Three backends implement the same primitive-op protocol:
 
   * ``"streaming"`` — the reference. Arithmetic runs inline inside each
     simulated invocation, one contribution at a time (the paper's two-buffer
@@ -20,6 +20,15 @@ Two backends implement the same primitive-op protocol:
     never round-trip through DRAM), threads across disjoint element ranges,
     and — when a TPU is present (or ``REPRO_AGG_PALLAS=1``) — dispatches
     unweighted shard averages to the Pallas ``fedavg_multi`` kernel.
+  * ``"incremental"`` — the streaming *prefix fold*, tuned. Arithmetic is
+    eager like ``streaming`` (the running prefix mean is up to date the
+    moment contribution *i* lands — the natural partner of the pipelined
+    round schedule, where aggregators fold each contribution on arrival),
+    but folds in cache-resident chunks with preallocated accumulators, so
+    the weighted path never allocates the streaming reference's two
+    full-size f64 temporaries per contribution. Chunking is element-wise,
+    so the IEEE op sequence per element is exactly the streaming
+    reference's — ``avg_flat`` stays bit-identical.
 
 Both backends drive the **same invocation body template**, so every
 accounting field (``puts``/``gets``, ``billed_gb_s``, ``peak_memory_mb``,
@@ -34,9 +43,12 @@ Caveat: the Pallas path shares the accumulation order but may differ by
 interpret mode (non-TPU hosts) it is far slower than the numpy evaluator —
 hence it is only auto-enabled on TPU backends.
 
-Selection: pass ``engine="streaming" | "batched"`` to ``aggregate_round``
-(or any topology function), or set ``REPRO_AGG_ENGINE`` in the environment;
-the default is ``"batched"``.
+Selection: pass ``engine="streaming" | "batched" | "incremental"`` to
+``aggregate_round`` (or any topology function), or set ``REPRO_AGG_ENGINE``
+in the environment; the default is ``"batched"``. Engines compose freely
+with the round *schedule* knob (``schedule="barrier" | "pipelined"`` /
+``REPRO_AGG_SCHEDULE``): accounting is value-agnostic, so every engine
+yields identical modeled platform numbers under either schedule.
 """
 from __future__ import annotations
 
@@ -304,6 +316,7 @@ def _colocated_body(backend: "ExecutionBackend", shared_mem: dict,
     def body(ctx):
         acc = None
         for i, key in enumerate(in_keys):
+            ctx.wait_key(key)                         # pipelined: producer gate
             arr = shared_mem[key]                     # no S3, no transfer
             if acc is None:
                 acc = backend.init_acc(arr, weights)
@@ -385,6 +398,90 @@ class StreamingBackend(ExecutionBackend):
         if weights is not None:
             return (acc / float(sum(weights))).astype(np.float32)
         return (acc / float(n)).astype(np.float32)
+
+
+class _PrefixState:
+    """Running prefix-fold accumulator of :class:`IncrementalBackend`.
+
+    ``acc`` is the live running sum (f64 when weighted, matching the
+    streaming reference's float64 weighted path; f32 otherwise). Scratch is
+    one chunk-sized f64 buffer, shared per backend instance, replacing the
+    full-size ``arr.astype(f64) * w`` temporaries of the reference.
+    """
+
+    __slots__ = ("acc", "weighted", "size")
+
+    def __init__(self, acc: np.ndarray, weighted: bool):
+        self.acc = acc
+        self.weighted = weighted
+        self.size = int(acc.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.acc.nbytes)
+
+
+class IncrementalBackend(ExecutionBackend):
+    """Eager chunked prefix folds: streaming semantics, batched locality.
+
+    Each contribution is folded into a preallocated accumulator the moment
+    the body reads it, chunk by chunk (``CHUNK_ELEMS``), replaying the exact
+    per-element IEEE op order of :class:`StreamingBackend` — left-fold
+    accumulate, single divide, f32 cast — so ``avg_flat`` is bit-identical.
+    Unlike ``batched`` there is no deferred DAG: partial results exist as
+    real arrays throughout the round — what an arrival-driven aggregator
+    needs — and ``end_round`` is a no-op.
+    """
+
+    name = "incremental"
+
+    def __init__(self) -> None:
+        self._buf64 = np.empty(CHUNK_ELEMS, np.float64)
+
+    @staticmethod
+    def _as_array(arr) -> np.ndarray:
+        return arr if isinstance(arr, np.ndarray) else _materialize(arr)
+
+    def init_acc(self, arr, weights):
+        arr = self._as_array(arr)
+        if weights is not None:
+            acc = np.empty(arr.shape[0], np.float64)
+            if weights[0] == 1.0:          # exact: *1.0 is the identity
+                np.copyto(acc, arr)
+            else:
+                np.multiply(arr, weights[0], out=acc, dtype=np.float64)
+            return _PrefixState(acc, weighted=True)
+        return _PrefixState(arr.astype(np.float32).copy(), weighted=False)
+
+    def accumulate(self, acc: _PrefixState, arr, i, weights):
+        arr = self._as_array(arr)
+        if not acc.weighted:
+            np.add(acc.acc, arr, out=acc.acc)
+            return acc
+        w = weights[i]
+        for s in range(0, acc.size, CHUNK_ELEMS):
+            e = min(s + CHUNK_ELEMS, acc.size)
+            if w == 1.0:
+                np.add(acc.acc[s:e], arr[s:e], out=acc.acc[s:e],
+                       dtype=np.float64)
+            else:
+                buf = self._buf64[:e - s]
+                np.multiply(arr[s:e], w, out=buf, dtype=np.float64)
+                np.add(acc.acc[s:e], buf, out=acc.acc[s:e])
+        return acc
+
+    def finalize(self, acc: _PrefixState, weights, n):
+        div = float(sum(weights)) if weights is not None else float(n)
+        out = np.empty(acc.size, np.float32)
+        if acc.weighted:
+            for s in range(0, acc.size, CHUNK_ELEMS):
+                e = min(s + CHUNK_ELEMS, acc.size)
+                buf = self._buf64[:e - s]
+                np.divide(acc.acc[s:e], div, out=buf)
+                out[s:e] = buf             # f64 -> f32 cast, same as astype
+        else:
+            np.divide(acc.acc, np.float32(div), out=out)
+        return out
 
 
 class BatchedBackend(ExecutionBackend):
@@ -494,5 +591,8 @@ def get_backend(engine: str | ExecutionBackend | None = None
         return StreamingBackend()
     if engine == "batched":
         return BatchedBackend()
+    if engine == "incremental":
+        return IncrementalBackend()
     raise ValueError(f"unknown aggregation engine {engine!r} "
-                     "(expected 'streaming', 'batched', or 'auto')")
+                     "(expected 'streaming', 'batched', 'incremental', "
+                     "or 'auto')")

@@ -6,7 +6,14 @@ Encodes, for each architecture (λ-FL, LIFL, GradsSharding):
     the empirical Lambda deployment formula 3·input + 450 MB),
   * feasibility against Lambda's 10,240 MB ceiling,
   * modeled wall-clock (S3-transfer-dominated; 45–68 MB/s per stream) and
-    dollar cost (Lambda GB-s + S3 ops), matching the paper's measurements.
+    dollar cost (Lambda GB-s + S3 ops), matching the paper's measurements,
+  * the **pipelined schedule** (:func:`pipelined_round_cost`): client
+    uploads with per-client start/rate jitter (:class:`UploadModel`),
+    aggregators that launch on their first contribution and stream-fold in
+    index order, stalling only when the next contribution hasn't landed —
+    predicting the wall-clock win of overlapping uploads with shard folds
+    (the discrete-event runtime reproduces this number exactly for a
+    no-fault round).
 
 All formulas are pure functions of (N, M, |θ|) so they are property-testable.
 """
@@ -14,8 +21,11 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from typing import Sequence
 
-from repro.config import LambdaLimits
+import numpy as np
+
+from repro.config import AGG_COMPUTE_BPS, LambdaLimits
 
 MB = 1024 * 1024
 
@@ -166,9 +176,9 @@ class PhaseTiming:
         return self.read_s + self.compute_s + self.write_s
 
 
-# Effective aggregation arithmetic throughput on a Lambda vCPU, calibrated to
-# the paper's RQ2-B: 1.96 s to accumulate 20 x 512.3 MB => ~5.2 GB/s.
-AGG_COMPUTE_BPS = 5.2e9
+# Effective aggregation arithmetic throughput on a Lambda vCPU: see
+# AGG_COMPUTE_BPS in repro.config (imported above; it lives there so the
+# serverless runtime can use it without initializing the repro.core package).
 
 
 def aggregator_timing(in_bytes: int, n_contrib: int, out_bytes: int,
@@ -203,6 +213,186 @@ class RoundCost:
     @property
     def cost_per_1k(self) -> float:
         return 1000.0 * self.total_cost
+
+
+# ---------------------------------------------------------------------------
+# Client upload/readback model (pipelined schedule)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class UploadModel:
+    """Per-client network model for the pipelined round schedule.
+
+    ``mbps``/``download_mbps`` are per-client stream bandwidths; ``None``
+    models instantaneous transfer (the legacy assumption — with it and zero
+    jitter, the pipelined schedule degenerates to the barrier schedule
+    exactly). ``jitter_s`` draws each client's upload start offset uniformly
+    from [0, jitter_s); ``rate_jitter`` multiplies each client's transfer
+    durations by a factor uniform in [1, 1 + rate_jitter). Draws are
+    deterministic in (seed, round), so the analytical model and the
+    discrete-event runtime see identical per-client plans.
+    """
+
+    mbps: float | None = None
+    download_mbps: float | None = None
+    jitter_s: float = 0.0
+    rate_jitter: float = 0.0
+    seed: int = 0
+
+    def plan(self, n: int, rnd: int = 0) -> tuple[np.ndarray, np.ndarray]:
+        """(start_offsets[n], rate_multipliers[n]) for one round."""
+        rng = np.random.default_rng([self.seed, rnd])
+        starts = rng.uniform(0.0, self.jitter_s, n) if self.jitter_s > 0 \
+            else np.zeros(n)
+        mults = 1.0 + rng.uniform(0.0, self.rate_jitter, n) \
+            if self.rate_jitter > 0 else np.ones(n)
+        return starts, mults
+
+    def upload_s(self, nbytes: int, mult: float = 1.0) -> float:
+        if self.mbps is None:
+            return 0.0
+        return nbytes / (self.mbps * 1e6) * mult
+
+    def download_s(self, nbytes: int, mult: float = 1.0) -> float:
+        if self.download_mbps is None:
+            return 0.0
+        return nbytes / (self.download_mbps * 1e6) * mult
+
+
+def uniform_shard_bytes(grad_bytes: int, m: int, itemsize: int = 4
+                        ) -> list[int]:
+    """Byte sizes of the paper's uniform element split (matches
+    ``sharding.plan_uniform``: first ``rem`` shards get one extra element)."""
+    elems = grad_bytes // itemsize
+    base, rem = divmod(elems, m)
+    return [(base + (1 if j < rem else 0)) * itemsize for j in range(m)]
+
+
+def _fold_finish(launch_s: float, avail_s: Sequence[float],
+                 in_bytes: Sequence[int], out_bytes: int,
+                 limits: LambdaLimits, cold: bool) -> float:
+    """Finish time of one streaming prefix fold: launch (+cold start), then
+    per contribution in index order — stall until available, per-GET latency
+    + transfer, accumulate (from the 2nd on) — then finalize + write.
+    Replays the exact op order of the runtime's aggregator body."""
+    t = launch_s + (limits.cold_start_s if cold else 0.0)
+    for idx, (a, nb) in enumerate(zip(avail_s, in_bytes)):
+        if a > t:
+            t = a                                   # stall for availability
+        t += limits.s3_get_latency_s + nb / (limits.s3_read_mbps * 1e6)
+        if idx:
+            t += nb / AGG_COMPUTE_BPS
+    t += out_bytes / AGG_COMPUTE_BPS
+    t += out_bytes / (limits.s3_write_mbps * 1e6)
+    return t
+
+
+def _tree_groups(count: int, branch: int) -> list[list[int]]:
+    return [list(range(g * branch, min((g + 1) * branch, count)))
+            for g in range(math.ceil(count / branch))]
+
+
+def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
+                         limits: LambdaLimits = LambdaLimits(),
+                         upload: UploadModel | None = None,
+                         rnd: int = 0, cold: bool = True,
+                         shard_bytes: Sequence[int] | None = None
+                         ) -> RoundCost:
+    """Modeled round under the **pipelined** schedule.
+
+    Clients upload with per-client jitter (``upload``); each aggregator
+    launches when its first in-index-order contribution lands and
+    stream-folds the rest, stalling only on unavailable inputs; tree levels
+    chain on their first input. ``wall_clock_s`` is the makespan from round
+    start to the last aggregator's output write — reads hide under uploads,
+    which is where the win over :func:`round_cost`'s phase barriers comes
+    from. Stall time is billed (the function runs while it waits). The
+    1 ms billing granularity is ignored here (<0.1 % on round-scale
+    durations); the discrete-event runtime reproduces ``wall_clock_s``
+    exactly for a no-fault round.
+    """
+    upload = upload or UploadModel()
+    starts, mults = upload.plan(n, rnd)
+    ops = s3_ops(topology, n, m)
+    mem_mb = allocatable_memory_mb(
+        lambda_memory_mb(topology, grad_bytes, m, limits), limits)
+    ok = feasible(topology, grad_bytes, m, limits)
+
+    finishes: list[float] = []
+    durations: list[float] = []          # per-aggregator busy time (billed)
+
+    def run_fold(launch, avail, in_b, out_b):
+        end = _fold_finish(launch, avail, in_b, out_b, limits, cold)
+        finishes.append(end)
+        durations.append(end - launch)
+        return end
+
+    if topology == "gradssharding":
+        sb = list(shard_bytes) if shard_bytes is not None \
+            else uniform_shard_bytes(grad_bytes, m)
+        cum = np.cumsum(sb)
+        # client i publishes shard j at start_i + sequential-PUT prefix time
+        avail = [[starts[i] + upload.upload_s(int(cum[j]), mults[i])
+                  for i in range(n)] for j in range(m)]
+        for j in range(m):
+            run_fold(avail[j][0], avail[j], [sb[j]] * n, sb[j])
+    elif topology == "lambda_fl":
+        k = lambda_fl_branching(n)
+        grad_avail = [starts[i] + upload.upload_s(grad_bytes, mults[i])
+                      for i in range(n)]
+        leaf_ends = []
+        for members in _tree_groups(n, k):
+            avail = [grad_avail[i] for i in members]
+            leaf_ends.append(run_fold(avail[0], avail,
+                                      [grad_bytes] * len(members),
+                                      grad_bytes))
+        run_fold(leaf_ends[0], leaf_ends, [grad_bytes] * len(leaf_ends),
+                 grad_bytes)
+    elif topology == "lifl":
+        b = max(2, math.ceil(round(n ** (1 / 3), 9)))
+        grad_avail = [starts[i] + upload.upload_s(grad_bytes, mults[i])
+                      for i in range(n)]
+        level_in = grad_avail
+        for _level in (1, 2):
+            ends = []
+            for members in _tree_groups(len(level_in), b):
+                avail = [level_in[i] for i in members]
+                ends.append(run_fold(avail[0], avail,
+                                     [grad_bytes] * len(members),
+                                     grad_bytes))
+            level_in = ends
+        run_fold(level_in[0], level_in, [grad_bytes] * len(level_in),
+                 grad_bytes)
+    else:
+        raise ValueError(topology)
+
+    wall = max(finishes)
+    gb_s = mem_mb / 1024.0 * sum(durations)
+    lam_cost = gb_s * limits.gb_s_price
+    s3_cost = ops.puts * limits.s3_put_price + ops.gets * limits.s3_get_price
+    return RoundCost(topology, n, m, grad_bytes, wall, gb_s, lam_cost,
+                     s3_cost, ops, mem_mb, len(durations), ok, ())
+
+
+def barrier_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
+                       limits: LambdaLimits = LambdaLimits(),
+                       upload: UploadModel | None = None,
+                       rnd: int = 0, cold: bool = True) -> RoundCost:
+    """:func:`round_cost` extended with the same upload model and cold-start
+    accounting as :func:`pipelined_round_cost`, so the two are directly
+    comparable: all uploads complete (a barrier), then each aggregation
+    phase runs to its slowest member before the next starts."""
+    upload = upload or UploadModel()
+    starts, mults = upload.plan(n, rnd)
+    base = round_cost(topology, grad_bytes, n, m, limits)
+    upload_span = max((starts[i] + upload.upload_s(grad_bytes, mults[i])
+                       for i in range(n)), default=0.0)
+    cold_s = (limits.cold_start_s if cold else 0.0) * n_phases(topology)
+    wall = upload_span + cold_s + base.wall_clock_s
+    return RoundCost(topology, n, m, grad_bytes, wall, base.lambda_gb_s,
+                     base.lambda_cost, base.s3_cost, base.ops,
+                     base.memory_mb, base.n_invocations, base.feasible,
+                     base.phase_timings)
 
 
 def round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,

@@ -1,3 +1,5 @@
+from repro.serverless.event_sim import AvailabilityMap, Event, EventSim, \
+    Timeline
 from repro.serverless.runtime import (
     FaultPlan,
     InjectedFault,
@@ -7,7 +9,10 @@ from repro.serverless.runtime import (
     LambdaRuntime,
     LambdaTimeout,
     PhaseHandle,
+    fn_family,
 )
 
-__all__ = ["FaultPlan", "InjectedFault", "InvocationRecord", "LambdaContext",
-           "LambdaOOM", "LambdaRuntime", "LambdaTimeout", "PhaseHandle"]
+__all__ = ["AvailabilityMap", "Event", "EventSim", "FaultPlan",
+           "InjectedFault", "InvocationRecord", "LambdaContext", "LambdaOOM",
+           "LambdaRuntime", "LambdaTimeout", "PhaseHandle", "Timeline",
+           "fn_family"]

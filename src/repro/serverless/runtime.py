@@ -8,25 +8,61 @@ modeling the platform around them:
     allocated size raises :class:`LambdaOOM` (the paper derived its
     3×input+450 MB formula from exactly such failures);
   * billing at 1 ms granularity: allocated-GB × billed-duration, with the
-    modeled S3 transfer times (45–68 MB/s per stream) dominating, matching
-    the paper's 91–99 % I/O share;
-  * cold starts, per-invocation straggler slowdowns, and fault injection
-    with idempotent retry (first-write-wins PUTs) and speculative
-    re-execution — the fault-tolerance substrate for production rounds;
-  * a logical clock: concurrent invocations cost max(), sequential phases
-    add — no real threads, fully deterministic.
+    modeled S3 transfer times (45–68 MB/s per stream, plus the ~40 ms
+    per-GET first-byte latency floor, matching
+    :func:`repro.core.cost_model.aggregator_timing`) dominating — the
+    paper's 91–99 % I/O share;
+  * cold starts against a **function-family warm pool**: warm state is
+    keyed on the round-stripped function name (``r{3}-shard{7}`` and
+    ``r{4}-shard{7}`` are the same family), so multi-round simulations pay
+    one cold start per family, not one per round. ``warm_pool_size`` caps
+    how many families stay warm (LRU eviction); ``None`` = unbounded;
+  * per-invocation straggler slowdowns and fault injection with idempotent
+    retry (first-write-wins PUTs) and speculative re-execution — the
+    fault-tolerance substrate for production rounds;
+  * a discrete-event logical clock (:mod:`repro.serverless.event_sim`):
+    every invocation is anchored at an absolute ``start_s``/``end_s`` on
+    the round timeline, cross-entity dependencies synchronise through an
+    :class:`~event_sim.AvailabilityMap`, and the event heap replays
+    uploads/completions with deterministic tie-breaking — no real threads,
+    fully deterministic. (:class:`~event_sim.Timeline` is the standalone
+    per-entity clock; the scheduling layer uses it for client read-back
+    folds.)
+
+Two scheduling policies drive the clock (knob: ``schedule=`` on the
+aggregation round functions, or env ``REPRO_AGG_SCHEDULE``):
+
+  * ``"barrier"`` (default, the legacy semantics): invocations of a
+    :class:`PhaseHandle` start together at the phase start; the phase wall
+    is the max duration over winning attempts; sequential phases add.
+  * ``"pipelined"``: an invocation launches when the *first* of its inputs
+    becomes available and each subsequent ``ctx.get`` stalls until that
+    key's published availability — the streaming prefix fold. Stall time is
+    billed (the function is running while it waits) and recorded in
+    ``InvocationRecord.stall_s``.
 """
 from __future__ import annotations
 
 import math
+import re
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
-from repro.config import LambdaLimits
-from repro.core.cost_model import AGG_COMPUTE_BPS
+from repro.config import AGG_COMPUTE_BPS, DEFAULT_LIMITS, LambdaLimits
+from repro.serverless.event_sim import AvailabilityMap, EventSim
 from repro.store import ObjectStore
 
 MB = 1024 * 1024
+
+# "r{rnd}-" prefix of per-round function names; stripping it yields the
+# function *family* that warm-container state is keyed on.
+_ROUND_PREFIX = re.compile(r"^r\d+-")
+
+
+def fn_family(fn_name: str) -> str:
+    """Round-stripped function name: ``r3-shard7`` -> ``shard7``."""
+    return _ROUND_PREFIX.sub("", fn_name)
 
 
 class LambdaOOM(RuntimeError):
@@ -70,25 +106,39 @@ class InvocationRecord:
     failed: bool = False
     speculative: bool = False
     # modeled time split (pre-slowdown; duration_s applies the straggler
-    # multiplier on top of cold start + these three components)
+    # multiplier on top of cold start + these three components + stalls)
     read_s: float = 0.0
     write_s: float = 0.0
     compute_s: float = 0.0
+    # absolute logical times on the round timeline, and time spent stalled
+    # waiting for input availability (pipelined schedule only)
+    start_s: float = 0.0
+    end_s: float = 0.0
+    stall_s: float = 0.0
+
+    @property
+    def family(self) -> str:
+        return fn_family(self.fn_name)
 
     @property
     def cost(self) -> float:
-        return self.billed_gb_s * LambdaLimits().gb_s_price
+        return self.billed_gb_s * DEFAULT_LIMITS.gb_s_price
 
 
 class LambdaContext:
     """Per-invocation context handed to the function body.
 
     The body does its arithmetic with numpy; the context tracks *modeled*
-    time (transfer + compute) and *actual* registered buffer bytes.
+    time (transfer + compute + availability stalls) and *actual* registered
+    buffer bytes. ``start_s`` anchors the invocation on the round's absolute
+    timeline; when an :class:`AvailabilityMap` is attached (pipelined
+    schedule), ``get``/``wait_key`` stall until the key's published time.
     """
 
     def __init__(self, runtime: "LambdaRuntime", memory_mb: float,
-                 timeout_s: float, fn_name: str, attempt: int):
+                 timeout_s: float, fn_name: str, attempt: int,
+                 start_s: float = 0.0,
+                 avail: AvailabilityMap | None = None):
         self._rt = runtime
         self.memory_mb = memory_mb
         self.timeout_s = timeout_s
@@ -101,9 +151,17 @@ class LambdaContext:
         self.read_s = 0.0
         self.write_s = 0.0
         self.compute_s = 0.0
+        self.stall_s = 0.0
+        self.start_s = float(start_s)
+        self._avail = avail
         self._held = 0
         self.peak_bytes = 0
         self.time_s = 0.0
+
+    @property
+    def now_s(self) -> float:
+        """Absolute logical time inside this invocation (pre-slowdown)."""
+        return self.start_s + self.time_s
 
     # -- memory -------------------------------------------------------------
     def alloc(self, nbytes: int) -> None:
@@ -118,12 +176,25 @@ class LambdaContext:
     def free(self, nbytes: int) -> None:
         self._held = max(0, self._held - int(nbytes))
 
+    # -- availability (pipelined schedule) -----------------------------------
+    def wait_key(self, key: str) -> None:
+        """Stall until ``key`` is available (no-op under the barrier
+        schedule, whose phase structure already guarantees ordering)."""
+        if self._avail is None:
+            return
+        stall = self._avail.time_of(key) - self.now_s
+        if stall > 0.0:
+            self.stall_s += stall
+            self._advance(stall)
+
     # -- store I/O (billed time) ---------------------------------------------
     def get(self, store: ObjectStore, key: str):
+        self.wait_key(key)
         value = store.get(key)
         nb = value.nbytes if hasattr(value, "nbytes") else len(value)
         self.read_bytes += nb
-        t = nb / (self.limits.s3_read_mbps * 1e6)
+        t = self.limits.s3_get_latency_s + nb / (self.limits.s3_read_mbps
+                                                 * 1e6)
         self.read_s += t
         # transient deserialization copy: the 3x formula's third buffer
         self.alloc(nb)
@@ -165,16 +236,33 @@ class PhaseHandle:
     not array contents), a deferred execution engine can run a whole phase's
     invocations with lazy handles and batch the actual arithmetic afterwards
     while every per-invocation record stays identical.
+
+    ``start_s`` anchors the phase on the absolute timeline (defaults to the
+    runtime cursor). Under the barrier schedule every invocation launches at
+    ``start_s``; the pipelined scheduler passes a per-invocation
+    ``launch_s`` instead. When ``out_key`` is given, the winning attempt's
+    completion publishes that key's availability through the event heap.
     """
 
-    def __init__(self, runtime: "LambdaRuntime"):
+    def __init__(self, runtime: "LambdaRuntime", start_s: float | None = None):
         self._rt = runtime
+        self.start_s = runtime.now if start_s is None else float(start_s)
+        self.end_s = self.start_s
         self.rec_start = len(runtime.records)
         self.winners: list[InvocationRecord] = []
 
-    def invoke_reliable(self, fn, **kw):
-        result, rec = self._rt.invoke_reliable(fn, **kw)
+    def invoke_reliable(self, fn, *, launch_s: float | None = None,
+                        out_key: str | None = None,
+                        wait_avail: bool = False, **kw):
+        start = self.start_s if launch_s is None else float(launch_s)
+        result, rec = self._rt.invoke_reliable(
+            fn, start_s=start, wait_avail=wait_avail, **kw)
         self.winners.append(rec)
+        self.end_s = max(self.end_s, rec.end_s)
+        if out_key is not None:
+            # completion event: publishes availability when the heap drains
+            self._rt.sim.at(rec.end_s, self._rt.avail.publish, out_key,
+                            rec.end_s, priority=1)
         return result, rec
 
     @property
@@ -191,21 +279,64 @@ class LambdaRuntime:
     """Invokes function bodies under platform semantics."""
 
     def __init__(self, limits: LambdaLimits | None = None,
-                 faults: FaultPlan | None = None):
-        self.limits = limits or LambdaLimits()
+                 faults: FaultPlan | None = None,
+                 warm_pool_size: int | None = None):
+        self.limits = limits or DEFAULT_LIMITS
         self.faults = faults or FaultPlan()
+        self.warm_pool_size = warm_pool_size
         self.records: list[InvocationRecord] = []
-        self._warm: set[str] = set()
+        self._warm: OrderedDict[str, bool] = OrderedDict()
+        self.sim = EventSim()
+        self.avail = AvailabilityMap()
 
     # ------------------------------------------------------------------
-    def phase(self) -> PhaseHandle:
+    @property
+    def now(self) -> float:
+        """The runtime's logical-clock cursor."""
+        return self.sim.now
+
+    def advance_to(self, time: float) -> None:
+        self.sim.advance_to(time)
+
+    def phase(self, start_s: float | None = None) -> PhaseHandle:
         """Start a concurrent phase (see :class:`PhaseHandle`)."""
-        return PhaseHandle(self)
+        return PhaseHandle(self, start_s)
+
+    def finish_phase(self, ph: PhaseHandle, *, barrier: bool = True) -> float:
+        """Drain the event heap (deterministic completion/publish order) and
+        advance the cursor: to ``start + wall_s`` under barrier semantics
+        (retries bill but don't stretch the phase — the legacy arithmetic),
+        or to the true max completion time under pipelined semantics.
+        Returns the new cursor position."""
+        self.sim.drain()
+        end = ph.start_s + ph.wall_s if barrier else ph.end_s
+        self.advance_to(end)
+        return end
+
+    # -- warm pool ------------------------------------------------------------
+    def prewarm(self, *fn_names: str) -> None:
+        """Provision warm containers for the given functions (or families):
+        their next invocation skips the cold start. Models provisioned
+        concurrency; the paper's Table IV excludes cold starts this way."""
+        for name in fn_names:
+            self._check_warm(fn_family(name))
+
+    def _check_warm(self, family: str) -> bool:
+        """True if the family has a warm container; touches LRU order and
+        evicts beyond ``warm_pool_size``."""
+        warm = family in self._warm
+        self._warm[family] = True
+        self._warm.move_to_end(family)
+        if self.warm_pool_size is not None:
+            while len(self._warm) > self.warm_pool_size:
+                self._warm.popitem(last=False)
+        return warm
 
     # ------------------------------------------------------------------
     def invoke(self, fn: Callable[[LambdaContext], Any], *, fn_name: str,
                memory_mb: float, timeout_s: float | None = None,
-               attempt: int = 0, speculative: bool = False):
+               attempt: int = 0, speculative: bool = False,
+               start_s: float | None = None, wait_avail: bool = False):
         """Run one invocation; returns (result, record). Raises on OOM (a
         permanent config error) but records injected faults for retry."""
         if memory_mb > self.limits.max_memory_mb:
@@ -213,11 +344,13 @@ class LambdaRuntime:
                 f"{fn_name}: requested {memory_mb:.0f} MB > platform max "
                 f"{self.limits.max_memory_mb} MB")
         timeout_s = timeout_s or self.limits.max_timeout_s
-        ctx = LambdaContext(self, memory_mb, timeout_s, fn_name, attempt)
-        cold = fn_name not in self._warm
+        start = self.now if start_s is None else float(start_s)
+        ctx = LambdaContext(self, memory_mb, timeout_s, fn_name, attempt,
+                            start_s=start,
+                            avail=self.avail if wait_avail else None)
+        cold = not self._check_warm(fn_family(fn_name))
         if cold:
             ctx.time_s += self.limits.cold_start_s
-        self._warm.add(fn_name)
 
         failed = False
         result = None
@@ -231,7 +364,10 @@ class LambdaRuntime:
             failed = True
         finally:
             slow = self.faults.slowdown(fn_name, attempt)
-            duration = ctx.time_s * slow
+            # the straggler multiplier stretches *work* (cold start, I/O,
+            # compute), not availability stalls: waiting for an upload that
+            # lands at a fixed absolute time doesn't slow with the CPU
+            duration = (ctx.time_s - ctx.stall_s) * slow + ctx.stall_s
             billed = math.ceil(duration * 1000) / 1000  # 1 ms granularity
             rec = InvocationRecord(
                 fn_name=fn_name, memory_mb=memory_mb, duration_s=duration,
@@ -242,7 +378,9 @@ class LambdaRuntime:
                 + ctx.peak_bytes / MB,
                 attempt=attempt, failed=failed, speculative=speculative,
                 read_s=ctx.read_s, write_s=ctx.write_s,
-                compute_s=ctx.compute_s)
+                compute_s=ctx.compute_s,
+                start_s=start, end_s=start + duration,
+                stall_s=ctx.stall_s)
             self.records.append(rec)
         if failed:
             return None, rec
@@ -250,20 +388,26 @@ class LambdaRuntime:
 
     def invoke_reliable(self, fn, *, fn_name: str, memory_mb: float,
                         timeout_s: float | None = None, max_attempts: int = 3,
-                        straggler_threshold_s: float | None = None):
+                        straggler_threshold_s: float | None = None,
+                        start_s: float | None = None,
+                        wait_avail: bool = False):
         """Invoke with retry-on-failure and optional speculative duplicate.
 
         Retries are safe because aggregators write with first-write-wins
-        conditional PUTs (idempotent). If the attempt's modeled duration
-        exceeds ``straggler_threshold_s``, a speculative duplicate is
-        launched and the faster of the two defines wall-clock (the paper's
-        cold-start-variance mitigation, Kim et al. [26]).
+        conditional PUTs (idempotent); a retry launches when its failed
+        predecessor dies (``start_s`` chains through ``end_s``). If the
+        attempt's modeled duration exceeds ``straggler_threshold_s``, a
+        speculative duplicate is launched and the faster of the two defines
+        wall-clock (the paper's cold-start-variance mitigation, Kim et al.
+        [26]).
         """
         last = None
+        start = self.now if start_s is None else float(start_s)
         for attempt in range(max_attempts):
             result, rec = self.invoke(fn, fn_name=fn_name,
                                       memory_mb=memory_mb,
-                                      timeout_s=timeout_s, attempt=attempt)
+                                      timeout_s=timeout_s, attempt=attempt,
+                                      start_s=start, wait_avail=wait_avail)
             last = rec
             if not rec.failed:
                 if (straggler_threshold_s is not None
@@ -271,11 +415,13 @@ class LambdaRuntime:
                     dup, dup_rec = self.invoke(
                         fn, fn_name=fn_name, memory_mb=memory_mb,
                         timeout_s=timeout_s, attempt=attempt + 100,
-                        speculative=True)
+                        speculative=True, start_s=start,
+                        wait_avail=wait_avail)
                     if not dup_rec.failed and \
                             dup_rec.duration_s < rec.duration_s:
                         return dup, dup_rec
                 return result, rec
+            start = rec.end_s                 # retry launches after the death
         raise RuntimeError(
             f"{fn_name}: all {max_attempts} attempts failed ({last})")
 
@@ -290,3 +436,5 @@ class LambdaRuntime:
     def reset(self) -> None:
         self.records.clear()
         self._warm.clear()
+        self.sim.reset()
+        self.avail.clear()

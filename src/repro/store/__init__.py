@@ -1,3 +1,3 @@
-from repro.store.object_store import ObjectStore, StoreStats
+from repro.store.object_store import NoSuchKey, ObjectStore, StoreStats
 
-__all__ = ["ObjectStore", "StoreStats"]
+__all__ = ["NoSuchKey", "ObjectStore", "StoreStats"]

@@ -81,6 +81,26 @@ class ObjectStore:
             self.stats.get_log.append((key, nb))
             return value
 
+    def account_gets(self, key: str, count: int) -> int:
+        """Account ``count`` GETs of ``key`` in O(1) without re-reading it.
+
+        Large-N round simulations issue N·M *redundant* client read-backs
+        whose only observable effect is op/byte accounting (every client
+        reads the same averaged shards); looping ``store.get`` over them
+        burns host time linear in N·M. This bumps ``puts/gets``-visible
+        stats (op count, bytes) in one lock acquisition. The per-op
+        ``get_log`` is a debugging aid for individually issued GETs and is
+        deliberately not expanded. Returns the object's byte size."""
+        if count < 0:
+            raise ValueError(f"count must be >= 0, got {count}")
+        with self._lock:
+            if key not in self._objects:
+                raise NoSuchKey(key)
+            nb = _nbytes(self._objects[key])
+            self.stats.gets += count
+            self.stats.bytes_read += count * nb
+            return nb
+
     # -- simulation plane (not billed, no stats) ------------------------------
     def peek(self, key: str):
         """Read without touching stats. Simulation-internal: used by deferred

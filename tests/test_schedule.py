@@ -1,0 +1,330 @@
+"""Round schedules: pipelined vs barrier.
+
+The pipelined schedule moves *time*, never arithmetic: ``avg_flat`` is
+bit-identical to the barrier schedule for every engine × topology ×
+partition, the zero-jitter degenerate case reproduces the barrier
+wall-clock exactly (with the default infinite warm pool), and with
+per-client upload jitter the pipelined wall-clock drops below the barrier
+wall-clock (reads hide under uploads). Also covers: the family-keyed warm
+pool, runtime/analytical timing parity, O(1) read-back accounting, and the
+multi-round overlap session.
+"""
+import numpy as np
+import pytest
+
+from repro.config import DEFAULT_LIMITS
+from repro.core import aggregation as agg
+from repro.core import cost_model as cm
+from repro.core.cost_model import UploadModel
+from repro.serverless import LambdaRuntime, fn_family
+from repro.store import NoSuchKey, ObjectStore
+
+ENGINES = ("streaming", "batched", "incremental")
+TOPOLOGIES = ("gradssharding", "lambda_fl", "lifl")
+
+JITTER = UploadModel(mbps=16.0, jitter_s=3.0, rate_jitter=0.5, seed=11)
+
+
+def _grads(n, size, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal(size).astype(np.float32) for _ in range(n)]
+
+
+def _run(topo, *, engine="streaming", schedule="barrier", n=20, size=5_003,
+         upload=None, runtime=None, store=None, rnd=0, **kw):
+    grads = _grads(n, size)
+    store = store if store is not None else ObjectStore()
+    rt = runtime if runtime is not None else LambdaRuntime()
+    r = agg.aggregate_round(topo, grads, rnd=rnd, store=store, runtime=rt,
+                            engine=engine, schedule=schedule, upload=upload,
+                            **kw)
+    return r, rt, store
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: schedule x engine x topology x partition
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("topo,kw", [
+    ("gradssharding", {"n_shards": 8}),
+    ("lambda_fl", {}),
+    ("lifl", {}),
+    ("lifl", {"colocated": True}),
+])
+def test_pipelined_avg_bit_identical(topo, kw, engine):
+    ref = _run(topo, engine="streaming", schedule="barrier", **kw)[0]
+    got = _run(topo, engine=engine, schedule="pipelined", upload=JITTER,
+               **kw)[0]
+    assert np.array_equal(got.avg_flat, ref.avg_flat), \
+        "pipelining must move time, never arithmetic"
+    assert got.puts == ref.puts and got.gets == ref.gets
+    assert got.schedule == "pipelined" and got.engine == engine
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("partition,sizes", [
+    ("uniform", None),
+    ("layer_contiguous", [1_000, 3, 4_000]),
+    ("balanced", [1_000, 3, 4_000]),
+])
+def test_pipelined_bit_identical_tensor_partitions(partition, sizes, engine):
+    kw = {"n_shards": 4, "partition": partition, "tensor_sizes": sizes}
+    ref = _run("gradssharding", engine="streaming", schedule="barrier",
+               **kw)[0]
+    got = _run("gradssharding", engine=engine, schedule="pipelined",
+               upload=JITTER, **kw)[0]
+    assert np.array_equal(got.avg_flat, ref.avg_flat)
+
+
+def test_incremental_engine_knob():
+    from repro.core.agg_engine import get_backend
+    assert get_backend("incremental").name == "incremental"
+
+
+# ---------------------------------------------------------------------------
+# Degenerate-case equivalence: zero jitter (+ infinite warm pool) pipelined
+# == barrier, exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("topo,kw", [
+    ("gradssharding", {"n_shards": 8}),
+    ("lambda_fl", {}),
+    ("lifl", {}),
+])
+@pytest.mark.parametrize("upload", [None, UploadModel()],
+                         ids=["no-model", "zero-jitter-model"])
+def test_zero_jitter_pipelined_equals_barrier(topo, kw, engine, upload):
+    b = _run(topo, engine=engine, schedule="barrier", upload=upload, **kw)[0]
+    p = _run(topo, engine=engine, schedule="pipelined", upload=upload,
+             **kw)[0]
+    assert p.wall_clock_s == b.wall_clock_s, \
+        "zero jitter must degenerate to the barrier wall-clock exactly"
+    assert np.array_equal(p.avg_flat, b.avg_flat)
+
+
+# ---------------------------------------------------------------------------
+# The overlap win (acceptance criterion: N=20, M=8)
+# ---------------------------------------------------------------------------
+
+def test_pipelined_hides_reads_under_uploads():
+    # jitter wider than the 3 s cold start, so folds genuinely stall on
+    # late uploads instead of hiding every wait under container warm-up
+    wide = UploadModel(mbps=16.0, jitter_s=10.0, rate_jitter=0.5, seed=11)
+    kw = {"n": 20, "n_shards": 8, "size": 131_072, "upload": wide}
+    b = _run("gradssharding", schedule="barrier", **kw)[0]
+    p = _run("gradssharding", schedule="pipelined", **kw)[0]
+    assert p.wall_clock_s < b.wall_clock_s
+    # stalls exist (folds waited on jittered uploads) and are recorded
+    assert any(r.stall_s > 0 for r in p.records)
+    assert all(r.stall_s == 0 for r in b.records)
+
+
+@pytest.mark.parametrize("topo", ["lambda_fl", "lifl"])
+def test_pipelined_wins_on_trees_too(topo):
+    b = _run(topo, schedule="barrier", upload=JITTER)[0]
+    p = _run(topo, schedule="pipelined", upload=JITTER)[0]
+    assert p.wall_clock_s < b.wall_clock_s
+
+
+# ---------------------------------------------------------------------------
+# Runtime timing == analytical model
+# ---------------------------------------------------------------------------
+
+def test_barrier_phase_matches_aggregator_timing():
+    """Satellite: LambdaContext.get charges the per-GET latency, so a
+    no-fault barrier phase equals cold start + aggregator_timing."""
+    n, m, elems = 8, 4, 4_096                     # divisible: equal shards
+    r, rt, _ = _run("gradssharding", n=n, size=elems, n_shards=m)
+    shard_b = elems // m * 4
+    t = cm.aggregator_timing(shard_b, n, shard_b, rt.limits)
+    assert r.phases_s[0] == pytest.approx(
+        rt.limits.cold_start_s + t.total_s, rel=1e-9)
+    rec = r.records[0]
+    assert rec.read_s == pytest.approx(t.read_s, rel=1e-9)
+    assert rec.write_s == pytest.approx(t.write_s, rel=1e-9)
+    assert rec.compute_s == pytest.approx(t.compute_s, rel=1e-9)
+
+
+@pytest.mark.parametrize("topo", TOPOLOGIES)
+def test_pipelined_round_cost_matches_simulation(topo):
+    n, elems, m = 20, 65_536, 8
+    grad_bytes = elems * 4
+    kw = {"n_shards": m} if topo == "gradssharding" else {}
+    mm = m if topo == "gradssharding" else 1
+    sim_p = _run(topo, n=n, size=elems, schedule="pipelined", upload=JITTER,
+                 **kw)[0]
+    sim_b = _run(topo, n=n, size=elems, schedule="barrier", upload=JITTER,
+                 **kw)[0]
+    pc = cm.pipelined_round_cost(topo, grad_bytes, n, mm, upload=JITTER)
+    bc = cm.barrier_round_cost(topo, grad_bytes, n, mm, upload=JITTER)
+    assert pc.wall_clock_s == pytest.approx(sim_p.wall_clock_s, rel=1e-9)
+    assert bc.wall_clock_s == pytest.approx(sim_b.wall_clock_s, rel=1e-9)
+    assert pc.wall_clock_s < bc.wall_clock_s      # the predicted overlap win
+
+
+# ---------------------------------------------------------------------------
+# Warm pool: function families, multi-round, LRU cap
+# ---------------------------------------------------------------------------
+
+def test_fn_family_strips_round_prefix():
+    assert fn_family("r0-shard3") == "shard3"
+    assert fn_family("r12345-l2g0007") == "l2g0007"
+    assert fn_family("f") == "f"                   # no prefix: unchanged
+
+
+def test_multi_round_reuses_warm_containers():
+    rt, store = LambdaRuntime(), ObjectStore()
+    grads = _grads(8, 1_024)
+    for rnd in range(2):
+        agg.aggregate_round("gradssharding", grads, rnd=rnd, store=store,
+                            runtime=rt, n_shards=4)
+    r0 = [r for r in rt.records if r.fn_name.startswith("r0-")]
+    r1 = [r for r in rt.records if r.fn_name.startswith("r1-")]
+    assert all(r.cold_start for r in r0)
+    assert not any(r.cold_start for r in r1), \
+        "round 1 must reuse round 0's warm containers (family-keyed pool)"
+    # and the warm rounds are faster
+    assert max(r.duration_s for r in r1) < max(r.duration_s for r in r0)
+
+
+def test_warm_pool_size_evicts_lru():
+    rt = LambdaRuntime(warm_pool_size=1)
+    _, a0 = rt.invoke(lambda ctx: None, fn_name="r0-a", memory_mb=512)
+    _, b0 = rt.invoke(lambda ctx: None, fn_name="r0-b", memory_mb=512)  # evicts a
+    _, a1 = rt.invoke(lambda ctx: None, fn_name="r1-a", memory_mb=512)
+    assert a0.cold_start and b0.cold_start
+    assert a1.cold_start, "family 'a' was evicted by the 1-slot pool"
+    rt2 = LambdaRuntime(warm_pool_size=2)
+    rt2.invoke(lambda ctx: None, fn_name="r0-a", memory_mb=512)
+    rt2.invoke(lambda ctx: None, fn_name="r0-b", memory_mb=512)
+    _, a2 = rt2.invoke(lambda ctx: None, fn_name="r1-a", memory_mb=512)
+    assert not a2.cold_start
+
+
+def test_record_cost_uses_shared_default_limits():
+    rt = LambdaRuntime()
+    _, rec = rt.invoke(lambda ctx: None, fn_name="f", memory_mb=1024)
+    assert rec.cost == rec.billed_gb_s * DEFAULT_LIMITS.gb_s_price
+
+
+# ---------------------------------------------------------------------------
+# O(1) read-back accounting
+# ---------------------------------------------------------------------------
+
+def test_account_gets_matches_loop_semantics():
+    store = ObjectStore()
+    arr = np.zeros(1_024, np.float32)
+    store.put("k", arr)
+    nb = store.account_gets("k", 5)
+    assert nb == arr.nbytes
+    assert store.stats.gets == 5
+    assert store.stats.bytes_read == 5 * arr.nbytes
+    store.account_gets("k", 0)                     # no-op
+    assert store.stats.gets == 5
+    with pytest.raises(NoSuchKey):
+        store.account_gets("missing", 3)
+    with pytest.raises(ValueError):
+        store.account_gets("k", -1)
+
+
+@pytest.mark.parametrize("topo,m", [("gradssharding", 4), ("lambda_fl", 1),
+                                    ("lifl", 1)])
+def test_round_op_counts_still_match_table_ii(topo, m):
+    """account_gets must preserve the measured Table II op counts."""
+    n = 20
+    r = _run(topo, n=n, n_shards=m)[0] if topo == "gradssharding" \
+        else _run(topo, n=n)[0]
+    expect = cm.s3_ops(topo, n, m)
+    assert r.puts == expect.puts and r.gets == expect.gets
+
+
+# ---------------------------------------------------------------------------
+# Multi-round pipelining: round r+1 uploads overlap round r read-back
+# ---------------------------------------------------------------------------
+
+def _session(schedule, upload, rounds=3, n=6, size=8_192):
+    from repro.launch.train import federated_train_loop
+    grads_by_round = [_grads(n, size, seed=100 + r) for r in range(rounds)]
+    return federated_train_loop(
+        lambda rnd: grads_by_round[rnd], rounds=rounds, n_shards=4,
+        schedule=schedule, upload=upload)
+
+
+def test_multi_round_session_overlap_win():
+    up = UploadModel(mbps=16.0, download_mbps=32.0, jitter_s=2.0,
+                     rate_jitter=0.5, seed=3)
+    b = _session("barrier", up)
+    p = _session("pipelined", up)
+    assert p["session_wall_s"] < b["session_wall_s"]
+    # identical arithmetic every round
+    for rb, rp in zip(b["results"], p["results"]):
+        assert np.array_equal(rb.avg_flat, rp.avg_flat)
+    # rounds genuinely overlap: a later round starts before the previous
+    # round's slowest client has finished reading back
+    res = p["results"]
+    assert res[1].round_start_s < res[0].round_end_s
+    # per-client times are threaded between rounds
+    assert res[1].round_start_s == pytest.approx(min(res[0].client_done_s))
+
+
+def test_multi_round_session_degenerates_without_jitter():
+    b = _session("barrier", None)
+    p = _session("pipelined", None)
+    assert p["session_wall_s"] == pytest.approx(b["session_wall_s"])
+
+
+# ---------------------------------------------------------------------------
+# Knobs
+# ---------------------------------------------------------------------------
+
+def test_schedule_env_knob(monkeypatch):
+    monkeypatch.delenv("REPRO_AGG_SCHEDULE", raising=False)
+    assert agg.get_schedule(None) == "barrier"
+    assert agg.get_schedule("pipelined") == "pipelined"
+    monkeypatch.setenv("REPRO_AGG_SCHEDULE", "pipelined")
+    assert agg.get_schedule(None) == "pipelined"
+    assert agg.get_schedule("auto") == "pipelined"
+    r = _run("gradssharding", n=4, size=512, n_shards=2, schedule=None)[0]
+    assert r.schedule == "pipelined"
+    with pytest.raises(ValueError, match="unknown aggregation schedule"):
+        agg.get_schedule("warp-drive")
+
+
+def test_straggler_slowdown_does_not_stretch_stalls():
+    """The slowdown multiplier models a slow CPU; waiting for an upload
+    that lands at a fixed absolute time must not be multiplied by it."""
+    from repro.serverless import FaultPlan
+    store = ObjectStore()
+    store.put("k", np.zeros(13, np.float32))
+    rt = LambdaRuntime(faults=FaultPlan(slow={("f", 0): 2.0}))
+    rt.avail.publish("k", 10.0)
+
+    def body(ctx):
+        ctx.get(store, "k")
+
+    _, rec = rt.invoke(body, fn_name="f", memory_mb=512, start_s=0.0,
+                       wait_avail=True)
+    work = rec.duration_s - rec.stall_s
+    assert rec.stall_s == pytest.approx(10.0 - rt.limits.cold_start_s)
+    # duration = 2x the work (cold start + read), plus the unscaled stall
+    read = rt.limits.s3_get_latency_s + 13 * 4 / (rt.limits.s3_read_mbps
+                                                  * 1e6)
+    assert work == pytest.approx(2.0 * (rt.limits.cold_start_s + read))
+
+
+def test_faults_and_stragglers_compose_with_pipelined():
+    from repro.serverless import FaultPlan
+    faults = FaultPlan(fail={("r0-shard1", 0)}, slow={("r0-shard0", 0): 25.0})
+    grads = _grads(8, 2_048)
+    store, rt = ObjectStore(), LambdaRuntime(faults=faults)
+    r = agg.aggregate_round("gradssharding", grads, rnd=0, store=store,
+                            runtime=rt, n_shards=4, schedule="pipelined",
+                            upload=JITTER, straggler_threshold_s=1.0)
+    acc = grads[0].astype(np.float32).copy()
+    for g in grads[1:]:
+        acc += g
+    assert np.array_equal(r.avg_flat, acc / len(grads))
+    assert any(rec.failed for rec in rt.records)
+    assert any(rec.speculative for rec in rt.records)
