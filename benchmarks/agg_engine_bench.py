@@ -29,9 +29,7 @@ import time
 import numpy as np
 
 from benchmarks.common import emit_timing, table
-from repro.core import aggregation as agg
-from repro.serverless import LambdaRuntime
-from repro.store import ObjectStore
+from repro.api import FederatedSession
 
 MB = 1024 * 1024
 
@@ -39,11 +37,10 @@ TOPOLOGIES = ("gradssharding", "lambda_fl", "lifl")
 
 
 def run_round(topo, grads, engine, n_shards):
-    kw = {"n_shards": n_shards} if topo == "gradssharding" else {}
-    store, rt = ObjectStore(), LambdaRuntime()
+    session = FederatedSession(topology=topo, n_shards=n_shards,
+                               engine=engine)
     t0 = time.perf_counter()
-    r = agg.aggregate_round(topo, grads, rnd=0, store=store, runtime=rt,
-                            engine=engine, **kw)
+    r = session.round(grads)
     host_s = time.perf_counter() - t0
     return r, host_s
 

@@ -25,16 +25,17 @@ import time
 import numpy as np
 
 from benchmarks.common import emit_timing, table
-from repro.core import aggregation as agg
+from repro.api import FederatedSession
 from repro.core import cost_model as cm
 from repro.core.cost_model import UploadModel
-from repro.serverless import LambdaRuntime
 from repro.store import ObjectStore
 
 MB = 1024 * 1024
 
 SWEEP_N = (20, 100)
 SWEEP_M = (4, 16, 64)
+SMOKE_N = (20,)
+SMOKE_M = (4,)
 
 # FL clients are edge devices: heterogeneous uplinks (2x rate spread, 30 s
 # start jitter). The pipelined win is the part of the upload span the
@@ -44,11 +45,11 @@ SWEEP_M = (4, 16, 64)
 UPLOAD = UploadModel(mbps=16.0, jitter_s=30.0, rate_jitter=1.0, seed=0)
 
 
-def modeled_walls(grad_mb: float):
+def modeled_walls(grad_mb: float, sweep_n=SWEEP_N, sweep_m=SWEEP_M):
     rows = []
     gb = int(grad_mb * MB)
-    for n in SWEEP_N:
-        for m in SWEEP_M:
+    for n in sweep_n:
+        for m in sweep_m:
             b = cm.barrier_round_cost("gradssharding", gb, n, m,
                                       upload=UPLOAD)
             p = cm.pipelined_round_cost("gradssharding", gb, n, m,
@@ -64,25 +65,23 @@ def modeled_walls(grad_mb: float):
           ["N", "M", "barrier (s)", "pipelined (s)", "win"], rows)
 
 
-def sim_throughput(elems: int, rounds: int):
+def sim_throughput(elems: int, rounds: int, sweep_n=SWEEP_N,
+                   sweep_m=SWEEP_M):
     rows = []
     rng = np.random.default_rng(0)
-    for n in SWEEP_N:
+    for n in sweep_n:
         grads = [rng.standard_normal(elems).astype(np.float32)
                  for _ in range(n)]
-        for m in SWEEP_M:
+        for m in sweep_m:
             per_sched = {}
             for sched in ("barrier", "pipelined"):
-                store, rt = ObjectStore(), LambdaRuntime()
-                agg.aggregate_round(            # warm-up (allocators, pool)
-                    "gradssharding", grads, rnd=0, store=store, runtime=rt,
-                    n_shards=m, schedule=sched, upload=UPLOAD)
+                session = FederatedSession(
+                    topology="gradssharding", n_shards=m, schedule=sched,
+                    upload=UPLOAD, keep_records=False)
+                session.round(grads)            # warm-up (allocators, pool)
                 t0 = time.perf_counter()
-                for rnd in range(1, rounds + 1):
-                    agg.aggregate_round(
-                        "gradssharding", grads, rnd=rnd, store=store,
-                        runtime=rt, n_shards=m, schedule=sched,
-                        upload=UPLOAD)
+                for _ in range(rounds):
+                    session.round(grads)
                 host = (time.perf_counter() - t0) / rounds
                 per_sched[sched] = host
                 emit_timing(f"event_pipeline/host/N{n}/M{m}/{sched}", host,
@@ -126,10 +125,16 @@ def main(argv=None) -> None:
     ap.add_argument("--sim-elems", type=int, default=65_536,
                     help="per-gradient elements for the host-throughput sim")
     ap.add_argument("--sim-rounds", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="1-config CI run (N=20, M=4, tiny gradients)")
     args = ap.parse_args(argv)
 
-    modeled_walls(args.grad_mb)
-    sim_throughput(args.sim_elems, args.sim_rounds)
+    sweep_n = SMOKE_N if args.smoke else SWEEP_N
+    sweep_m = SMOKE_M if args.smoke else SWEEP_M
+    if args.smoke:
+        args.sim_elems, args.sim_rounds = 16_384, 1
+    modeled_walls(args.grad_mb, sweep_n, sweep_m)
+    sim_throughput(args.sim_elems, args.sim_rounds, sweep_n, sweep_m)
     readback_accounting_micro()
     print("\nPipelined rounds launch each shard aggregator on its first "
           "contribution and fold in index order (bit-identical prefix "

@@ -10,10 +10,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, table
+from repro.api import FederatedSession
 from repro.config import LambdaLimits
-from repro.core import aggregation as agg
-from repro.serverless import LambdaRuntime
-from repro.store import ObjectStore
 
 MB = 1024 * 1024
 N = 20
@@ -38,11 +36,10 @@ def main() -> None:
         rng = np.random.default_rng(0)
         grads = [rng.standard_normal(elems).astype(np.float32)
                  for _ in range(N)]
-        store, rt = ObjectStore(), LambdaRuntime()
+        session = FederatedSession(topology="gradssharding", n_shards=m)
         # pre-warm (paper excludes cold starts: 14 warm invocations)
-        rt.prewarm(*(f"r0-shard{j}" for j in range(m)))
-        res = agg.aggregate_round("gradssharding", grads, rnd=0,
-                                  store=store, runtime=rt, n_shards=m)
+        session.runtime.prewarm(*(f"shard{j}" for j in range(m)))
+        res = session.round(grads)
         # bytes scale linearly back to paper size; the per-GET latency
         # floor does not (it is size-independent: N GETs per aggregator)
         scale = SIM_SCALE

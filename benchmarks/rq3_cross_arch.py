@@ -13,11 +13,9 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, table
+from repro.api import FederatedSession
 from repro.config import LambdaLimits
-from repro.core import aggregation as agg
 from repro.core import cost_model as cm
-from repro.serverless import LambdaRuntime
-from repro.store import ObjectStore
 
 MB = 1024 * 1024
 N = 20
@@ -46,9 +44,7 @@ def _verify_arithmetic(topo: str, grad_mb: float, m: int) -> bool:
     rng = np.random.default_rng(1)
     grads = [rng.standard_normal(elems).astype(np.float32)
              for _ in range(N)]
-    store, rt = ObjectStore(), LambdaRuntime()
-    r = agg.aggregate_round(topo, grads, rnd=0, store=store, runtime=rt,
-                            n_shards=m)
+    r = FederatedSession(topology=topo, n_shards=m).round(grads)
     ref = grads[0].copy()
     for g in grads[1:]:
         ref += g
@@ -56,9 +52,10 @@ def _verify_arithmetic(topo: str, grad_mb: float, m: int) -> bool:
     return np.allclose(r.avg_flat, ref, rtol=1e-5, atol=1e-6)
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     rows = []
-    for model, (grad_mb, m) in MODELS.items():
+    models = dict(list(MODELS.items())[:1]) if smoke else MODELS
+    for model, (grad_mb, m) in models.items():
         grad_b = int(grad_mb * MB)
         for topo, mm in (("gradssharding", m), ("lambda_fl", 1),
                          ("lifl", 1)):

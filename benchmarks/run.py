@@ -1,9 +1,12 @@
 """Run every benchmark: one per paper table/figure + kernels + roofline.
 
 Prints ``name,us_per_call,derived`` CSV rows (plus human-readable tables).
+``--smoke`` runs a 1-config CI subset (rq3 + event_pipeline) so call-site
+migrations can't silently break the benchmark suite.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
@@ -33,10 +36,22 @@ BENCHES = [
 ]
 
 
-def main() -> None:
+SMOKE_BENCHES = [
+    ("rq3_cross_arch (smoke)", lambda: rq3_cross_arch.main(smoke=True)),
+    ("event_pipeline (smoke)",
+     lambda: event_pipeline_bench.main(["--smoke"])),
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset: 1-config rq3 + event_pipeline")
+    args = ap.parse_args(argv)
     header()
+    benches = SMOKE_BENCHES if args.smoke else BENCHES
     failures = []
-    for name, fn in BENCHES:
+    for name, fn in benches:
         print(f"\n{'='*72}\n== {name}\n{'='*72}")
         try:
             fn()
@@ -47,7 +62,7 @@ def main() -> None:
         print(f"\n{len(failures)} benchmark(s) FAILED: "
               f"{[n for n, _ in failures]}")
         sys.exit(1)
-    print(f"\nAll {len(BENCHES)} benchmarks passed.")
+    print(f"\nAll {len(benches)} benchmarks passed.")
 
 
 if __name__ == "__main__":

@@ -1,58 +1,53 @@
-"""Quickstart: one GradsSharding aggregation round, end to end.
+"""Quickstart: the session API in ~15 lines.
 
-Shards 20 client gradients into M=4 pieces, aggregates each shard in an
-independent simulated-Lambda function, reconstructs, and verifies the
-result is bit-identical to full-vector FedAvg — the paper's central claim.
+One ``SessionConfig`` declares the whole substrate (topology, shard count,
+engine, schedule, upload model); ``session.round(grads)`` runs a simulated
+serverless aggregation round. Swapping the topology — including the
+``sharded_tree`` plugin registered via ``@register_topology`` — changes
+cost and latency, never the learning result: GradsSharding is bit-identical
+to full-vector FedAvg, and sharded_tree is bit-identical to λ-FL.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import aggregation as agg
-from repro.core import cost_model as cm
-from repro.serverless import LambdaRuntime
-from repro.store import ObjectStore
+from repro import FederatedSession, SessionConfig
 
 N_CLIENTS, M, GRAD_SIZE = 20, 4, 100_000
 
 
 def main():
     rng = np.random.default_rng(0)
-    client_grads = [rng.standard_normal(GRAD_SIZE).astype(np.float32)
-                    for _ in range(N_CLIENTS)]
+    grads = [rng.standard_normal(GRAD_SIZE).astype(np.float32)
+             for _ in range(N_CLIENTS)]
+    reference = np.mean(grads, axis=0, dtype=np.float32)
 
-    store, runtime = ObjectStore(), LambdaRuntime()
-    result = agg.aggregate_round(
-        "gradssharding", client_grads, rnd=0, store=store, runtime=runtime,
-        n_shards=M)
+    results = {}
+    for topology in ("gradssharding", "lambda_fl", "lifl", "sharded_tree"):
+        session = FederatedSession(SessionConfig(topology=topology,
+                                                 n_shards=M))
+        results[topology] = r = session.round(grads)
+        print(f"{topology:14s}: wall {r.wall_clock_s:6.2f}s "
+              f"({len(r.phases_s)} phase(s)), ops {r.puts}P+{r.gets}G, "
+              f"peak-mem {r.peak_memory_mb:5.0f} MB, "
+              f"cost ${session.total_cost():.8f}/round")
 
-    # the paper's equivalence claim: bit-identical to full-vector FedAvg
-    reference = client_grads[0].copy()
-    for g in client_grads[1:]:
-        reference += g
-    reference /= N_CLIENTS
-    assert np.array_equal(result.avg_flat, reference)
-    print(f"bit-identical to full FedAvg: True")
+    # the paper's equivalence claims, extended to the plugin topology
+    assert np.array_equal(results["gradssharding"].avg_flat,
+                          _streaming_mean(grads))
+    assert np.array_equal(results["sharded_tree"].avg_flat,
+                          results["lambda_fl"].avg_flat)
+    for topology, r in results.items():
+        assert np.allclose(r.avg_flat, reference, rtol=1e-5, atol=1e-6)
+    print("gradssharding bit-identical to full FedAvg: True")
+    print("sharded_tree bit-identical to lambda_fl:    True")
 
-    ops = cm.s3_ops("gradssharding", N_CLIENTS, M)
-    print(f"wall-clock (modeled): {result.wall_clock_s:.2f}s "
-          f"in {len(result.phases_s)} phase(s)")
-    print(f"S3 ops: {result.puts} PUTs + {result.gets} GETs "
-          f"(Table II: {ops.puts}/{ops.gets})")
-    print(f"peak aggregator memory: {result.peak_memory_mb:.0f} MB "
-          f"(O(|θ|/M) + 450 MB runtime)")
-    print(f"lambda cost: ${result.lambda_cost:.8f}, "
-          f"s3 cost: ${result.s3_cost():.8f} per round")
 
-    # compare against the tree baselines
-    for topo in ("lambda_fl", "lifl"):
-        s, r = ObjectStore(), LambdaRuntime()
-        res = agg.aggregate_round(topo, client_grads, rnd=0, store=s,
-                                  runtime=r)
-        print(f"{topo:14s}: wall {res.wall_clock_s:.2f}s "
-              f"({len(res.phases_s)} phases), "
-              f"ops {res.puts}+{res.gets}, "
-              f"allclose={np.allclose(res.avg_flat, reference, rtol=1e-5, atol=1e-6)}")
+def _streaming_mean(grads):
+    acc = grads[0].copy()
+    for g in grads[1:]:
+        acc += g
+    return acc / len(grads)
 
 
 if __name__ == "__main__":

@@ -24,12 +24,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.api import FederatedSession, SessionConfig
 from repro.configs import get_arch
 from repro.core.cost_model import UploadModel
 from repro.core.fedavg import apply_delta, local_sgd_update, model_delta
 from repro.core.sharding import flatten, unflatten
 from repro.data import SyntheticLM
-from repro.launch.train import federated_train_loop
 from repro.models import registry as models
 
 
@@ -44,7 +44,8 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--topology", default="gradssharding",
-                    choices=["gradssharding", "lambda_fl", "lifl"])
+                    choices=["gradssharding", "lambda_fl", "lifl",
+                             "sharded_tree"])
     ap.add_argument("--partition", default="uniform",
                     choices=["uniform", "balanced", "layer_contiguous"])
     ap.add_argument("--schedule", default=None,
@@ -59,6 +60,9 @@ def main(argv=None):
     ap.add_argument("--jitter-s", type=float, default=0.0,
                     help="max per-client upload start jitter (seconds)")
     ap.add_argument("--rate-jitter", type=float, default=0.0)
+    ap.add_argument("--local-compute-s", type=float, default=0.0,
+                    help="modeled per-client local training time per round "
+                         "(pipelined sessions overlap it with read-back)")
     args = ap.parse_args(argv)
 
     cfg = dataclasses.replace(get_arch(args.arch).smoke, vocab=256,
@@ -77,11 +81,12 @@ def main(argv=None):
 
     upload = None
     if args.upload_mbps or args.download_mbps or args.jitter_s \
-            or args.rate_jitter:
+            or args.rate_jitter or args.local_compute_s:
         upload = UploadModel(mbps=args.upload_mbps,
                              download_mbps=args.download_mbps,
                              jitter_s=args.jitter_s,
-                             rate_jitter=args.rate_jitter)
+                             rate_jitter=args.rate_jitter,
+                             compute_s=args.local_compute_s)
 
     state = {"params": params, "spec": None, "losses": []}
 
@@ -113,14 +118,15 @@ def main(argv=None):
           f"N={args.clients} clients, topology={args.topology} "
           f"M={args.shards}, schedule={args.schedule or 'barrier'}")
     t0 = time.time()
-    out = federated_train_loop(
-        client_grads, rounds=args.rounds, topology=args.topology,
-        n_shards=args.shards, partition=args.partition,
-        tensor_sizes=tensor_sizes, engine=args.engine,
-        schedule=args.schedule, upload=upload, on_round=on_round)
-    print(f"session wall (modeled): {out['session_wall_s']:.2f}s  "
-          f"vs sum-of-round-walls {out['sum_round_walls_s']:.2f}s")
-    print(f"total lambda cost: ${out['lambda_cost']:.6f}  "
+    session = FederatedSession(SessionConfig(
+        topology=args.topology, n_shards=args.shards,
+        partition=args.partition, tensor_sizes=tensor_sizes,
+        engine=args.engine, schedule=args.schedule, upload=upload))
+    for rnd, res in enumerate(session.run(client_grads, args.rounds)):
+        on_round(rnd, res)
+    print(f"session wall (modeled): {session.session_wall_s:.2f}s  "
+          f"vs sum-of-round-walls {session.sum_round_walls_s:.2f}s")
+    print(f"total lambda cost: ${session.lambda_cost():.6f}  "
           f"({time.time()-t0:.1f}s real)")
 
 

@@ -5,3 +5,18 @@ Paper: "Shard the Gradient, Scale the Model" (A. Barrak, CS.DC 2026).
 """
 
 __version__ = "1.0.0"
+
+__all__ = ["FederatedSession", "SessionConfig", "register_topology",
+           "available_topologies"]
+
+
+def __getattr__(name):
+    # lazy: `import repro` stays light; `from repro import FederatedSession`
+    # pulls the session API (and its jax-backed config deps) on demand
+    if name in ("FederatedSession", "SessionConfig"):
+        from repro import api
+        return getattr(api, name)
+    if name in ("register_topology", "available_topologies"):
+        from repro.core import topology
+        return getattr(topology, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -1,0 +1,234 @@
+"""Public session API: :class:`FederatedSession` + :class:`SessionConfig`.
+
+One object owns the whole serverless-FL substrate — object store, Lambda
+runtime, engine, schedule, upload model, partition plan — built from a
+single declarative config::
+
+    from repro import FederatedSession, SessionConfig
+
+    session = FederatedSession(SessionConfig(
+        topology="sharded_tree", n_shards=8, schedule="pipelined",
+        upload=UploadModel(mbps=16.0, jitter_s=5.0, compute_s=2.0)))
+    result = session.round(client_grads)          # one aggregation round
+    for result in session.run(grad_fn, rounds=50):  # a multi-round session
+        ...
+
+``session.round`` threads multi-round pipelining internally: each round's
+per-client read-back completion times (``client_done_s``) become the next
+round's ``client_ready_s``, so — under ``schedule="pipelined"`` — round
+r+1 local compute and uploads overlap round r read-back. (This absorbs the
+former ``launch.train.FederatedPipeline`` bookkeeping.)
+
+Topologies dispatch through the :mod:`repro.core.topology` registry, so a
+``@register_topology`` plugin (e.g. ``sharded_tree``) is immediately
+usable by name. Long sessions can set ``keep_records=False`` to compact
+per-round runtime records, availability-map entries, store objects and op
+logs after each round — aggregate billing/op counters survive, so
+1k-round sweeps run in bounded memory.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Iterator, Mapping, Sequence
+
+import numpy as np
+
+from repro.config import LambdaLimits
+from repro.core.cost_model import UploadModel
+from repro.core.topology import (AggregationResult, available_topologies,
+                                 get_topology, round_prefix, run_round)
+from repro.serverless.runtime import FaultPlan, LambdaRuntime
+from repro.store import ObjectStore
+
+
+@dataclass(frozen=True)
+class SessionConfig:
+    """Everything a federated aggregation session needs, in one place.
+
+    ``topology`` names a registered :class:`~repro.core.topology.Topology`
+    (builtins: ``gradssharding``, ``lambda_fl``, ``lifl``, plus the
+    ``sharded_tree`` plugin). ``engine``/``schedule`` accept the usual
+    knob values or ``None`` (env ``REPRO_AGG_ENGINE`` /
+    ``REPRO_AGG_SCHEDULE``). ``upload`` models client networks *and*
+    per-client local-compute time (``UploadModel.compute_s`` /
+    ``compute_jitter``), which pipelined multi-round sessions overlap with
+    the previous round's read-back. ``keep_records=False`` compacts
+    per-round records/availability/store state after every round (bounded
+    memory for 1k-round sweeps; aggregate cost and op counters survive).
+    ``topology_options`` passes extra options to plugin topologies.
+    """
+
+    topology: str = "gradssharding"
+    n_shards: int = 4
+    partition: str = "uniform"
+    tensor_sizes: Sequence[int] | None = None
+    engine: str | None = None
+    schedule: str | None = None
+    upload: UploadModel | None = None
+    # convenience override for UploadModel.compute_s (modeled per-client
+    # local training time per round); 0.0 defers to the upload model
+    local_compute_s: float = 0.0
+    colocated: bool = False              # LIFL shared-memory fast path
+    straggler_threshold_s: float | None = None
+    limits: LambdaLimits | None = None
+    warm_pool_size: int | None = None
+    keep_records: bool = True
+    topology_options: Mapping[str, Any] = field(default_factory=dict)
+
+    def round_options(self) -> dict:
+        """The topology-option dict one round receives."""
+        opts = {"n_shards": self.n_shards, "partition": self.partition,
+                "tensor_sizes": self.tensor_sizes}
+        if self.colocated:
+            opts["colocated"] = True
+        opts.update(self.topology_options)
+        return opts
+
+    def resolved_upload(self) -> UploadModel | None:
+        """The effective upload model: ``local_compute_s`` folded in."""
+        if self.local_compute_s <= 0.0:
+            return self.upload
+        return replace(self.upload or UploadModel(),
+                       compute_s=self.local_compute_s)
+
+
+class FederatedSession:
+    """Facade over the store/runtime/driver stack for multi-round FL.
+
+    Construct from a :class:`SessionConfig` (or keyword overrides of one);
+    pre-built ``store``/``runtime``/``faults`` may be injected for tests
+    and fault-injection studies. The session validates the topology name
+    eagerly, owns the round counter, and carries per-client timing across
+    rounds so pipelined sessions overlap round r+1 uploads (and local
+    compute) with round r read-back.
+    """
+
+    def __init__(self, config: SessionConfig | None = None, *,
+                 store: ObjectStore | None = None,
+                 runtime: LambdaRuntime | None = None,
+                 faults: FaultPlan | None = None, **overrides):
+        config = config or SessionConfig()
+        if overrides:
+            config = replace(config, **overrides)
+        self.config = config
+        self.topology = get_topology(config.topology)   # fail fast
+        self.store = store if store is not None else ObjectStore()
+        if runtime is not None:
+            # an injected runtime already fixed these; silently dropping
+            # them would make a fault-injection or pricing study measure
+            # the wrong configuration
+            clash = [name for name, val in
+                     [("limits", config.limits), ("faults", faults),
+                      ("warm_pool_size", config.warm_pool_size)]
+                     if val is not None]
+            if clash:
+                raise ValueError(
+                    f"cannot combine an injected runtime with {clash}: "
+                    f"configure them on the runtime itself")
+            self.runtime = runtime
+        else:
+            self.runtime = LambdaRuntime(
+                limits=config.limits, faults=faults,
+                warm_pool_size=config.warm_pool_size)
+        self.rounds_run = 0
+        self._client_ready: tuple | None = None
+        self._session_start_s: float | None = None
+        self._session_end_s = 0.0
+        self._round_walls_sum = 0.0
+
+    # ------------------------------------------------------------------
+    def round(self, client_grads: Sequence[np.ndarray], *,
+              rnd: int | None = None) -> AggregationResult:
+        """Run one aggregation round; rounds auto-number from 0."""
+        cfg = self.config
+        rnd = self.rounds_run if rnd is None else rnd
+        if self._client_ready is not None \
+                and len(self._client_ready) != len(client_grads):
+            # per-round client sampling: carried read-back times index the
+            # previous round's cohort, so a resized cohort starts fresh
+            # from the runtime cursor instead of inheriting wrong times
+            self._client_ready = None
+        result = run_round(
+            self.topology, client_grads, rnd=rnd, store=self.store,
+            runtime=self.runtime, engine=cfg.engine, schedule=cfg.schedule,
+            upload=cfg.resolved_upload(),
+            client_ready_s=self._client_ready,
+            straggler_threshold_s=cfg.straggler_threshold_s,
+            **cfg.round_options())
+        self._observe(result)
+        if not cfg.keep_records:
+            self._compact(rnd)
+        self.rounds_run = max(self.rounds_run, rnd + 1)
+        return result
+
+    def run(self, client_grad_fn: Callable[[int], Sequence[np.ndarray]],
+            rounds: int) -> Iterator[AggregationResult]:
+        """Iterate ``rounds`` aggregation rounds; ``client_grad_fn(rnd)``
+        supplies each round's client gradients (flat f32 vectors —
+        typically local-SGD deltas). Lazily yields each
+        :class:`AggregationResult` so 1k-round sweeps need not hold every
+        result (pair with ``keep_records=False`` for bounded memory)."""
+        for _ in range(rounds):
+            rnd = self.rounds_run
+            yield self.round(client_grad_fn(rnd), rnd=rnd)
+
+    # ------------------------------------------------------------------
+    def _observe(self, result: AggregationResult) -> None:
+        if self._session_start_s is None:
+            self._session_start_s = result.round_start_s
+        self._client_ready = result.client_done_s or None
+        self._session_end_s = max(self._session_end_s, result.round_end_s)
+        self._round_walls_sum += result.wall_clock_s
+
+    def _compact(self, rnd: int) -> None:
+        """Drop the finished round's per-op state (records, availability
+        entries, stored objects, op logs); aggregate counters survive."""
+        self.runtime.compact()
+        for key in self.store.list(round_prefix(rnd)):
+            self.store.delete(key)
+        self.store.stats.put_log.clear()
+        self.store.stats.get_log.clear()
+
+    # -- session timing / cost -----------------------------------------------
+    @property
+    def session_wall_s(self) -> float:
+        """Makespan of the session (first upload to last read-back) —
+        under the pipelined schedule this is below the sum of round walls
+        because adjacent rounds overlap."""
+        if self._session_start_s is None:
+            return 0.0
+        return self._session_end_s - self._session_start_s
+
+    @property
+    def sum_round_walls_s(self) -> float:
+        """What a fully barriered session would report."""
+        return self._round_walls_sum
+
+    def lambda_cost(self) -> float:
+        return self.runtime.total_cost()
+
+    def s3_cost(self) -> float:
+        limits = self.runtime.limits
+        return self.store.stats.puts * limits.s3_put_price \
+            + self.store.stats.gets * limits.s3_get_price
+
+    def total_cost(self) -> float:
+        return self.lambda_cost() + self.s3_cost()
+
+    def summary(self) -> dict:
+        return {
+            "topology": self.config.topology,
+            "rounds": self.rounds_run,
+            "session_wall_s": self.session_wall_s,
+            "sum_round_walls_s": self.sum_round_walls_s,
+            "lambda_cost": self.lambda_cost(),
+            "s3_cost": self.s3_cost(),
+            "total_cost": self.total_cost(),
+            "puts": self.store.stats.puts,
+            "gets": self.store.stats.gets,
+        }
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"FederatedSession(topology={self.config.topology!r}, "
+                f"rounds_run={self.rounds_run}, "
+                f"available={available_topologies()})")

@@ -4,8 +4,10 @@ from repro.core import (
     cost_model,
     device_agg,
     fedavg,
+    sharded_tree,
     sharding,
+    topology,
 )
 
 __all__ = ["agg_engine", "aggregation", "cost_model", "device_agg", "fedavg",
-           "sharding"]
+           "sharded_tree", "sharding", "topology"]

@@ -1,232 +1,94 @@
-"""The three serverless FL aggregation architectures (paper §III-A).
+"""Back-compat entry points for serverless FL aggregation (paper §III-A).
 
-All three execute on a pluggable **aggregation execution engine**
-(:mod:`repro.core.agg_engine`) that separates modeled platform accounting
-(time, memory, S3 ops — always per-invocation) from the actual averaging
-arithmetic, and under a pluggable **round schedule** that decides *when*
-modeled invocations launch. A round yields: the actual averaged gradient
-(bit-identical checks), the measured S3 op counts (Table II), modeled
-wall-clock, and dollar cost.
+The aggregation stack now lives behind two abstractions:
 
-  * GradsSharding — M concurrent shard aggregators, single phase.
-  * λ-FL          — two-level tree, ⌈√N⌉ branching, 2 sequential phases.
-  * LIFL          — three-level tree, ⌈∛N⌉ branching, 3 sequential phases;
-                    optional colocated shared-memory mode (zero-copy).
+  * :class:`repro.api.FederatedSession` / :class:`repro.api.SessionConfig`
+    — the user-facing facade. One config declares topology, engine,
+    schedule, upload/compute model, partition plan and platform limits;
+    ``session.round(grads)`` runs one round and ``session.run(grad_fn,
+    rounds)`` iterates a multi-round session with ``client_done_s →
+    client_ready_s`` pipelining threaded internally.
+  * :mod:`repro.core.topology` — the strategy layer. Each topology
+    (builtins ``gradssharding``, ``lambda_fl``, ``lifl``; plugin
+    ``sharded_tree``) *declares* its keyspace, uploads, phase/level plan
+    and per-invocation specs; one shared round driver
+    (:func:`~repro.core.topology.run_round`) owns upload registration,
+    barrier-vs-pipelined launch gating, read-back accounting and
+    :class:`~repro.core.topology.AggregationResult` assembly. New
+    topologies register with ``@register_topology`` — no driver edits.
 
-Engine selection: every round function takes ``engine=`` —
-``"streaming"`` (the reference client-by-client numpy loop), ``"batched"``
-(deferred, vectorized, Pallas-ready; the default), ``"incremental"``
-(eager chunked prefix folds), or ``"auto"``/None (env ``REPRO_AGG_ENGINE``,
-falling back to batched). ``avg_flat`` is bit-identical across engines by
-construction; the Pallas kernel path (TPU, or ``REPRO_AGG_PALLAS=1``) may
-differ by ≤1 ulp in the final division and is therefore off on
-interpret-mode (CPU) hosts.
+Engine (``streaming``/``batched``/``incremental``, env
+``REPRO_AGG_ENGINE``) and schedule (``barrier``/``pipelined``, env
+``REPRO_AGG_SCHEDULE``) knobs compose freely with every topology;
+``avg_flat`` is bit-identical across engines and schedules by construction
+(pipelining moves *time*, never arithmetic).
 
-Schedule selection: every round function takes ``schedule=`` —
-``"barrier"`` (the legacy phase-barriered timing: every aggregator waits
-for all uploads, every phase for the previous one) or ``"pipelined"``
-(event-driven: aggregators launch on their first in-index-order
-contribution and stream-fold the rest, stalling per-key on the
-availability map — uploads overlap folds, tree levels overlap each other).
-``None``/``"auto"`` reads env ``REPRO_AGG_SCHEDULE``, falling back to
-barrier. Because the fold order stays the client-index order under both
-schedules, ``avg_flat`` is bit-identical across schedules too: pipelining
-moves *time*, never arithmetic. Client uploads/read-backs are modeled by
-:class:`repro.core.cost_model.UploadModel` (per-client start/rate jitter);
-with no upload model and zero jitter the pipelined schedule reproduces the
-barrier wall-clock exactly (degenerate-case equivalence, tested).
-
-Multi-round pipelining: results carry per-client read-back completion
-times (``client_done_s``); feeding them into the next round's
-``client_ready_s`` lets round r+1 uploads overlap round r read-back (see
-``repro.launch.train.FederatedPipeline``).
+This module keeps the legacy functional surface as thin delegating shims:
+``aggregate_round`` (the supported functional alias of
+``FederatedSession.round``) plus the deprecated per-topology round
+functions, with every historical name re-exported so existing imports
+keep working.
 """
 from __future__ import annotations
 
-import math
-import os
-from dataclasses import dataclass, field
+import warnings
 from typing import Sequence
 
 import numpy as np
 
-from repro.config import DEFAULT_LIMITS, FLConfig, LambdaLimits
-from repro.core import cost_model as cm
-from repro.core.agg_engine import ExecutionBackend, get_backend
+from repro.config import DEFAULT_LIMITS, FLConfig, LambdaLimits  # noqa: F401
+from repro.core import cost_model as cm                           # noqa: F401
+from repro.core.agg_engine import ExecutionBackend, get_backend   # noqa: F401
 from repro.core.cost_model import UploadModel
-from repro.core.sharding import PartitionPlan, make_plan, reconstruct
-from repro.serverless.event_sim import Timeline
-from repro.serverless.runtime import (InvocationRecord, LambdaRuntime,
-                                      PhaseHandle)
+from repro.core.sharding import PartitionPlan, make_plan, reconstruct  # noqa: F401
+from repro.core.topology import (                                 # noqa: F401
+    DEFAULT_SCHEDULE,
+    MB,
+    SCHEDULES,
+    AggregationResult,
+    Engine,
+    available_topologies,
+    get_schedule,
+    get_topology,
+    k_avg_shard,
+    k_client_grad,
+    k_client_shard,
+    k_global,
+    k_partial,
+    register_topology,
+    run_round,
+)
+from repro.serverless.runtime import InvocationRecord, LambdaRuntime  # noqa: F401
 from repro.store import ObjectStore
 
-MB = 1024 * 1024
 
-Engine = str | ExecutionBackend | None
-
-
-# ---------------------------------------------------------------------------
-# Schedules
-# ---------------------------------------------------------------------------
-
-SCHEDULES = ("barrier", "pipelined")
-DEFAULT_SCHEDULE = "barrier"
-
-
-def get_schedule(schedule: str | None = None) -> str:
-    """Resolve the schedule knob: a name, or ``None``/"auto" (env
-    ``REPRO_AGG_SCHEDULE``, else ``"barrier"``)."""
-    if schedule is None or schedule == "auto":
-        schedule = os.environ.get("REPRO_AGG_SCHEDULE", DEFAULT_SCHEDULE)
-    if schedule not in SCHEDULES:
-        raise ValueError(f"unknown aggregation schedule {schedule!r} "
-                         f"(expected one of {SCHEDULES} or 'auto')")
-    return schedule
+def aggregate_round(topology: str, client_grads: Sequence[np.ndarray], *,
+                    rnd: int, store: ObjectStore, runtime: LambdaRuntime,
+                    n_shards: int = 4, partition: str = "uniform",
+                    tensor_sizes: Sequence[int] | None = None,
+                    engine: Engine = None,
+                    schedule: str | None = None,
+                    upload: UploadModel | None = None,
+                    client_ready_s: Sequence[float] | None = None,
+                    straggler_threshold_s: float | None = None,
+                    **kw) -> AggregationResult:
+    """One aggregation round of any registered topology (functional form
+    of :meth:`repro.api.FederatedSession.round`)."""
+    return run_round(
+        topology, client_grads, rnd=rnd, store=store, runtime=runtime,
+        engine=engine, schedule=schedule, upload=upload,
+        client_ready_s=client_ready_s,
+        straggler_threshold_s=straggler_threshold_s,
+        n_shards=n_shards, partition=partition, tensor_sizes=tensor_sizes,
+        **kw)
 
 
-# ---------------------------------------------------------------------------
-# Keyspace
-# ---------------------------------------------------------------------------
+def _deprecated(name: str) -> None:
+    warnings.warn(
+        f"{name} is deprecated; use repro.api.FederatedSession or "
+        f"repro.core.topology.run_round (the shared round driver) instead",
+        DeprecationWarning, stacklevel=3)
 
-def k_client_grad(rnd: int, i: int) -> str:
-    return f"round{rnd:05d}/client{i:04d}/grad"
-
-def k_client_shard(rnd: int, i: int, j: int) -> str:
-    return f"round{rnd:05d}/client{i:04d}/shard{j:04d}"
-
-def k_avg_shard(rnd: int, j: int) -> str:
-    return f"round{rnd:05d}/avg/shard{j:04d}"
-
-def k_partial(rnd: int, level: int, g: int) -> str:
-    return f"round{rnd:05d}/partial/l{level}/g{g:04d}"
-
-def k_global(rnd: int) -> str:
-    return f"round{rnd:05d}/avg/global"
-
-
-# ---------------------------------------------------------------------------
-# Result record
-# ---------------------------------------------------------------------------
-
-@dataclass
-class AggregationResult:
-    topology: str
-    avg_flat: np.ndarray
-    wall_clock_s: float
-    # barrier: per-phase *durations* (wall_clock_s == upload span + their
-    # sum). pipelined: per-phase *completion offsets* from round start —
-    # phases overlap, so durations don't exist; wall_clock_s == phases_s[-1]
-    phases_s: tuple
-    records: list[InvocationRecord] = field(default_factory=list)
-    puts: int = 0
-    gets: int = 0
-    memory_mb: float = 0.0
-    peak_memory_mb: float = 0.0
-    engine: str = "streaming"
-    schedule: str = "barrier"
-    # absolute logical times on the session timeline (multi-round pipelining)
-    round_start_s: float = 0.0
-    round_end_s: float = 0.0
-    client_done_s: tuple = ()            # per-client read-back completion
-
-    @property
-    def lambda_cost(self) -> float:
-        return sum(r.billed_gb_s for r in self.records) \
-            * DEFAULT_LIMITS.gb_s_price
-
-    def s3_cost(self, limits: LambdaLimits = DEFAULT_LIMITS) -> float:
-        return self.puts * limits.s3_put_price + self.gets * limits.s3_get_price
-
-    def total_cost(self, limits: LambdaLimits = DEFAULT_LIMITS) -> float:
-        return self.lambda_cost + self.s3_cost(limits)
-
-
-def _alloc_mb(in_bytes: int, limits: LambdaLimits) -> float:
-    return cm.allocatable_memory_mb(
-        limits.mem_multiplier * in_bytes / MB + limits.runtime_overhead_mb,
-        limits)
-
-
-# ---------------------------------------------------------------------------
-# Client upload / read-back timing (schedule plumbing)
-# ---------------------------------------------------------------------------
-
-@dataclass
-class _UploadTimes:
-    """Per-client modeled upload timeline for one round."""
-
-    start_s: list[float]                 # upload start (ready + jitter)
-    end_s: list[float]                   # last PUT completed
-    mults: np.ndarray                    # per-client transfer-rate multiplier
-    span_end_s: float                    # max end over clients
-
-
-def _register_uploads(runtime: LambdaRuntime, upload: UploadModel | None,
-                      n: int, rnd: int, base_s: float,
-                      client_ready_s: Sequence[float] | None,
-                      key_bytes: Sequence[Sequence[tuple[str, int]]]
-                      ) -> _UploadTimes:
-    """Model client uploads: per-client start jitter, then sequential PUTs
-    in ``key_bytes`` order at the client's (jittered) uplink rate. Each
-    PUT's completion is pushed as an availability-publish event and the
-    heap drained, so keys become readable in deterministic time order."""
-    upload = upload or UploadModel()
-    starts, mults = upload.plan(n, rnd)
-    t_start, t_end = [], []
-    for i in range(n):
-        ready = base_s if client_ready_s is None else float(client_ready_s[i])
-        t = ready + float(starts[i])
-        t_start.append(t)
-        for key, nb in key_bytes[i]:
-            t += upload.upload_s(nb, float(mults[i]))
-            runtime.sim.at(t, runtime.avail.publish, key, t)
-        t_end.append(t)
-    runtime.sim.drain()
-    return _UploadTimes(t_start, t_end, mults,
-                        max(t_end, default=base_s))
-
-
-def _readback_times(sched: str, runtime: LambdaRuntime,
-                    upload: UploadModel | None, up: _UploadTimes,
-                    out_keys_bytes: Sequence[tuple[str, int]],
-                    agg_end_s: float) -> tuple:
-    """Per-client read-back completion times (a :class:`Timeline` fold).
-
-    Barrier: the round is phase-structured — every output exists at
-    ``agg_end_s`` and each client then downloads them sequentially at its
-    jittered downlink rate. Pipelined: each client independently reads the
-    outputs in key order *as they become available*. Downloads are
-    instantaneous when the model has no ``download_mbps``, collapsing both
-    cases to ``agg_end_s`` (the legacy semantics)."""
-    n = len(up.end_s)
-    upload = upload or UploadModel()
-    done = []
-    for i in range(n):
-        # barrier: every output exists at round end, client downloads them
-        # back to back. pipelined: client is busy until its own upload
-        # ends, then reads each output the moment it is published.
-        tl = Timeline(agg_end_s if sched == "barrier" else up.end_s[i])
-        for key, nb in out_keys_bytes:
-            if sched != "barrier":
-                tl.wait_until(runtime.avail.time_of(key, agg_end_s))
-            tl.advance(upload.download_s(nb, float(up.mults[i])))
-        done.append(tl.t)
-    return tuple(done)
-
-
-def _round_base(runtime: LambdaRuntime,
-                client_ready_s: Sequence[float] | None) -> float:
-    """The round's zero point: the runtime cursor, or — when per-client
-    ready times from a previous round are supplied — the earliest client
-    activity (rounds overlap, so the cursor may legitimately be later)."""
-    if client_ready_s is None:
-        return runtime.now
-    return float(min(client_ready_s))
-
-
-# ---------------------------------------------------------------------------
-# GradsSharding (paper §III-A3): Steps 1–4
-# ---------------------------------------------------------------------------
 
 def gradssharding_round(client_grads: Sequence[np.ndarray], *, rnd: int,
                         plan: PartitionPlan, store: ObjectStore,
@@ -237,85 +99,14 @@ def gradssharding_round(client_grads: Sequence[np.ndarray], *, rnd: int,
                         upload: UploadModel | None = None,
                         client_ready_s: Sequence[float] | None = None
                         ) -> AggregationResult:
-    """One aggregation round. ``client_grads`` are flat f32 vectors."""
-    backend = get_backend(engine)
-    sched = get_schedule(schedule)
-    n = len(client_grads)
-    m = plan.n_shards
-    limits = runtime.limits
-    p0, g0 = store.stats.puts, store.stats.gets
-    base = _round_base(runtime, client_ready_s)
+    """Deprecated shim: GradsSharding (paper §III-A3) via the driver."""
+    _deprecated("gradssharding_round")
+    return run_round(
+        "gradssharding", client_grads, rnd=rnd, store=store, runtime=runtime,
+        engine=engine, schedule=schedule, upload=upload,
+        client_ready_s=client_ready_s,
+        straggler_threshold_s=straggler_threshold_s, plan=plan)
 
-    # Step 1+2 — shard and upload (client side: N*M PUTs; zero-copy views
-    # under the batched engine). Values land in the store immediately; the
-    # *times* at which they become readable come from the upload model.
-    shard_sizes = plan.shard_sizes()
-    shard_bytes = [s * 4 for s in shard_sizes]
-    for i, g in enumerate(client_grads):
-        flat = np.asarray(g, np.float32)
-        for j, sh in enumerate(backend.shard_values(flat, plan)):
-            store.put(k_client_shard(rnd, i, j), sh)
-    up = _register_uploads(
-        runtime, upload, n, rnd, base, client_ready_s,
-        [[(k_client_shard(rnd, i, j), shard_bytes[j]) for j in range(m)]
-         for i in range(n)])
-
-    # Step 3 — M concurrent shard aggregators.
-    if sched == "barrier":
-        ph = runtime.phase(start_s=max(base, up.span_end_s))
-    else:
-        ph = runtime.phase(start_s=base)
-    for j in range(m):
-        in_keys = [k_client_shard(rnd, i, j) for i in range(n)]
-        body = backend.avg_body(store, in_keys, k_avg_shard(rnd, j))
-        mem = _alloc_mb(shard_bytes[j], limits)
-        if sched == "barrier":
-            ph.invoke_reliable(
-                body, fn_name=f"r{rnd}-shard{j}", memory_mb=mem,
-                straggler_threshold_s=straggler_threshold_s)
-        else:
-            launch = max(base, runtime.avail.time_of(in_keys[0], base))
-            ph.invoke_reliable(
-                body, fn_name=f"r{rnd}-shard{j}", memory_mb=mem,
-                straggler_threshold_s=straggler_threshold_s,
-                launch_s=launch, wait_avail=True,
-                out_key=k_avg_shard(rnd, j))
-    agg_end = runtime.finish_phase(ph, barrier=(sched == "barrier"))
-    if sched == "barrier":
-        wall = (up.span_end_s - base) + ph.wall_s
-        phases = (ph.wall_s,)
-    else:
-        wall = agg_end - base
-        phases = (wall,)
-    backend.end_round(store)
-
-    # Step 4 — clients read back all M averaged shards (N*M GETs; the N-1
-    # redundant per-client sweeps are batch-accounted in O(1) per shard).
-    shards = [store.get(k_avg_shard(rnd, j)) for j in range(m)]
-    if n > 1:
-        for j in range(m):
-            store.account_gets(k_avg_shard(rnd, j), n - 1)
-    avg = reconstruct(shards, plan)
-    client_done = _readback_times(
-        sched, runtime, upload, up,
-        [(k_avg_shard(rnd, j), shard_bytes[j]) for j in range(m)], agg_end)
-    round_end = max(agg_end, max(client_done, default=agg_end))
-    runtime.advance_to(round_end)
-
-    recs = ph.records
-    return AggregationResult(
-        topology="gradssharding", avg_flat=np.asarray(avg),
-        wall_clock_s=wall, phases_s=phases, records=recs,
-        puts=store.stats.puts - p0, gets=store.stats.gets - g0,
-        memory_mb=max(r.memory_mb for r in recs),
-        peak_memory_mb=max(r.peak_memory_mb for r in recs),
-        engine=backend.name, schedule=sched, round_start_s=base,
-        round_end_s=round_end, client_done_s=client_done)
-
-
-# ---------------------------------------------------------------------------
-# λ-FL (paper §III-A1): two-level tree
-# ---------------------------------------------------------------------------
 
 def lambda_fl_round(client_grads: Sequence[np.ndarray], *, rnd: int,
                     store: ObjectStore, runtime: LambdaRuntime,
@@ -324,89 +115,13 @@ def lambda_fl_round(client_grads: Sequence[np.ndarray], *, rnd: int,
                     upload: UploadModel | None = None,
                     client_ready_s: Sequence[float] | None = None
                     ) -> AggregationResult:
-    backend = get_backend(engine)
-    sched = get_schedule(schedule)
-    n = len(client_grads)
-    k = cm.lambda_fl_branching(n)
-    n_leaves = math.ceil(n / k)
-    limits = runtime.limits
-    p0, g0 = store.stats.puts, store.stats.gets
-    grad_bytes = np.asarray(client_grads[0]).nbytes
-    mem = _alloc_mb(grad_bytes, limits)
-    rec_start = len(runtime.records)
-    base = _round_base(runtime, client_ready_s)
+    """Deprecated shim: λ-FL two-level tree (paper §III-A1)."""
+    _deprecated("lambda_fl_round")
+    return run_round(
+        "lambda_fl", client_grads, rnd=rnd, store=store, runtime=runtime,
+        engine=engine, schedule=schedule, upload=upload,
+        client_ready_s=client_ready_s)
 
-    for i, g in enumerate(client_grads):
-        store.put(k_client_grad(rnd, i), np.asarray(g, np.float32))
-    up = _register_uploads(
-        runtime, upload, n, rnd, base, client_ready_s,
-        [[(k_client_grad(rnd, i), grad_bytes)] for i in range(n)])
-
-    barrier = sched == "barrier"
-
-    # Phase 1 — leaf aggregators (concurrent).
-    group_counts = []
-    ph1 = runtime.phase(start_s=max(base, up.span_end_s) if barrier else base)
-    for leaf in range(n_leaves):
-        members = list(range(leaf * k, min((leaf + 1) * k, n)))
-        group_counts.append(len(members))
-        in_keys = [k_client_grad(rnd, i) for i in members]
-        body = backend.avg_body(store, in_keys, k_partial(rnd, 1, leaf))
-        if barrier:
-            ph1.invoke_reliable(body, fn_name=f"r{rnd}-leaf{leaf}",
-                                memory_mb=mem)
-        else:
-            launch = max(base, runtime.avail.time_of(in_keys[0], base))
-            ph1.invoke_reliable(body, fn_name=f"r{rnd}-leaf{leaf}",
-                                memory_mb=mem, launch_s=launch,
-                                wait_avail=True,
-                                out_key=k_partial(rnd, 1, leaf))
-    p1_end = runtime.finish_phase(ph1, barrier=barrier)
-
-    # Phase 2 — root combines leaf partial means, weighted by group size.
-    in_keys = [k_partial(rnd, 1, leaf) for leaf in range(n_leaves)]
-    body = backend.avg_body(store, in_keys, k_global(rnd),
-                            weights=[float(c) for c in group_counts])
-    ph2 = runtime.phase(start_s=p1_end if barrier else base)
-    if barrier:
-        ph2.invoke_reliable(body, fn_name=f"r{rnd}-root", memory_mb=mem)
-    else:
-        launch = max(base, runtime.avail.time_of(in_keys[0], base))
-        ph2.invoke_reliable(body, fn_name=f"r{rnd}-root", memory_mb=mem,
-                            launch_s=launch, wait_avail=True,
-                            out_key=k_global(rnd))
-    agg_end = runtime.finish_phase(ph2, barrier=barrier)
-    if barrier:
-        wall = (up.span_end_s - base) + ph1.wall_s + ph2.wall_s
-        phases = (ph1.wall_s, ph2.wall_s)
-    else:
-        wall = agg_end - base
-        phases = (ph1.end_s - base, agg_end - base)
-    backend.end_round(store)
-
-    avg = store.get(k_global(rnd))
-    if n > 1:
-        store.account_gets(k_global(rnd), n - 1)   # remaining clients' readback
-    client_done = _readback_times(sched, runtime, upload, up,
-                                  [(k_global(rnd), grad_bytes)], agg_end)
-    round_end = max(agg_end, max(client_done, default=agg_end))
-    runtime.advance_to(round_end)
-
-    recs = runtime.records[rec_start:]
-    return AggregationResult(
-        topology="lambda_fl", avg_flat=np.asarray(avg),
-        wall_clock_s=wall, phases_s=phases,
-        records=recs, puts=store.stats.puts - p0,
-        gets=store.stats.gets - g0,
-        memory_mb=max(r.memory_mb for r in recs),
-        peak_memory_mb=max(r.peak_memory_mb for r in recs),
-        engine=backend.name, schedule=sched, round_start_s=base,
-        round_end_s=round_end, client_done_s=client_done)
-
-
-# ---------------------------------------------------------------------------
-# LIFL (paper §III-A2): three-level hierarchy
-# ---------------------------------------------------------------------------
 
 def lifl_round(client_grads: Sequence[np.ndarray], *, rnd: int,
                store: ObjectStore, runtime: LambdaRuntime,
@@ -416,127 +131,10 @@ def lifl_round(client_grads: Sequence[np.ndarray], *, rnd: int,
                upload: UploadModel | None = None,
                client_ready_s: Sequence[float] | None = None
                ) -> AggregationResult:
-    """Three-level tree. ``colocated=False`` is the Lambda adaptation (all
-    transfers via S3, as deployed in the paper); ``colocated=True`` models
-    LIFL's native shared-memory fast path (zero-copy between levels: no S3
-    ops and no transfer time for inter-aggregator hops)."""
-    backend = get_backend(engine)
-    sched = get_schedule(schedule)
-    n = len(client_grads)
-    l1, l2 = cm.lifl_levels(n)
-    limits = runtime.limits
-    p0, g0 = store.stats.puts, store.stats.gets
-    grad_bytes = np.asarray(client_grads[0]).nbytes
-    mem = _alloc_mb(grad_bytes, limits)
-    rec_start = len(runtime.records)
-    base = _round_base(runtime, client_ready_s)
-    barrier = sched == "barrier"
-
-    for i, g in enumerate(client_grads):
-        store.put(k_client_grad(rnd, i), np.asarray(g, np.float32))
-    up = _register_uploads(
-        runtime, upload, n, rnd, base, client_ready_s,
-        [[(k_client_grad(rnd, i), grad_bytes)] for i in range(n)])
-
-    shared_mem: dict = {}
-
-    def level_pass(in_keys_groups, level, weights_groups, start_s):
-        ph = runtime.phase(start_s=start_s)
-        out_keys, out_counts = [], []
-        for g_idx, (in_keys, w) in enumerate(
-                zip(in_keys_groups, weights_groups)):
-            out_key = k_partial(rnd, level, g_idx) if level <= 2 \
-                else k_global(rnd)
-            if colocated and level >= 2:
-                # zero-copy: read partials from node-local shared memory
-                body = backend.colocated_body(
-                    shared_mem, store, in_keys, w, out_key,
-                    is_global=(out_key == k_global(rnd)))
-            else:
-                inner = backend.avg_body(store, in_keys, out_key, w)
-                if colocated:
-                    def body(ctx, inner=inner, out_key=out_key):
-                        result = inner(ctx)
-                        shared_mem[out_key] = result
-                        return result
-                else:
-                    body = inner
-            if barrier:
-                ph.invoke_reliable(
-                    body, fn_name=f"r{rnd}-l{level}g{g_idx}", memory_mb=mem)
-            else:
-                launch = max(base, runtime.avail.time_of(in_keys[0], base))
-                ph.invoke_reliable(
-                    body, fn_name=f"r{rnd}-l{level}g{g_idx}", memory_mb=mem,
-                    launch_s=launch, wait_avail=True, out_key=out_key)
-            out_keys.append(out_key)
-            out_counts.append(float(sum(w)))
-        end = runtime.finish_phase(ph, barrier=barrier)
-        return ph, end, out_keys, out_counts
-
-    b = max(2, math.ceil(round(n ** (1 / 3), 9)))
-    groups1 = [list(range(g * b, min((g + 1) * b, n))) for g in range(l1)]
-    keys1 = [[k_client_grad(rnd, i) for i in g] for g in groups1]
-    w1 = [[1.0] * len(g) for g in groups1]
-    ph1, e1, out1, c1 = level_pass(
-        keys1, 1, w1, max(base, up.span_end_s) if barrier else base)
-
-    groups2 = [list(range(g * b, min((g + 1) * b, l1))) for g in range(l2)]
-    keys2 = [[out1[i] for i in g] for g in groups2]
-    w2 = [[c1[i] for i in g] for g in groups2]
-    ph2, e2, out2, c2 = level_pass(keys2, 2, w2, e1 if barrier else base)
-
-    ph3, agg_end, _, _ = level_pass([out2], 3, [c2],
-                                    e2 if barrier else base)
-    if barrier:
-        wall = (up.span_end_s - base) + ph1.wall_s + ph2.wall_s + ph3.wall_s
-        phases = (ph1.wall_s, ph2.wall_s, ph3.wall_s)
-    else:
-        wall = agg_end - base
-        phases = (ph1.end_s - base, ph2.end_s - base, agg_end - base)
-    backend.end_round(store)
-
-    avg = store.get(k_global(rnd))
-    if n > 1:
-        store.account_gets(k_global(rnd), n - 1)
-    client_done = _readback_times(sched, runtime, upload, up,
-                                  [(k_global(rnd), grad_bytes)], agg_end)
-    round_end = max(agg_end, max(client_done, default=agg_end))
-    runtime.advance_to(round_end)
-
-    recs = runtime.records[rec_start:]
-    return AggregationResult(
-        topology="lifl", avg_flat=np.asarray(avg),
-        wall_clock_s=wall, phases_s=phases, records=recs,
-        puts=store.stats.puts - p0, gets=store.stats.gets - g0,
-        memory_mb=max(r.memory_mb for r in recs),
-        peak_memory_mb=max(r.peak_memory_mb for r in recs),
-        engine=backend.name, schedule=sched, round_start_s=base,
-        round_end_s=round_end, client_done_s=client_done)
-
-
-# ---------------------------------------------------------------------------
-# Unified entry
-# ---------------------------------------------------------------------------
-
-def aggregate_round(topology: str, client_grads: Sequence[np.ndarray], *,
-                    rnd: int, store: ObjectStore, runtime: LambdaRuntime,
-                    n_shards: int = 4, partition: str = "uniform",
-                    tensor_sizes: Sequence[int] | None = None,
-                    engine: Engine = None,
-                    schedule: str | None = None,
-                    upload: UploadModel | None = None,
-                    client_ready_s: Sequence[float] | None = None,
-                    **kw) -> AggregationResult:
-    common = dict(rnd=rnd, store=store, runtime=runtime, engine=engine,
-                  schedule=schedule, upload=upload,
-                  client_ready_s=client_ready_s, **kw)
-    if topology == "gradssharding":
-        total = int(np.asarray(client_grads[0]).size)
-        plan = make_plan(partition, total, n_shards, tensor_sizes)
-        return gradssharding_round(client_grads, plan=plan, **common)
-    if topology == "lambda_fl":
-        return lambda_fl_round(client_grads, **common)
-    if topology == "lifl":
-        return lifl_round(client_grads, **common)
-    raise ValueError(f"unknown topology {topology!r}")
+    """Deprecated shim: LIFL three-level hierarchy (paper §III-A2);
+    ``colocated=True`` models the shared-memory fast path."""
+    _deprecated("lifl_round")
+    return run_round(
+        "lifl", client_grads, rnd=rnd, store=store, runtime=runtime,
+        engine=engine, schedule=schedule, upload=upload,
+        client_ready_s=client_ready_s, colocated=colocated)

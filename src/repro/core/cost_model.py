@@ -39,12 +39,26 @@ def lambda_fl_branching(n_clients: int) -> int:
     return max(2, math.ceil(math.sqrt(n_clients)))
 
 
+def lifl_branching(n_clients: int) -> int:
+    """b = max(2, ceil(N^{1/3})) — the single definition the simulator's
+    tree shape and the analytical model both derive from (the inner round()
+    guards against fp dust in the cube root, e.g. 27**(1/3) = 3.0000…04)."""
+    return max(2, math.ceil(round(n_clients ** (1 / 3), 9)))
+
+
 def lifl_levels(n_clients: int) -> tuple[int, int]:
-    """(L1, L2) aggregator counts for the 3-level tree, branching ceil(N^{1/3})."""
-    b = max(2, math.ceil(round(n_clients ** (1 / 3), 9)))
+    """(L1, L2) aggregator counts for the 3-level tree."""
+    b = lifl_branching(n_clients)
     l1 = math.ceil(n_clients / b)
     l2 = math.ceil(l1 / b)
     return l1, l2
+
+
+def tree_groups(count: int, branch: int) -> list[list[int]]:
+    """Contiguous index groups of size ``branch`` (last may be short) —
+    the one grouping rule every tree topology and cost formula shares."""
+    return [list(range(g * branch, min((g + 1) * branch, count)))
+            for g in range(math.ceil(count / branch))]
 
 
 @dataclass(frozen=True)
@@ -62,8 +76,17 @@ class S3Ops:
         return self.puts + self.gets
 
 
+def _registered(topology: str):
+    """Cost-entry fallback: resolve a non-builtin topology from the
+    strategy registry (lazy import — cost_model must stay importable
+    without the topology layer)."""
+    from repro.core.topology import get_topology
+    return get_topology(topology)
+
+
 def s3_ops(topology: str, n: int, m: int = 1) -> S3Ops:
-    """Per-round S3 operations (paper Table II)."""
+    """Per-round S3 operations (paper Table II; registry topologies via
+    their ``cost_s3_ops`` hook)."""
     if topology == "gradssharding":
         return S3Ops(puts=n * m + m, gets_agg=n * m, gets_clients=n * m)
     if topology == "lambda_fl":
@@ -74,7 +97,7 @@ def s3_ops(topology: str, n: int, m: int = 1) -> S3Ops:
         l1, l2 = lifl_levels(n)
         return S3Ops(puts=n + l1 + l2 + 1, gets_agg=n + l1 + l2,
                      gets_clients=n)
-    raise ValueError(f"unknown topology {topology!r}")
+    return _registered(topology).cost_s3_ops(n, m)
 
 
 def n_aggregators(topology: str, n: int, m: int = 1) -> int:
@@ -85,12 +108,15 @@ def n_aggregators(topology: str, n: int, m: int = 1) -> int:
     if topology == "lifl":
         l1, l2 = lifl_levels(n)
         return l1 + l2 + 1
-    raise ValueError(topology)
+    return _registered(topology).cost_n_aggregators(n, m)
 
 
 def n_phases(topology: str) -> int:
     """Sequential aggregation phases (dependency depth)."""
-    return {"gradssharding": 1, "lambda_fl": 2, "lifl": 3}[topology]
+    builtin = {"gradssharding": 1, "lambda_fl": 2, "lifl": 3}
+    if topology in builtin:
+        return builtin[topology]
+    return _registered(topology).cost_n_phases()
 
 
 # ---------------------------------------------------------------------------
@@ -101,7 +127,9 @@ def input_bytes(topology: str, grad_bytes: int, m: int = 1) -> int:
     """Bytes of a single incoming object at an aggregator."""
     if topology == "gradssharding":
         return math.ceil(grad_bytes / m)
-    return grad_bytes
+    if topology in ("lambda_fl", "lifl"):
+        return grad_bytes
+    return _registered(topology).cost_input_bytes(grad_bytes, m)
 
 
 def streaming_memory_bytes(topology: str, grad_bytes: int, m: int = 1) -> int:
@@ -221,22 +249,29 @@ class RoundCost:
 
 @dataclass(frozen=True)
 class UploadModel:
-    """Per-client network model for the pipelined round schedule.
+    """Per-client network + local-compute model for round scheduling.
 
     ``mbps``/``download_mbps`` are per-client stream bandwidths; ``None``
     models instantaneous transfer (the legacy assumption — with it and zero
     jitter, the pipelined schedule degenerates to the barrier schedule
     exactly). ``jitter_s`` draws each client's upload start offset uniformly
     from [0, jitter_s); ``rate_jitter`` multiplies each client's transfer
-    durations by a factor uniform in [1, 1 + rate_jitter). Draws are
-    deterministic in (seed, round), so the analytical model and the
-    discrete-event runtime see identical per-client plans.
+    durations by a factor uniform in [1, 1 + rate_jitter). ``compute_s``
+    models per-client *local training time* between becoming ready (round
+    r's read-back done) and starting round r+1's upload, jittered
+    uniformly into [compute_s, compute_s + compute_jitter) — in pipelined
+    multi-round sessions a fast client therefore trains while stragglers
+    still read back. Draws are deterministic in (seed, round), so the
+    analytical model and the discrete-event runtime see identical
+    per-client plans.
     """
 
     mbps: float | None = None
     download_mbps: float | None = None
     jitter_s: float = 0.0
     rate_jitter: float = 0.0
+    compute_s: float = 0.0
+    compute_jitter: float = 0.0
     seed: int = 0
 
     def plan(self, n: int, rnd: int = 0) -> tuple[np.ndarray, np.ndarray]:
@@ -247,6 +282,17 @@ class UploadModel:
         mults = 1.0 + rng.uniform(0.0, self.rate_jitter, n) \
             if self.rate_jitter > 0 else np.ones(n)
         return starts, mults
+
+    def compute_plan(self, n: int, rnd: int = 0) -> np.ndarray:
+        """Per-client local-compute durations for one round (a separate
+        stream from :meth:`plan`, so adding compute never perturbs the
+        established upload draws)."""
+        if self.compute_s <= 0.0 and self.compute_jitter <= 0.0:
+            return np.zeros(n)
+        rng = np.random.default_rng([self.seed, rnd, 1])
+        if self.compute_jitter > 0.0:
+            return self.compute_s + rng.uniform(0.0, self.compute_jitter, n)
+        return np.full(n, float(self.compute_s))
 
     def upload_s(self, nbytes: int, mult: float = 1.0) -> float:
         if self.mbps is None:
@@ -287,33 +333,57 @@ def _fold_finish(launch_s: float, avail_s: Sequence[float],
     return t
 
 
-def _tree_groups(count: int, branch: int) -> list[list[int]]:
-    return [list(range(g * branch, min((g + 1) * branch, count)))
-            for g in range(math.ceil(count / branch))]
+def _fold_finish_colocated(launch_s: float, avail_s: Sequence[float],
+                           in_bytes: Sequence[int], out_bytes: int,
+                           limits: LambdaLimits, cold: bool,
+                           write_out: bool) -> float:
+    """Finish time of a streaming fold over *node-local shared-memory*
+    inputs (LIFL's colocated fast path): no per-GET latency, no read
+    transfer — only availability stalls and accumulate compute. Only the
+    global result (``write_out``) pays an S3 write."""
+    t = launch_s + (limits.cold_start_s if cold else 0.0)
+    for idx, (a, nb) in enumerate(zip(avail_s, in_bytes)):
+        if a > t:
+            t = a                                   # stall for availability
+        if idx:
+            t += nb / AGG_COMPUTE_BPS
+    t += out_bytes / AGG_COMPUTE_BPS
+    if write_out:
+        t += out_bytes / (limits.s3_write_mbps * 1e6)
+    return t
+
+
+_tree_groups = tree_groups
 
 
 def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
                          limits: LambdaLimits = LambdaLimits(),
                          upload: UploadModel | None = None,
                          rnd: int = 0, cold: bool = True,
-                         shard_bytes: Sequence[int] | None = None
-                         ) -> RoundCost:
+                         shard_bytes: Sequence[int] | None = None,
+                         colocated: bool = False) -> RoundCost:
     """Modeled round under the **pipelined** schedule.
 
-    Clients upload with per-client jitter (``upload``); each aggregator
-    launches when its first in-index-order contribution lands and
-    stream-folds the rest, stalling only on unavailable inputs; tree levels
-    chain on their first input. ``wall_clock_s`` is the makespan from round
-    start to the last aggregator's output write — reads hide under uploads,
-    which is where the win over :func:`round_cost`'s phase barriers comes
-    from. Stall time is billed (the function runs while it waits). The
-    1 ms billing granularity is ignored here (<0.1 % on round-scale
+    Clients locally train, then upload with per-client jitter
+    (``upload``); each aggregator launches when its first in-index-order
+    contribution lands and stream-folds the rest, stalling only on
+    unavailable inputs; tree levels chain on their first input.
+    ``wall_clock_s`` is the makespan from round start to the last
+    aggregator's output write — reads hide under uploads, which is where
+    the win over :func:`round_cost`'s phase barriers comes from. Stall
+    time is billed (the function runs while it waits). ``colocated``
+    (LIFL only) models the shared-memory fast path: level ≥2 hops have
+    zero transfer time, so only the launch gating changes. The 1 ms
+    billing granularity is ignored here (<0.1 % on round-scale
     durations); the discrete-event runtime reproduces ``wall_clock_s``
     exactly for a no-fault round.
     """
+    if colocated and topology != "lifl":
+        raise ValueError("colocated is the LIFL shared-memory fast path")
     upload = upload or UploadModel()
     starts, mults = upload.plan(n, rnd)
-    ops = s3_ops(topology, n, m)
+    starts = starts + upload.compute_plan(n, rnd)   # train, then upload
+    ops = s3_ops(topology, n, m) if not colocated else None
     mem_mb = allocatable_memory_mb(
         lambda_memory_mb(topology, grad_bytes, m, limits), limits)
     ok = feasible(topology, grad_bytes, m, limits)
@@ -321,8 +391,12 @@ def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
     finishes: list[float] = []
     durations: list[float] = []          # per-aggregator busy time (billed)
 
-    def run_fold(launch, avail, in_b, out_b):
-        end = _fold_finish(launch, avail, in_b, out_b, limits, cold)
+    def run_fold(launch, avail, in_b, out_b, shared=False, write_out=True):
+        if shared:
+            end = _fold_finish_colocated(launch, avail, in_b, out_b, limits,
+                                         cold, write_out)
+        else:
+            end = _fold_finish(launch, avail, in_b, out_b, limits, cold)
         finishes.append(end)
         durations.append(end - launch)
         return end
@@ -349,7 +423,7 @@ def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
         run_fold(leaf_ends[0], leaf_ends, [grad_bytes] * len(leaf_ends),
                  grad_bytes)
     elif topology == "lifl":
-        b = max(2, math.ceil(round(n ** (1 / 3), 9)))
+        b = lifl_branching(n)
         grad_avail = [starts[i] + upload.upload_s(grad_bytes, mults[i])
                       for i in range(n)]
         level_in = grad_avail
@@ -359,12 +433,19 @@ def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
                 avail = [level_in[i] for i in members]
                 ends.append(run_fold(avail[0], avail,
                                      [grad_bytes] * len(members),
-                                     grad_bytes))
+                                     grad_bytes,
+                                     shared=colocated and _level == 2,
+                                     write_out=False))
             level_in = ends
         run_fold(level_in[0], level_in, [grad_bytes] * len(level_in),
-                 grad_bytes)
+                 grad_bytes, shared=colocated)
     else:
         raise ValueError(topology)
+    if ops is None:
+        l1, l2 = lifl_levels(n)
+        # colocated: N client PUTs + l1 level-1 partials + the global; GETs
+        # only at level 1 (clients' grads) and the clients' read-back
+        ops = S3Ops(puts=n + l1 + 1, gets_agg=n, gets_clients=n)
 
     wall = max(finishes)
     gb_s = mem_mb / 1024.0 * sum(durations)
@@ -384,6 +465,7 @@ def barrier_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
     phase runs to its slowest member before the next starts."""
     upload = upload or UploadModel()
     starts, mults = upload.plan(n, rnd)
+    starts = starts + upload.compute_plan(n, rnd)   # train, then upload
     base = round_cost(topology, grad_bytes, n, m, limits)
     upload_span = max((starts[i] + upload.upload_s(grad_bytes, mults[i])
                        for i in range(n)), default=0.0)
@@ -440,7 +522,16 @@ def round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
                                   + t3.total_s)
         n_inv = l1 + l2 + 1
     else:
-        raise ValueError(topology)
+        # registry topologies: sequential (timing, count) phase groups;
+        # invocations within a phase run concurrently, phases add
+        plan = _registered(topology).cost_phase_plan(grad_bytes, n, m,
+                                                     limits)
+        timings, wall, gb_s, n_inv = [], 0.0, 0.0, 0
+        for t, count in plan:
+            timings.extend([t] * count)
+            wall += t.total_s if concurrent else t.total_s * count
+            gb_s += mem_mb / 1024.0 * count * t.total_s
+            n_inv += count
 
     lam_cost = gb_s * limits.gb_s_price
     s3_cost = ops.puts * limits.s3_put_price + ops.gets * limits.s3_get_price

@@ -1,0 +1,113 @@
+"""``sharded_tree``: a hybrid topology registered via the public API only.
+
+GradsSharding × λ-FL: the gradient is split into M shards (paper Step 1),
+and each shard is aggregated through its own two-level ⌈√N⌉ tree instead
+of a single fan-in-N aggregator — N·M client PUTs, then M·⌈N/√N⌉ leaf
+aggregators (phase 1) and M shard roots (phase 2). The per-aggregator
+fan-in drops from N to ~√N *and* the per-object size from |θ| to |θ|/M,
+trading one extra phase for both — the regime where a single shard
+aggregator's N sequential GETs dominate the round.
+
+This module is the registry's proof of extensibility: it builds its round
+program and cost entries exclusively from the public topology API
+(:func:`~repro.core.topology.register_topology`, :class:`InvocationSpec`,
+:func:`tree_groups`, :func:`resolve_partition_plan`, the ``k_*`` keyspace
+helpers) — no edits to the shared round driver or the builtin cost model.
+
+Arithmetic: each element of shard j sees exactly the λ-FL op sequence
+(unweighted f32 leaf fold over the same client groups, f64 group-weighted
+root fold), so ``avg_flat`` is **bit-identical to λ-FL** for every
+engine/schedule — tested in ``tests/test_topology.py``.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core.topology import (InvocationSpec, RoundProgram, Topology,
+                                 k_avg_shard, k_client_shard,
+                                 register_topology, resolve_partition_plan,
+                                 sharded_client_uploads, tree_groups)
+from repro.core.sharding import reconstruct
+
+
+def k_shard_partial(rnd: int, j: int, leaf: int) -> str:
+    """Keyspace extension: leaf partial of shard ``j``'s tree."""
+    return f"round{rnd:05d}/partial/shard{j:04d}/l1/g{leaf:04d}"
+
+
+@register_topology("sharded_tree")
+class ShardedTreeTopology(Topology):
+    """Shard the gradient into M pieces; aggregate each through a ⌈√N⌉
+    two-level tree."""
+
+    def program(self, client_grads, spec, backend):
+        rnd, n = spec.rnd, spec.n
+        plan = resolve_partition_plan(
+            spec, int(np.asarray(client_grads[0]).size))
+        m = plan.n_shards
+
+        # Step 1+2 — identical client-side keyspace to GradsSharding
+        puts, uploads, shard_bytes = sharded_client_uploads(
+            client_grads, rnd, plan, backend)
+
+        # Phase 1 — per-shard leaf trees (λ-FL grouping, per shard)
+        groups = tree_groups(n, cm.lambda_fl_branching(n))
+        leaves = tuple(
+            InvocationSpec(
+                fn_name=f"r{rnd}-s{j}leaf{leaf}",
+                in_keys=tuple(k_client_shard(rnd, i, j) for i in members),
+                out_key=k_shard_partial(rnd, j, leaf),
+                alloc_bytes=shard_bytes[j])
+            for j in range(m)
+            for leaf, members in enumerate(groups))
+
+        # Phase 2 — per-shard roots (group-size-weighted, like λ-FL's root)
+        roots = tuple(
+            InvocationSpec(
+                fn_name=f"r{rnd}-s{j}root",
+                in_keys=tuple(k_shard_partial(rnd, j, leaf)
+                              for leaf in range(len(groups))),
+                out_key=k_avg_shard(rnd, j),
+                alloc_bytes=shard_bytes[j],
+                weights=tuple(float(len(members)) for members in groups))
+            for j in range(m))
+
+        readback = tuple((k_avg_shard(rnd, j), shard_bytes[j])
+                         for j in range(m))
+        return RoundProgram(
+            topology="sharded_tree", client_puts=tuple(puts),
+            uploads=tuple(uploads), phases=(leaves, roots),
+            readback=readback,
+            collect=lambda shards: reconstruct(shards, plan))
+
+    # -- analytical cost entries (consulted by cost_model's registry
+    #    fallback for s3_ops / n_aggregators / n_phases / memory /
+    #    round_cost) ---------------------------------------------------------
+    def _leaves(self, n: int) -> int:
+        return math.ceil(n / cm.lambda_fl_branching(n))
+
+    def cost_s3_ops(self, n, m=1):
+        leaves = self._leaves(n)
+        return cm.S3Ops(puts=n * m + leaves * m + m,
+                        gets_agg=n * m + leaves * m,
+                        gets_clients=n * m)
+
+    def cost_n_aggregators(self, n, m=1):
+        return m * (self._leaves(n) + 1)
+
+    def cost_n_phases(self):
+        return 2
+
+    def cost_input_bytes(self, grad_bytes, m=1):
+        return math.ceil(grad_bytes / m)
+
+    def cost_phase_plan(self, grad_bytes, n, m, limits):
+        shard_b = self.cost_input_bytes(grad_bytes, m)
+        k = cm.lambda_fl_branching(n)
+        leaves = self._leaves(n)
+        return [(cm.aggregator_timing(shard_b, k, shard_b, limits),
+                 m * leaves),
+                (cm.aggregator_timing(shard_b, leaves, shard_b, limits), m)]

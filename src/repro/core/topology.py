@@ -1,0 +1,705 @@
+"""Pluggable aggregation topologies + the shared round driver.
+
+The paper's core claim — GradsSharding vs λ-FL vs LIFL is purely a
+*topology* choice with bit-identical FedAvg output (§III-A) — is encoded
+here structurally: a :class:`Topology` strategy declares *what* a round
+looks like (keyspace layout, per-client uploads, phase/level plan,
+per-invocation inputs/outputs/weights, read-back set), and one shared
+**round driver** (:func:`run_round`) owns everything the three legacy
+round functions used to triplicate:
+
+  * client PUTs + modeled upload registration (:class:`UploadModel`
+    start/rate jitter and per-client local-compute time),
+  * barrier-vs-pipelined launch gating (phase barriers, or per-invocation
+    launch on the first in-index-order contribution with availability
+    publishes through the event heap),
+  * phase sequencing, read-back accounting (O(1) redundant-GET batching),
+    per-client read-back timelines, and
+  * :class:`AggregationResult` assembly (walls, phases, S3 ops, billed
+    memory, absolute round times for multi-round pipelining).
+
+Because the driver is the only place scheduling and accounting happen, a
+new topology composes with every engine (``streaming``/``batched``/
+``incremental``) and every schedule (``barrier``/``pipelined``) for free,
+and ``avg_flat`` invariants are inherited rather than re-proven.
+
+Topologies register through :func:`register_topology`::
+
+    @register_topology("my_topo")
+    class MyTopology(Topology):
+        name = "my_topo"
+        def program(self, client_grads, spec, backend): ...
+
+``repro.core.sharded_tree`` registers a fourth, hybrid topology
+(``sharded_tree``: shard the gradient into M pieces, aggregate each shard
+through a ⌈√N⌉ two-level tree) through this public API alone — no driver
+edits. The analytical cost model (:mod:`repro.core.cost_model`) consults
+the same registry for unknown topology names, so a plugin topology also
+gets Table-II op counts, memory/feasibility and round-cost entries by
+implementing the ``cost_*`` hooks.
+
+The user-facing entry point is :class:`repro.api.FederatedSession`;
+:func:`repro.core.aggregation.aggregate_round` and the legacy per-topology
+round functions remain as thin delegating shims.
+"""
+from __future__ import annotations
+
+import math
+import os
+from dataclasses import dataclass, field
+from typing import Any, Callable, Mapping, Sequence
+
+import numpy as np
+
+from repro.config import DEFAULT_LIMITS, LambdaLimits
+from repro.core import cost_model as cm
+from repro.core.agg_engine import ExecutionBackend, get_backend
+from repro.core.cost_model import UploadModel
+from repro.core.sharding import PartitionPlan, make_plan, reconstruct
+from repro.serverless.event_sim import Timeline
+from repro.serverless.runtime import InvocationRecord, LambdaRuntime
+from repro.store import ObjectStore
+
+MB = 1024 * 1024
+
+Engine = str | ExecutionBackend | None
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+SCHEDULES = ("barrier", "pipelined")
+DEFAULT_SCHEDULE = "barrier"
+
+
+def get_schedule(schedule: str | None = None) -> str:
+    """Resolve the schedule knob: a name, or ``None``/"auto" (env
+    ``REPRO_AGG_SCHEDULE``, else ``"barrier"``)."""
+    if schedule is None or schedule == "auto":
+        schedule = os.environ.get("REPRO_AGG_SCHEDULE", DEFAULT_SCHEDULE)
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown aggregation schedule {schedule!r} "
+                         f"(expected one of {SCHEDULES} or 'auto')")
+    return schedule
+
+
+# ---------------------------------------------------------------------------
+# Keyspace
+# ---------------------------------------------------------------------------
+
+def k_client_grad(rnd: int, i: int) -> str:
+    return f"round{rnd:05d}/client{i:04d}/grad"
+
+def k_client_shard(rnd: int, i: int, j: int) -> str:
+    return f"round{rnd:05d}/client{i:04d}/shard{j:04d}"
+
+def k_avg_shard(rnd: int, j: int) -> str:
+    return f"round{rnd:05d}/avg/shard{j:04d}"
+
+def k_partial(rnd: int, level: int, g: int) -> str:
+    return f"round{rnd:05d}/partial/l{level}/g{g:04d}"
+
+def k_global(rnd: int) -> str:
+    return f"round{rnd:05d}/avg/global"
+
+def round_prefix(rnd: int) -> str:
+    """Store-key prefix every object of round ``rnd`` lives under."""
+    return f"round{rnd:05d}/"
+
+
+# ---------------------------------------------------------------------------
+# Result record
+# ---------------------------------------------------------------------------
+
+@dataclass
+class AggregationResult:
+    topology: str
+    avg_flat: np.ndarray
+    wall_clock_s: float
+    # barrier: per-phase *durations* (wall_clock_s == upload span + their
+    # sum). pipelined: per-phase *completion offsets* from round start —
+    # phases overlap, so durations don't exist; wall_clock_s == phases_s[-1]
+    phases_s: tuple
+    records: list[InvocationRecord] = field(default_factory=list)
+    puts: int = 0
+    gets: int = 0
+    memory_mb: float = 0.0
+    peak_memory_mb: float = 0.0
+    engine: str = "streaming"
+    schedule: str = "barrier"
+    # absolute logical times on the session timeline (multi-round pipelining)
+    round_start_s: float = 0.0
+    round_end_s: float = 0.0
+    client_done_s: tuple = ()            # per-client read-back completion
+    # the platform limits this round was simulated (and is priced) under —
+    # keeps per-round dollar figures consistent with the session's totals
+    # when SessionConfig.limits overrides the defaults
+    limits: LambdaLimits = DEFAULT_LIMITS
+
+    @property
+    def lambda_cost(self) -> float:
+        return sum(r.billed_gb_s for r in self.records) \
+            * self.limits.gb_s_price
+
+    def s3_cost(self, limits: LambdaLimits | None = None) -> float:
+        limits = limits or self.limits
+        return self.puts * limits.s3_put_price + self.gets * limits.s3_get_price
+
+    def total_cost(self, limits: LambdaLimits | None = None) -> float:
+        return self.lambda_cost + self.s3_cost(limits)
+
+
+def _alloc_mb(in_bytes: int, limits: LambdaLimits) -> float:
+    return cm.allocatable_memory_mb(
+        limits.mem_multiplier * in_bytes / MB + limits.runtime_overhead_mb,
+        limits)
+
+
+# ---------------------------------------------------------------------------
+# Declarative round programs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class InvocationSpec:
+    """One simulated aggregator invocation, declaratively.
+
+    ``in_keys`` are read in index order (the bit-reproducible fold order);
+    ``alloc_bytes`` is the single-input byte size feeding the 3×input+450 MB
+    memory formula. ``weights`` selects the weighted f64 fold (tree levels
+    combining unequal group sizes); ``None`` is the unweighted f32 fold.
+    ``colocated_in`` reads inputs from node-local shared memory instead of
+    the store (LIFL fast path); ``shared_copy`` additionally mirrors the
+    S3 output into shared memory (LIFL level 1 feeding colocated level 2);
+    ``global_out`` marks the round's final output (colocated invocations
+    still PUT it to S3 for client read-back).
+    """
+
+    fn_name: str
+    in_keys: tuple
+    out_key: str
+    alloc_bytes: int
+    weights: tuple | None = None
+    colocated_in: bool = False
+    shared_copy: bool = False
+    global_out: bool = False
+
+
+@dataclass(frozen=True)
+class RoundProgram:
+    """Everything the driver needs to execute one round of a topology."""
+
+    topology: str
+    # ordered (key, value) client PUTs; values may be zero-copy shard views
+    client_puts: tuple
+    # per client, in-order (key, nbytes) upload schedule for the network model
+    uploads: tuple
+    # sequential phases of concurrent invocations
+    phases: tuple
+    # (key, nbytes) every client reads back after aggregation
+    readback: tuple
+    # read-back values -> the round's flat averaged gradient
+    collect: Callable[[list], np.ndarray]
+
+
+@dataclass(frozen=True)
+class RoundSpec:
+    """Per-round scalars handed to :meth:`Topology.program`."""
+
+    rnd: int
+    n: int
+    grad_bytes: int
+    limits: LambdaLimits
+    options: Mapping[str, Any] = field(default_factory=dict)
+
+    def opt(self, name: str, default=None):
+        return self.options.get(name, default)
+
+
+# ---------------------------------------------------------------------------
+# Topology strategy interface + registry
+# ---------------------------------------------------------------------------
+
+# options every topology may receive (and is free to ignore) — the legacy
+# ``aggregate_round`` signature threads them unconditionally
+COMMON_OPTIONS = frozenset({"n_shards", "partition", "tensor_sizes", "plan"})
+
+
+class Topology:
+    """Strategy interface: declare a round, inherit the driver.
+
+    Subclasses implement :meth:`program` (the simulator side) and may
+    implement the ``cost_*`` hooks (the analytical side — consulted by
+    :mod:`repro.core.cost_model` for non-builtin names).
+    """
+
+    name = "?"
+    #: topology-specific option names beyond :data:`COMMON_OPTIONS`
+    options_used: frozenset = frozenset()
+
+    # -- simulator side -------------------------------------------------------
+    def program(self, client_grads: Sequence[np.ndarray], spec: RoundSpec,
+                backend: ExecutionBackend) -> RoundProgram:
+        raise NotImplementedError
+
+    def validate_options(self, options: Mapping[str, Any]) -> None:
+        unknown = set(options) - COMMON_OPTIONS - self.options_used
+        if unknown:
+            raise TypeError(
+                f"topology {self.name!r} got unexpected option(s) "
+                f"{sorted(unknown)}")
+
+    # -- analytical cost-model hooks (optional) -------------------------------
+    def cost_s3_ops(self, n: int, m: int = 1) -> "cm.S3Ops":
+        raise NotImplementedError(
+            f"topology {self.name!r} declares no S3-op model")
+
+    def cost_n_aggregators(self, n: int, m: int = 1) -> int:
+        raise NotImplementedError(
+            f"topology {self.name!r} declares no aggregator-count model")
+
+    def cost_n_phases(self) -> int:
+        raise NotImplementedError(
+            f"topology {self.name!r} declares no phase-depth model")
+
+    def cost_input_bytes(self, grad_bytes: int, m: int = 1) -> int:
+        """Bytes of a single incoming object at an aggregator."""
+        return grad_bytes
+
+    def cost_phase_plan(self, grad_bytes: int, n: int, m: int,
+                        limits: LambdaLimits) -> list:
+        """Sequential phases as (PhaseTiming, invocation_count) pairs —
+        drives the generic :func:`repro.core.cost_model.round_cost`
+        fallback for registered topologies."""
+        raise NotImplementedError(
+            f"topology {self.name!r} declares no round-cost model")
+
+
+_REGISTRY: dict[str, Topology] = {}
+
+
+def register_topology(name: str, *, replace: bool = False):
+    """Class decorator: register a :class:`Topology` under ``name``.
+
+    The registry is the extension point the whole stack dispatches on —
+    the round driver, ``aggregate_round``, :class:`~repro.api
+    .FederatedSession`, and the cost-model fallbacks. Duplicate names
+    raise unless ``replace=True`` (deliberate override, e.g. in tests).
+    """
+
+    def deco(cls):
+        if not replace and name in _REGISTRY:
+            raise ValueError(
+                f"topology {name!r} is already registered "
+                f"({type(_REGISTRY[name]).__name__}); pass replace=True "
+                f"to override")
+        instance = cls() if isinstance(cls, type) else cls
+        instance.name = name
+        _REGISTRY[name] = instance
+        return cls
+
+    return deco
+
+
+def get_topology(name: str) -> Topology:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown topology {name!r} (registered: "
+            f"{sorted(_REGISTRY)})") from None
+
+
+def available_topologies() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Client upload / read-back timing (schedule plumbing)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _UploadTimes:
+    """Per-client modeled upload timeline for one round."""
+
+    start_s: list[float]                 # upload start (ready + compute + jitter)
+    end_s: list[float]                   # last PUT completed
+    mults: np.ndarray                    # per-client transfer-rate multiplier
+    span_end_s: float                    # max end over clients
+
+
+def _register_uploads(runtime: LambdaRuntime, upload: UploadModel | None,
+                      n: int, rnd: int, base_s: float,
+                      client_ready_s: Sequence[float] | None,
+                      key_bytes: Sequence[Sequence[tuple]]) -> _UploadTimes:
+    """Model client uploads: per-client local compute, then start jitter,
+    then sequential PUTs in ``key_bytes`` order at the client's (jittered)
+    uplink rate. Each PUT's completion is pushed as an availability-publish
+    event and the heap drained, so keys become readable in deterministic
+    time order."""
+    upload = upload or UploadModel()
+    starts, mults = upload.plan(n, rnd)
+    computes = upload.compute_plan(n, rnd)
+    t_start, t_end = [], []
+    for i in range(n):
+        ready = base_s if client_ready_s is None else float(client_ready_s[i])
+        t = ready + float(computes[i]) + float(starts[i])
+        t_start.append(t)
+        for key, nb in key_bytes[i]:
+            t += upload.upload_s(nb, float(mults[i]))
+            runtime.sim.at(t, runtime.avail.publish, key, t)
+        t_end.append(t)
+    runtime.sim.drain()
+    return _UploadTimes(t_start, t_end, mults,
+                        max(t_end, default=base_s))
+
+
+def _readback_times(sched: str, runtime: LambdaRuntime,
+                    upload: UploadModel | None, up: _UploadTimes,
+                    out_keys_bytes: Sequence[tuple],
+                    agg_end_s: float) -> tuple:
+    """Per-client read-back completion times (a :class:`Timeline` fold).
+
+    Barrier: the round is phase-structured — every output exists at
+    ``agg_end_s`` and each client then downloads them sequentially at its
+    jittered downlink rate. Pipelined: each client independently reads the
+    outputs in key order *as they become available*. Downloads are
+    instantaneous when the model has no ``download_mbps``, collapsing both
+    cases to ``agg_end_s`` (the legacy semantics)."""
+    n = len(up.end_s)
+    upload = upload or UploadModel()
+    done = []
+    for i in range(n):
+        # barrier: every output exists at round end, client downloads them
+        # back to back. pipelined: client is busy until its own upload
+        # ends, then reads each output the moment it is published.
+        tl = Timeline(agg_end_s if sched == "barrier" else up.end_s[i])
+        for key, nb in out_keys_bytes:
+            if sched != "barrier":
+                tl.wait_until(runtime.avail.time_of(key, agg_end_s))
+            tl.advance(upload.download_s(nb, float(up.mults[i])))
+        done.append(tl.t)
+    return tuple(done)
+
+
+def _round_base(runtime: LambdaRuntime,
+                client_ready_s: Sequence[float] | None) -> float:
+    """The round's zero point: the runtime cursor, or — when per-client
+    ready times from a previous round are supplied — the earliest client
+    activity (rounds overlap, so the cursor may legitimately be later)."""
+    if client_ready_s is None:
+        return runtime.now
+    return float(min(client_ready_s))
+
+
+# ---------------------------------------------------------------------------
+# The shared round driver
+# ---------------------------------------------------------------------------
+
+def _build_body(backend: ExecutionBackend, store: ObjectStore, shared: dict,
+                inv: InvocationSpec):
+    """Materialize an :class:`InvocationSpec` into a runnable body using
+    the engine's invocation-body templates."""
+    weights = list(inv.weights) if inv.weights is not None else None
+    if inv.colocated_in:
+        return backend.colocated_body(shared, store, list(inv.in_keys),
+                                      weights, inv.out_key,
+                                      is_global=inv.global_out)
+    inner = backend.avg_body(store, list(inv.in_keys), inv.out_key,
+                             weights=weights)
+    if not inv.shared_copy:
+        return inner
+
+    def body(ctx, inner=inner, out_key=inv.out_key):
+        result = inner(ctx)
+        shared[out_key] = result          # zero-copy mirror, no extra time
+        return result
+
+    return body
+
+
+def run_round(topology: str | Topology,
+              client_grads: Sequence[np.ndarray], *, rnd: int,
+              store: ObjectStore, runtime: LambdaRuntime,
+              engine: Engine = None, schedule: str | None = None,
+              upload: UploadModel | None = None,
+              client_ready_s: Sequence[float] | None = None,
+              straggler_threshold_s: float | None = None,
+              **options) -> AggregationResult:
+    """Execute one aggregation round of any registered topology.
+
+    This is the machinery formerly triplicated across the monolithic round
+    functions; every topology-specific decision comes from the
+    :class:`RoundProgram` the topology declares.
+    """
+    topo = topology if isinstance(topology, Topology) \
+        else get_topology(topology)
+    topo.validate_options(options)
+    backend = get_backend(engine)
+    sched = get_schedule(schedule)
+    barrier = sched == "barrier"
+    n = len(client_grads)
+    limits = runtime.limits
+    p0, g0 = store.stats.puts, store.stats.gets
+    rec_start = len(runtime.records)
+    base = _round_base(runtime, client_ready_s)
+    spec = RoundSpec(rnd=rnd, n=n,
+                     grad_bytes=int(np.asarray(client_grads[0]).nbytes),
+                     limits=limits, options=options)
+    prog = topo.program(client_grads, spec, backend)
+
+    # -- client uploads: values land immediately, availability is modeled ----
+    for key, value in prog.client_puts:
+        store.put(key, value)
+    up = _register_uploads(runtime, upload, n, rnd, base, client_ready_s,
+                           prog.uploads)
+
+    # -- aggregation phases ---------------------------------------------------
+    shared: dict = {}
+    handles = []
+    prev_end = max(base, up.span_end_s)
+    for phase in prog.phases:
+        ph = runtime.phase(start_s=prev_end if barrier else base)
+        for inv in phase:
+            body = _build_body(backend, store, shared, inv)
+            mem = _alloc_mb(inv.alloc_bytes, limits)
+            if barrier:
+                ph.invoke_reliable(
+                    body, fn_name=inv.fn_name, memory_mb=mem,
+                    straggler_threshold_s=straggler_threshold_s)
+            else:
+                launch = max(base, runtime.avail.time_of(inv.in_keys[0],
+                                                         base))
+                ph.invoke_reliable(
+                    body, fn_name=inv.fn_name, memory_mb=mem,
+                    straggler_threshold_s=straggler_threshold_s,
+                    launch_s=launch, wait_avail=True, out_key=inv.out_key)
+        prev_end = runtime.finish_phase(ph, barrier=barrier)
+        handles.append(ph)
+    agg_end = prev_end
+    if barrier:
+        wall = (up.span_end_s - base) + sum(ph.wall_s for ph in handles)
+        phases = tuple(ph.wall_s for ph in handles)
+    else:
+        wall = agg_end - base
+        phases = tuple(ph.end_s - base for ph in handles)
+    backend.end_round(store)
+
+    # -- client read-back (N-1 redundant sweeps batch-accounted in O(1)) -----
+    values = [store.get(key) for key, _nb in prog.readback]
+    if n > 1:
+        for key, _nb in prog.readback:
+            store.account_gets(key, n - 1)
+    avg = np.asarray(prog.collect(values))
+    client_done = _readback_times(sched, runtime, upload, up,
+                                  prog.readback, agg_end)
+    round_end = max(agg_end, max(client_done, default=agg_end))
+    runtime.advance_to(round_end)
+
+    recs = runtime.records[rec_start:]
+    return AggregationResult(
+        topology=prog.topology, avg_flat=avg,
+        wall_clock_s=wall, phases_s=phases, records=recs,
+        puts=store.stats.puts - p0, gets=store.stats.gets - g0,
+        memory_mb=max(r.memory_mb for r in recs),
+        peak_memory_mb=max(r.peak_memory_mb for r in recs),
+        engine=backend.name, schedule=sched, round_start_s=base,
+        round_end_s=round_end, client_done_s=client_done, limits=limits)
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers (public: plugin topologies build their programs with them)
+# ---------------------------------------------------------------------------
+
+# the one grouping rule shared with the analytical model (cost_model owns it
+# so both layers derive the tree shape from the same definition)
+tree_groups = cm.tree_groups
+
+
+def resolve_partition_plan(spec: RoundSpec, total_elems: int) -> PartitionPlan:
+    """The sharded topologies' common option handling: an explicit ``plan``
+    wins; otherwise build one from ``partition``/``n_shards``/
+    ``tensor_sizes``."""
+    plan = spec.opt("plan")
+    if plan is not None:
+        return plan
+    return make_plan(spec.opt("partition", "uniform"), total_elems,
+                     spec.opt("n_shards", 4), spec.opt("tensor_sizes"))
+
+
+def sharded_client_uploads(client_grads, rnd: int, plan: PartitionPlan,
+                           backend: ExecutionBackend):
+    """Per-client shard PUTs + upload schedule shared by every topology
+    whose clients upload the GradsSharding N·M shard keyspace (Step 1+2;
+    zero-copy views under the batched engine). Returns
+    ``(client_puts, uploads, shard_bytes)``."""
+    m = plan.n_shards
+    shard_bytes = [s * 4 for s in plan.shard_sizes()]
+    puts, uploads = [], []
+    for i, g in enumerate(client_grads):
+        flat = np.asarray(g, np.float32)
+        puts.extend((k_client_shard(rnd, i, j), sh)
+                    for j, sh in enumerate(backend.shard_values(flat, plan)))
+        uploads.append([(k_client_shard(rnd, i, j), shard_bytes[j])
+                        for j in range(m)])
+    return tuple(puts), tuple(uploads), shard_bytes
+
+
+# ---------------------------------------------------------------------------
+# Built-in topologies (paper §III-A)
+# ---------------------------------------------------------------------------
+
+@register_topology("gradssharding")
+class GradsShardingTopology(Topology):
+    """M concurrent shard aggregators, single phase (paper §III-A3)."""
+
+    def program(self, client_grads, spec, backend):
+        rnd, n = spec.rnd, spec.n
+        plan = resolve_partition_plan(
+            spec, int(np.asarray(client_grads[0]).size))
+        m = plan.n_shards
+        puts, uploads, shard_bytes = sharded_client_uploads(
+            client_grads, rnd, plan, backend)
+
+        phase = tuple(
+            InvocationSpec(
+                fn_name=f"r{rnd}-shard{j}",
+                in_keys=tuple(k_client_shard(rnd, i, j) for i in range(n)),
+                out_key=k_avg_shard(rnd, j),
+                alloc_bytes=shard_bytes[j])
+            for j in range(m))
+        readback = tuple((k_avg_shard(rnd, j), shard_bytes[j])
+                         for j in range(m))
+        return RoundProgram(
+            topology="gradssharding", client_puts=puts,
+            uploads=uploads, phases=(phase,), readback=readback,
+            collect=lambda shards: reconstruct(shards, plan))
+
+    # the analytical entries for the builtins stay in cost_model (they are
+    # the paper's published formulas); the hooks mirror them for uniformity
+    def cost_s3_ops(self, n, m=1):
+        return cm.s3_ops("gradssharding", n, m)
+
+    def cost_n_aggregators(self, n, m=1):
+        return m
+
+    def cost_n_phases(self):
+        return 1
+
+    def cost_input_bytes(self, grad_bytes, m=1):
+        return math.ceil(grad_bytes / m)
+
+
+def _full_grad_uploads(client_grads, rnd):
+    """Whole-gradient client PUTs shared by the tree topologies."""
+    grad_bytes = int(np.asarray(client_grads[0]).nbytes)
+    puts = tuple((k_client_grad(rnd, i), np.asarray(g, np.float32))
+                 for i, g in enumerate(client_grads))
+    uploads = tuple([(k_client_grad(rnd, i), grad_bytes)]
+                    for i in range(len(client_grads)))
+    return puts, uploads, grad_bytes
+
+
+@register_topology("lambda_fl")
+class LambdaFLTopology(Topology):
+    """Two-level tree, ⌈√N⌉ branching, 2 sequential phases (§III-A1)."""
+
+    def program(self, client_grads, spec, backend):
+        rnd, n = spec.rnd, spec.n
+        puts, uploads, grad_bytes = _full_grad_uploads(client_grads, rnd)
+        k = cm.lambda_fl_branching(n)
+        groups = tree_groups(n, k)
+        leaves = tuple(
+            InvocationSpec(
+                fn_name=f"r{rnd}-leaf{leaf}",
+                in_keys=tuple(k_client_grad(rnd, i) for i in members),
+                out_key=k_partial(rnd, 1, leaf),
+                alloc_bytes=grad_bytes)
+            for leaf, members in enumerate(groups))
+        root = InvocationSpec(
+            fn_name=f"r{rnd}-root",
+            in_keys=tuple(k_partial(rnd, 1, leaf)
+                          for leaf in range(len(groups))),
+            out_key=k_global(rnd),
+            alloc_bytes=grad_bytes,
+            weights=tuple(float(len(members)) for members in groups),
+            global_out=True)
+        return RoundProgram(
+            topology="lambda_fl", client_puts=puts, uploads=uploads,
+            phases=(leaves, (root,)),
+            readback=((k_global(rnd), grad_bytes),),
+            collect=lambda values: values[0])
+
+    def cost_s3_ops(self, n, m=1):
+        return cm.s3_ops("lambda_fl", n, m)
+
+    def cost_n_aggregators(self, n, m=1):
+        return math.ceil(n / cm.lambda_fl_branching(n)) + 1
+
+    def cost_n_phases(self):
+        return 2
+
+
+@register_topology("lifl")
+class LIFLTopology(Topology):
+    """Three-level hierarchy, ⌈∛N⌉ branching, 3 sequential phases
+    (§III-A2). ``colocated=True`` models LIFL's native shared-memory fast
+    path: level ≥2 hops read node-local memory (no S3 ops, no transfer
+    time) and only the global result is PUT."""
+
+    options_used = frozenset({"colocated"})
+
+    def program(self, client_grads, spec, backend):
+        rnd, n = spec.rnd, spec.n
+        colocated = bool(spec.opt("colocated", False))
+        puts, uploads, grad_bytes = _full_grad_uploads(client_grads, rnd)
+
+        b = cm.lifl_branching(n)
+        phases = []
+        level_keys = [k_client_grad(rnd, i) for i in range(n)]
+        level_weights = [1.0] * n
+        n_levels = 3
+        for level in range(1, n_levels + 1):
+            groups = tree_groups(len(level_keys), b) if level < n_levels \
+                else [list(range(len(level_keys)))]
+            invs, out_keys, out_weights = [], [], []
+            for g_idx, members in enumerate(groups):
+                is_global = level == n_levels
+                out_key = k_global(rnd) if is_global \
+                    else k_partial(rnd, level, g_idx)
+                invs.append(InvocationSpec(
+                    fn_name=f"r{rnd}-l{level}g{g_idx}",
+                    in_keys=tuple(level_keys[i] for i in members),
+                    out_key=out_key,
+                    alloc_bytes=grad_bytes,
+                    weights=tuple(level_weights[i] for i in members),
+                    colocated_in=colocated and level >= 2,
+                    shared_copy=colocated and level == 1,
+                    global_out=is_global))
+                out_keys.append(out_key)
+                out_weights.append(float(sum(level_weights[i]
+                                             for i in members)))
+            phases.append(tuple(invs))
+            level_keys, level_weights = out_keys, out_weights
+
+        return RoundProgram(
+            topology="lifl", client_puts=puts, uploads=uploads,
+            phases=tuple(phases),
+            readback=((k_global(rnd), grad_bytes),),
+            collect=lambda values: values[0])
+
+    def cost_s3_ops(self, n, m=1):
+        return cm.s3_ops("lifl", n, m)
+
+    def cost_n_aggregators(self, n, m=1):
+        l1, l2 = cm.lifl_levels(n)
+        return l1 + l2 + 1
+
+    def cost_n_phases(self):
+        return 3
+
+
+# The hybrid plugin topology registers itself through the public API above;
+# importing it here makes ``sharded_tree`` available wherever the registry
+# is (the import must follow the registry definitions).
+import repro.core.sharded_tree  # noqa: E402,F401  (registration side effect)

@@ -19,11 +19,11 @@ The training loop adds the production substrate: checkpoint/restart
 
 A third path runs the paper's own setting end to end:
 :func:`federated_train_loop` drives multi-round federated training through
-the simulated serverless substrate (``core.aggregation``), with
-:class:`FederatedPipeline` carrying per-client timing across rounds so
-that — under ``schedule="pipelined"`` — round r+1 client uploads overlap
-round r read-back, and the whole session's modeled wall-clock reflects
-the overlap win over the barrier schedule.
+a :class:`repro.api.FederatedSession`, which carries per-client timing
+across rounds internally so that — under ``schedule="pipelined"`` — round
+r+1 client local compute and uploads overlap round r read-back, and the
+whole session's modeled wall-clock reflects the overlap win over the
+barrier schedule.
 """
 from __future__ import annotations
 
@@ -185,7 +185,9 @@ def make_shardmap_train_step(cfg: ModelConfig, mesh: Mesh, lr: float,
 # ---------------------------------------------------------------------------
 
 class FederatedPipeline:
-    """Carries per-client logical times across aggregation rounds.
+    """Deprecated: absorbed into :class:`repro.api.FederatedSession`,
+    which threads ``client_done_s -> client_ready_s`` internally. Kept as
+    a shim for external callers that drive ``aggregate_round`` by hand.
 
     Under the pipelined schedule a client may finish reading round r's
     averaged shards while stragglers are still downloading; feeding each
@@ -232,39 +234,33 @@ def federated_train_loop(client_grad_fn, *, rounds: int,
     """Multi-round serverless aggregation driver (the paper's setting).
 
     ``client_grad_fn(rnd)`` returns the round's client gradients (flat f32
-    vectors — typically local-SGD deltas). Rounds run through
-    ``aggregate_round`` with the chosen engine/schedule; a
-    :class:`FederatedPipeline` threads per-client timing so pipelined
-    sessions overlap rounds. ``on_round(rnd, result)`` is called after each
-    round (apply the update, log, checkpoint). Returns the results plus
-    session timing: ``session_wall_s`` (makespan) and ``sum_round_walls_s``
-    (what a fully barriered session would report).
+    vectors — typically local-SGD deltas). Rounds run through a
+    :class:`repro.api.FederatedSession`, which threads per-client timing
+    internally so pipelined sessions overlap rounds. ``on_round(rnd,
+    result)`` is called after each round (apply the update, log,
+    checkpoint). Returns the results plus session timing:
+    ``session_wall_s`` (makespan) and ``sum_round_walls_s`` (what a fully
+    barriered session would report).
     """
-    from repro.core import aggregation as agg
-    from repro.serverless import LambdaRuntime
-    from repro.store import ObjectStore
+    from repro.api import FederatedSession, SessionConfig
 
-    store = store if store is not None else ObjectStore()
-    runtime = runtime if runtime is not None else LambdaRuntime()
-    pipe = FederatedPipeline(schedule=schedule, upload=upload)
+    session = FederatedSession(
+        SessionConfig(topology=topology, n_shards=n_shards,
+                      partition=partition, tensor_sizes=tensor_sizes,
+                      engine=engine, schedule=schedule, upload=upload),
+        store=store, runtime=runtime)
     results = []
-    for rnd in range(rounds):
-        grads = client_grad_fn(rnd)
-        res = agg.aggregate_round(
-            topology, grads, rnd=rnd, store=store, runtime=runtime,
-            n_shards=n_shards, partition=partition,
-            tensor_sizes=tensor_sizes, engine=engine, **pipe.round_kwargs())
-        pipe.observe(res)
+    for rnd, res in enumerate(session.run(client_grad_fn, rounds)):
         results.append(res)
         if on_round is not None:
             on_round(rnd, res)
     return {
         "results": results,
-        "session_wall_s": pipe.session_wall_s,
-        "sum_round_walls_s": float(sum(pipe.round_walls)),
-        "lambda_cost": runtime.total_cost(),
-        "store": store,
-        "runtime": runtime,
+        "session_wall_s": session.session_wall_s,
+        "sum_round_walls_s": session.sum_round_walls_s,
+        "lambda_cost": session.runtime.total_cost(),
+        "store": session.store,
+        "runtime": session.runtime,
     }
 
 

@@ -285,6 +285,10 @@ class LambdaRuntime:
         self.faults = faults or FaultPlan()
         self.warm_pool_size = warm_pool_size
         self.records: list[InvocationRecord] = []
+        # cumulative billing over *all* invocations ever run, including
+        # records dropped by compact() — keeps total_cost()/total_gb_s()
+        # exact in bounded-memory long sessions
+        self._billed_gb_s = 0.0
         self._warm: OrderedDict[str, bool] = OrderedDict()
         self.sim = EventSim()
         self.avail = AvailabilityMap()
@@ -382,6 +386,7 @@ class LambdaRuntime:
                 start_s=start, end_s=start + duration,
                 stall_s=ctx.stall_s)
             self.records.append(rec)
+            self._billed_gb_s += rec.billed_gb_s
         if failed:
             return None, rec
         return result, rec
@@ -427,14 +432,24 @@ class LambdaRuntime:
 
     # -- aggregate stats -----------------------------------------------------
     def total_cost(self) -> float:
-        return sum(r.billed_gb_s for r in self.records) \
-            * self.limits.gb_s_price
+        return self._billed_gb_s * self.limits.gb_s_price
 
     def total_gb_s(self) -> float:
-        return sum(r.billed_gb_s for r in self.records)
+        return self._billed_gb_s
+
+    def compact(self) -> None:
+        """Drop per-invocation records and published availability entries
+        (both grow linearly with rounds in a long session) while keeping
+        cumulative billing exact and the warm pool / logical clock intact.
+        Called between rounds by ``FederatedSession`` when
+        ``keep_records=False``; safe there because finished rounds' keys
+        are never queried again (the keyspace is round-prefixed)."""
+        self.records.clear()
+        self.avail.clear()
 
     def reset(self) -> None:
         self.records.clear()
+        self._billed_gb_s = 0.0
         self._warm.clear()
         self.sim.reset()
         self.avail.clear()

@@ -1,0 +1,236 @@
+"""Topology strategy registry + shared round driver + back-compat shims.
+
+The tentpole invariants: (1) the legacy monolithic round functions are now
+thin shims over the shared driver and stay bit-identical (values *and*
+modeled accounting) to the new entry points across the full topology ×
+engine × schedule grid; (2) a topology registered purely through the
+public ``@register_topology`` API — the ``sharded_tree`` hybrid — runs
+through the same driver, inherits every engine/schedule, and carries its
+own analytical cost entries.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import FederatedSession
+from repro.core import aggregation as agg
+from repro.core import cost_model as cm
+from repro.core import topology as topo
+from repro.core.cost_model import UploadModel
+from repro.core.sharding import make_plan
+from repro.serverless import LambdaRuntime
+from repro.store import ObjectStore
+
+ENGINES = ("streaming", "batched", "incremental")
+SCHEDULES = ("barrier", "pipelined")
+TOPOLOGIES = ("gradssharding", "lambda_fl", "lifl")
+
+JITTER = UploadModel(mbps=16.0, jitter_s=3.0, rate_jitter=0.5, seed=11)
+
+
+def _grads(n=20, size=5_003, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal(size).astype(np.float32) for _ in range(n)]
+
+
+def _old(topology, grads, **kw):
+    store, rt = ObjectStore(), LambdaRuntime()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return agg.aggregate_round(topology, grads, rnd=0, store=store,
+                                   runtime=rt, **kw)
+
+
+def _new(topology, grads, **kw):
+    session = FederatedSession(topology=topology, **kw)
+    return session.round(grads)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance grid: old vs new entry points, bit-identical everything
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("topology", TOPOLOGIES)
+def test_grid_old_vs_new_bit_identical(topology, engine, schedule):
+    grads = _grads()
+    kw = dict(engine=engine, schedule=schedule, upload=JITTER, n_shards=8)
+    old = _old(topology, grads, **kw)
+    new = _new(topology, grads, **kw)
+    assert np.array_equal(old.avg_flat, new.avg_flat)
+    assert (old.puts, old.gets) == (new.puts, new.gets)
+    assert old.wall_clock_s == new.wall_clock_s
+    assert old.phases_s == new.phases_s
+    assert old.peak_memory_mb == new.peak_memory_mb
+    assert sum(r.billed_gb_s for r in old.records) == \
+        sum(r.billed_gb_s for r in new.records)
+
+
+def test_deprecated_shims_delegate_and_warn():
+    grads = _grads(n=8, size=1_024)
+    plan = make_plan("uniform", 1_024, 4, None)
+    for fn, kw in [
+        (agg.gradssharding_round, {"plan": plan}),
+        (agg.lambda_fl_round, {}),
+        (agg.lifl_round, {}),
+        (agg.lifl_round, {"colocated": True}),
+    ]:
+        store, rt = ObjectStore(), LambdaRuntime()
+        with pytest.warns(DeprecationWarning, match="FederatedSession"):
+            old = fn(grads, rnd=0, store=store, runtime=rt, **kw)
+        new = _new(old.topology, grads, n_shards=4,
+                   colocated=bool(kw.get("colocated")))
+        assert np.array_equal(old.avg_flat, new.avg_flat)
+        assert (old.puts, old.gets) == (new.puts, new.gets)
+        assert old.wall_clock_s == new.wall_clock_s
+
+
+def test_aggregate_round_does_not_warn():
+    store, rt = ObjectStore(), LambdaRuntime()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        agg.aggregate_round("gradssharding", _grads(4, 512), rnd=0,
+                            store=store, runtime=rt, n_shards=2)
+
+
+# ---------------------------------------------------------------------------
+# Registry error paths
+# ---------------------------------------------------------------------------
+
+def test_unknown_topology_raises_with_registered_names():
+    with pytest.raises(ValueError, match="unknown topology"):
+        topo.get_topology("ring-allreduce")
+    with pytest.raises(ValueError, match="sharded_tree"):
+        _new("ring-allreduce", _grads(2, 64))
+
+
+def test_duplicate_registration_raises_unless_replace():
+    with pytest.raises(ValueError, match="already registered"):
+        @topo.register_topology("gradssharding")
+        class Clash(topo.Topology):
+            pass
+    # the original registration is untouched
+    assert isinstance(topo.get_topology("gradssharding"),
+                      topo.GradsShardingTopology)
+
+    @topo.register_topology("_test_tmp")
+    class Tmp(topo.Topology):
+        pass
+
+    @topo.register_topology("_test_tmp", replace=True)
+    class Tmp2(topo.Topology):
+        pass
+
+    assert isinstance(topo.get_topology("_test_tmp"), Tmp2)
+    del topo._REGISTRY["_test_tmp"]
+
+
+def test_unknown_topology_option_raises():
+    with pytest.raises(TypeError, match="unexpected option"):
+        _new("gradssharding", _grads(4, 512), colocated=True)
+    with pytest.raises(TypeError, match="unexpected option"):
+        store, rt = ObjectStore(), LambdaRuntime()
+        agg.aggregate_round("lambda_fl", _grads(4, 512), rnd=0, store=store,
+                            runtime=rt, warp_drive=True)
+
+
+def test_available_topologies_lists_plugin():
+    names = topo.available_topologies()
+    assert set(TOPOLOGIES) <= set(names)
+    assert "sharded_tree" in names
+
+
+# ---------------------------------------------------------------------------
+# sharded_tree: the public-API plugin topology
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+@pytest.mark.parametrize("engine", ENGINES)
+def test_sharded_tree_bit_identical_to_lambda_fl(engine, schedule):
+    """Per shard, the leaf/root op sequence is exactly λ-FL's, so the
+    reconstructed vector matches λ-FL bit for bit — the paper's
+    'topology changes cost, never arithmetic' claim extended to a
+    topology the core never heard of."""
+    grads = _grads()
+    ref = _new("lambda_fl", grads)
+    for m in (1, 3, 8):
+        got = _new("sharded_tree", grads, n_shards=m, engine=engine,
+                   schedule=schedule, upload=JITTER)
+        assert np.array_equal(got.avg_flat, ref.avg_flat), \
+            f"M={m} {engine}/{schedule}"
+        assert got.topology == "sharded_tree"
+        assert len(got.phases_s) == 2
+
+
+def test_sharded_tree_measured_ops_match_cost_entry():
+    n, m = 20, 4
+    r = _new("sharded_tree", _grads(n=n), n_shards=m)
+    ops = cm.s3_ops("sharded_tree", n, m)
+    assert (r.puts, r.gets) == (ops.puts, ops.gets)
+    assert len(r.records) == cm.n_aggregators("sharded_tree", n, m)
+    assert cm.n_phases("sharded_tree") == 2
+
+
+def test_sharded_tree_cost_model_entries():
+    gb = 512 * 1024 * 1024
+    n, m = 20, 8
+    rc = cm.round_cost("sharded_tree", gb, n, m)
+    assert rc.feasible and rc.n_invocations == cm.n_aggregators(
+        "sharded_tree", n, m)
+    # the hybrid's point: fan-in drops N -> ~2·√N (beats the single-phase
+    # shard aggregator's N sequential GETs) *and* objects drop to |θ|/M
+    # (beats the full-gradient tree)
+    assert rc.wall_clock_s < cm.round_cost("gradssharding", gb, n,
+                                           m).wall_clock_s
+    assert rc.wall_clock_s < cm.round_cost("lambda_fl", gb, n).wall_clock_s
+    # memory feasibility scales like GradsSharding (|θ|/M inputs)
+    assert cm.lambda_memory_mb("sharded_tree", gb, m) == \
+        cm.lambda_memory_mb("gradssharding", gb, m)
+    assert cm.feasible("sharded_tree", int(5120 * 1024 * 1024), 8)
+
+
+def test_sharded_tree_zero_jitter_pipelined_equals_barrier():
+    grads = _grads(n=12, size=4_096)
+    b = _new("sharded_tree", grads, n_shards=4, schedule="barrier")
+    p = _new("sharded_tree", grads, n_shards=4, schedule="pipelined")
+    assert p.wall_clock_s == b.wall_clock_s
+    assert np.array_equal(p.avg_flat, b.avg_flat)
+
+
+def test_sharded_tree_tensor_partitions():
+    grads = _grads(size=5_003)
+    ref = _new("lambda_fl", grads)
+    for partition in ("balanced", "layer_contiguous"):
+        got = _new("sharded_tree", grads, n_shards=4, partition=partition,
+                   tensor_sizes=[1_000, 3, 4_000])
+        assert np.array_equal(got.avg_flat, ref.avg_flat)
+
+
+# ---------------------------------------------------------------------------
+# Driver details
+# ---------------------------------------------------------------------------
+
+def test_run_round_accepts_topology_instance():
+    grads = _grads(n=6, size=1_024)
+    store, rt = ObjectStore(), LambdaRuntime()
+    r = topo.run_round(topo.get_topology("lambda_fl"), grads, rnd=0,
+                       store=store, runtime=rt)
+    ref = _new("lambda_fl", grads)
+    assert np.array_equal(r.avg_flat, ref.avg_flat)
+
+
+def test_straggler_threshold_now_uniform_across_topologies():
+    """The driver owns speculative re-execution, so trees get the
+    straggler mitigation GradsSharding always had."""
+    from repro.serverless import FaultPlan
+    grads = _grads(n=9, size=2_048)
+    faults = FaultPlan(slow={("r0-leaf0", 0): 25.0})
+    store, rt = ObjectStore(), LambdaRuntime(faults=faults)
+    r = agg.aggregate_round("lambda_fl", grads, rnd=0, store=store,
+                            runtime=rt, straggler_threshold_s=1.0)
+    assert any(rec.speculative for rec in rt.records)
+    slow = [rec for rec in rt.records
+            if rec.fn_name == "r0-leaf0" and not rec.speculative]
+    assert r.phases_s[0] < slow[0].duration_s
