@@ -1,0 +1,113 @@
+"""CI bench-regression gate: diff a smoke-benchmark JSON artifact against
+the committed expectations.
+
+The smoke run (``python -m benchmarks.run --smoke --json smoke.json``)
+records only deterministic, host-speed-independent quantities — S3 op
+counts, billed GB-s, modeled wall-clocks, peak memory, and SHA-256 hashes
+of the averaged gradients (the bit-identity invariants). This gate fails
+the build when any of them drifts from ``benchmarks/expected_smoke.json``:
+
+* integers, strings, booleans — exact match;
+* floats — relative tolerance 1e-9 (modeled arithmetic is deterministic;
+  the slack only covers decimal round-tripping through JSON);
+* missing or unexpected invariant names — failures (a silently dropped
+  invariant is a regression too).
+
+Regenerate expectations deliberately with::
+
+    PYTHONPATH=src python -m benchmarks.run --smoke --json /tmp/smoke.json
+    python -m benchmarks.check_invariants /tmp/smoke.json --update
+
+Usage:
+    python -m benchmarks.check_invariants smoke.json \\
+        [--expected benchmarks/expected_smoke.json] [--update]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import sys
+
+DEFAULT_EXPECTED = pathlib.Path(__file__).parent / "expected_smoke.json"
+FLOAT_RTOL = 1e-9
+
+
+def _load(path: str | pathlib.Path) -> dict:
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def _invariants(payload: dict) -> dict:
+    # accept either a full artifact ({"rows": ..., "invariants": ...}) or
+    # a bare invariants mapping (the committed expectations file)
+    return payload.get("invariants", payload)
+
+
+def _matches(expected, actual) -> bool:
+    if isinstance(expected, bool) or isinstance(actual, bool):
+        # strict: True must not match 1
+        return type(expected) is type(actual) and expected == actual
+    if isinstance(expected, float) or isinstance(actual, float):
+        return math.isclose(float(expected), float(actual), rel_tol=FLOAT_RTOL)
+    return expected == actual
+
+
+def compare(expected: dict, actual: dict) -> list[str]:
+    """Return a list of human-readable drift descriptions (empty = clean)."""
+    problems = []
+    for name in sorted(expected):
+        if name not in actual:
+            problems.append(f"MISSING  {name} (expected {expected[name]!r})")
+        elif not _matches(expected[name], actual[name]):
+            problems.append(
+                f"DRIFT    {name}: expected {expected[name]!r}, "
+                f"got {actual[name]!r}"
+            )
+    for name in sorted(set(actual) - set(expected)):
+        problems.append(f"UNKNOWN  {name} = {actual[name]!r} (not in expectations)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifact", help="smoke JSON written by benchmarks.run --json")
+    ap.add_argument("--expected", default=str(DEFAULT_EXPECTED))
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="rewrite the expectations file from the artifact instead of checking",
+    )
+    args = ap.parse_args(argv)
+
+    actual = _invariants(_load(args.artifact))
+    if not actual:
+        print(f"check_invariants: {args.artifact} contains no invariants")
+        return 1
+    if args.update:
+        with open(args.expected, "w") as fh:
+            json.dump(actual, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"check_invariants: wrote {len(actual)} expectations to {args.expected}")
+        return 0
+
+    expected = _invariants(_load(args.expected))
+    problems = compare(expected, actual)
+    if problems:
+        print(f"check_invariants: {len(problems)} invariant(s) drifted:")
+        for p in problems:
+            print(f"  {p}")
+        print(
+            "If the change is intentional, regenerate with "
+            "`python -m benchmarks.check_invariants <artifact> --update` "
+            "and commit the diff."
+        )
+        return 1
+    print(f"check_invariants: all {len(expected)} invariants match.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,9 +1,34 @@
-"""Shared benchmark helpers: CSV emission + tiny table printer."""
+"""Shared benchmark helpers: CSV emission, tiny table printer, and the
+structured invariant sink behind the CI bench-regression gate
+(``benchmarks.check_invariants``)."""
 from __future__ import annotations
 
+import json
 import time
 
 ROWS: list[tuple[str, float, str]] = []
+
+# name -> value recorded by benchmark runs. Values must be deterministic
+# (modeled quantities, op counts, result hashes — never host timings): the
+# CI gate diffs them against benchmarks/expected_smoke.json.
+INVARIANTS: dict[str, object] = {}
+
+
+def record_invariant(name: str, value) -> None:
+    INVARIANTS[name] = value
+
+
+def write_json(path: str) -> None:
+    """Dump the run's CSV rows + invariants as a JSON artifact."""
+    payload = {
+        "rows": [{"name": n, "us_per_call": u, "derived": d}
+                 for n, u, d in ROWS],
+        "invariants": INVARIANTS,
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+    print(f"\nwrote {len(ROWS)} rows + {len(INVARIANTS)} invariants "
+          f"to {path}")
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

@@ -65,6 +65,42 @@ def modeled_walls(grad_mb: float, sweep_n=SWEEP_N, sweep_m=SWEEP_M):
           ["N", "M", "barrier (s)", "pipelined (s)", "win"], rows)
 
 
+READAHEAD_KS = (1, 2, 4, 8)
+
+
+def readahead_sweep(grad_mb: float, sweep_n=SWEEP_N, sweep_m=SWEEP_M,
+                    ks=READAHEAD_KS):
+    """The straggler-hiding win of the bounded out-of-order read-ahead
+    window: modeled pipelined walls for k in {1,2,4,8} under jittered
+    uploads. k=1 is the legacy head-of-line-blocked schedule; larger
+    windows prefetch later-index contributions while a straggling
+    low-index client keeps the fold frontier stalled (fold order — and
+    avg_flat — never changes). Also reports the (k+1)-buffer peak-memory
+    envelope the window is allowed."""
+    rows = []
+    gb = int(grad_mb * MB)
+    for n in sweep_n:
+        for m in sweep_m:
+            walls = {}
+            for k in ks:
+                c = cm.pipelined_round_cost("gradssharding", gb, n, m,
+                                            upload=UPLOAD, readahead_k=k)
+                walls[k] = c.wall_clock_s
+                emit_timing(
+                    f"event_pipeline/readahead/N{n}/M{m}/k{k}",
+                    c.wall_clock_s, win=walls[ks[0]] / c.wall_clock_s,
+                    mem_mb=c.memory_mb, grad_mb=grad_mb)
+            buf_mb = cm.streaming_memory_bytes(
+                "gradssharding", gb, m, readahead_k=ks[-1]) / MB
+            rows.append([n, m] + [f"{walls[k]:.1f}" for k in ks]
+                        + [f"{walls[ks[0]] / walls[ks[-1]]:.2f}x",
+                           f"{buf_mb:.0f}"])
+    table(f"Pipelined read-ahead k-sweep, {grad_mb:.0f} MB gradient "
+          f"(modeled GradsSharding wall-clock, jittered uploads)",
+          ["N", "M"] + [f"k={k} (s)" for k in ks]
+          + [f"win k={ks[-1]}", f"buf MB (k={ks[-1]})"], rows)
+
+
 def sim_throughput(elems: int, rounds: int, sweep_n=SWEEP_N,
                    sweep_m=SWEEP_M):
     rows = []
@@ -134,11 +170,14 @@ def main(argv=None) -> None:
     if args.smoke:
         args.sim_elems, args.sim_rounds = 16_384, 1
     modeled_walls(args.grad_mb, sweep_n, sweep_m)
+    readahead_sweep(args.grad_mb, sweep_n, sweep_m)
     sim_throughput(args.sim_elems, args.sim_rounds, sweep_n, sweep_m)
     readback_accounting_micro()
     print("\nPipelined rounds launch each shard aggregator on its first "
-          "contribution and fold in index order (bit-identical prefix "
-          "folds); the win is the upload span the folds now hide under.")
+          "window contribution and fold in index order (bit-identical "
+          "prefix folds); the win is the upload span the folds now hide "
+          "under, and readahead_k>1 additionally hides reads behind "
+          "head-of-line straggler stalls.")
 
 
 if __name__ == "__main__":

@@ -9,7 +9,6 @@ dominance at every M, and the cost hump at intermediate M.
 from __future__ import annotations
 
 from benchmarks.common import emit, table
-from repro.config import LambdaLimits
 from repro.core import cost_model as cm
 
 MB = 1024 * 1024

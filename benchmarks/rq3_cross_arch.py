@@ -14,7 +14,6 @@ import numpy as np
 
 from benchmarks.common import emit, table
 from repro.api import FederatedSession
-from repro.config import LambdaLimits
 from repro.core import cost_model as cm
 
 MB = 1024 * 1024

@@ -20,8 +20,9 @@ from benchmarks import (
     rq2_shard_ablation,
     rq2b_lambda_sweep,
     rq3_cross_arch,
+    smoke_invariants,
 )
-from benchmarks.common import header
+from benchmarks.common import header, write_json
 
 BENCHES = [
     ("rq1_idle (Table III)", rq1_idle.main),
@@ -33,6 +34,7 @@ BENCHES = [
     ("event_pipeline (schedules)", event_pipeline_bench.main),
     ("kernels", kernels_bench.main),
     ("roofline (§Roofline)", roofline.main),
+    ("smoke_invariants (CI gate input)", smoke_invariants.main),
 ]
 
 
@@ -40,13 +42,18 @@ SMOKE_BENCHES = [
     ("rq3_cross_arch (smoke)", lambda: rq3_cross_arch.main(smoke=True)),
     ("event_pipeline (smoke)",
      lambda: event_pipeline_bench.main(["--smoke"])),
+    ("smoke_invariants (CI gate input)", smoke_invariants.main),
 ]
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="CI subset: 1-config rq3 + event_pipeline")
+                    help="CI subset: 1-config rq3 + event_pipeline + "
+                         "smoke invariants")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows + invariants as a JSON artifact "
+                         "(fed to benchmarks.check_invariants in CI)")
     args = ap.parse_args(argv)
     header()
     benches = SMOKE_BENCHES if args.smoke else BENCHES
@@ -58,6 +65,8 @@ def main(argv=None) -> None:
         except Exception as e:
             failures.append((name, e))
             traceback.print_exc()
+    if args.json:
+        write_json(args.json)
     if failures:
         print(f"\n{len(failures)} benchmark(s) FAILED: "
               f"{[n for n, _ in failures]}")

@@ -1,0 +1,103 @@
+"""Deterministic smoke invariants behind the CI bench-regression gate.
+
+Runs a tiny, fixed-seed round across the full guaranteed-bit-identical
+grid — topology × engine × schedule (+ a ``readahead_k`` sweep) — and
+records only *modeled* quantities (S3 op counts, billed GB-s, wall-clock,
+peak memory) plus a SHA-256 of the averaged gradient's bytes. Everything
+recorded is independent of host speed, so
+``benchmarks/check_invariants.py`` can fail the build on any drift from
+the committed expectations (``benchmarks/expected_smoke.json``).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.smoke_invariants  (stdout summary)
+  PYTHONPATH=src python -m benchmarks.run --smoke --json smoke.json
+"""
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+from benchmarks.common import record_invariant, table
+from repro.api import FederatedSession
+from repro.core import cost_model as cm
+from repro.core.cost_model import UploadModel
+
+N_CLIENTS = 8
+GRAD_ELEMS = 4_096
+N_SHARDS = 4
+TOPOLOGIES = ("gradssharding", "lambda_fl", "lifl", "sharded_tree")
+ENGINES = ("streaming", "batched", "incremental")
+SCHEDULES = ("barrier", "pipelined")
+READAHEAD_KS = (1, 2, 4, 8)
+
+UPLOAD = UploadModel(mbps=16.0, jitter_s=3.0, rate_jitter=0.5, seed=11)
+
+
+def _grads():
+    rng = np.random.default_rng(1234)
+    return [rng.standard_normal(GRAD_ELEMS).astype(np.float32)
+            for _ in range(N_CLIENTS)]
+
+
+def _avg_hash(result) -> str:
+    return hashlib.sha256(
+        np.ascontiguousarray(result.avg_flat).tobytes()).hexdigest()[:16]
+
+
+def main() -> None:
+    grads = _grads()
+    rows = []
+    hashes: dict[str, set] = {t: set() for t in TOPOLOGIES}
+    for topology in TOPOLOGIES:
+        for engine in ENGINES:
+            for schedule in SCHEDULES:
+                # every knob pinned (incl. readahead_k): the recorded
+                # invariants must be hermetic against REPRO_AGG_* env vars
+                session = FederatedSession(
+                    topology=topology, n_shards=N_SHARDS, engine=engine,
+                    schedule=schedule, upload=UPLOAD, readahead_k=1)
+                r = session.round(grads)
+                billed = sum(rec.billed_gb_s for rec in r.records)
+                tag = f"smoke/{topology}/{engine}/{schedule}"
+                record_invariant(f"{tag}/puts", r.puts)
+                record_invariant(f"{tag}/gets", r.gets)
+                record_invariant(f"{tag}/billed_gb_s", round(billed, 12))
+                record_invariant(f"{tag}/wall_s",
+                                 round(r.wall_clock_s, 12))
+                record_invariant(f"{tag}/avg_sha256", _avg_hash(r))
+                hashes[topology].add(_avg_hash(r))
+                rows.append([topology, engine, schedule, r.puts, r.gets,
+                             f"{billed:.4f}", f"{r.wall_clock_s:.3f}",
+                             _avg_hash(r)[:8]])
+        # the pipelined read-ahead window moves time, never bits
+        for k in READAHEAD_KS:
+            r = FederatedSession(
+                topology=topology, n_shards=N_SHARDS, schedule="pipelined",
+                upload=UPLOAD, readahead_k=k).round(grads)
+            tag = f"smoke/{topology}/readahead_k{k}"
+            record_invariant(f"{tag}/wall_s", round(r.wall_clock_s, 12))
+            record_invariant(f"{tag}/avg_sha256", _avg_hash(r))
+            record_invariant(f"{tag}/peak_memory_mb",
+                             round(r.peak_memory_mb, 6))
+            hashes[topology].add(_avg_hash(r))
+        # analytical == sim parity is itself an invariant worth gating
+        m = N_SHARDS if topology in ("gradssharding", "sharded_tree") else 1
+        model = cm.pipelined_round_cost(topology, GRAD_ELEMS * 4, N_CLIENTS,
+                                        m, upload=UPLOAD, readahead_k=1)
+        record_invariant(f"smoke/{topology}/model_pipelined_wall_s",
+                         round(model.wall_clock_s, 12))
+
+    for topology, hs in hashes.items():
+        # bit-identity across every engine x schedule x readahead_k combo
+        record_invariant(f"smoke/{topology}/bit_identical", len(hs) == 1)
+    record_invariant(
+        "smoke/sharded_tree_equals_lambda_fl",
+        hashes["sharded_tree"] == hashes["lambda_fl"])
+    table("Smoke invariants (engine x schedule grid, fixed seed)",
+          ["topology", "engine", "schedule", "puts", "gets", "GB-s",
+           "wall (s)", "avg hash"], rows)
+
+
+if __name__ == "__main__":
+    main()

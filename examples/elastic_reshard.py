@@ -8,7 +8,6 @@ budget — and the restart re-partitions without losing a step. Also shows
 
 Run:  PYTHONPATH=src python examples/elastic_reshard.py
 """
-import os
 import tempfile
 
 import numpy as np

@@ -7,16 +7,36 @@ serverless aggregation round. Swapping the topology — including the
 cost and latency, never the learning result: GradsSharding is bit-identical
 to full-vector FedAvg, and sharded_tree is bit-identical to λ-FL.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py \
+          [--schedule pipelined --readahead-k 4]
 """
+import argparse
+
 import numpy as np
 
 from repro import FederatedSession, SessionConfig
+from repro.core.cost_model import UploadModel
 
 N_CLIENTS, M, GRAD_SIZE = 20, 4, 100_000
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--schedule", default=None,
+                    choices=["barrier", "pipelined"])
+    ap.add_argument("--readahead-k", type=int, default=None,
+                    help="pipelined out-of-order prefetch window (GET up "
+                         "to k contributions ahead of the fold frontier; "
+                         "fold order, and thus the result bits, never "
+                         "change)")
+    ap.add_argument("--upload-mbps", type=float, default=None)
+    ap.add_argument("--jitter-s", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    upload = None
+    if args.upload_mbps or args.jitter_s:
+        upload = UploadModel(mbps=args.upload_mbps, jitter_s=args.jitter_s)
+
     rng = np.random.default_rng(0)
     grads = [rng.standard_normal(GRAD_SIZE).astype(np.float32)
              for _ in range(N_CLIENTS)]
@@ -24,8 +44,9 @@ def main():
 
     results = {}
     for topology in ("gradssharding", "lambda_fl", "lifl", "sharded_tree"):
-        session = FederatedSession(SessionConfig(topology=topology,
-                                                 n_shards=M))
+        session = FederatedSession(SessionConfig(
+            topology=topology, n_shards=M, schedule=args.schedule,
+            readahead_k=args.readahead_k, upload=upload))
         results[topology] = r = session.round(grads)
         print(f"{topology:14s}: wall {r.wall_clock_s:6.2f}s "
               f"({len(r.phases_s)} phase(s)), ops {r.puts}P+{r.gets}G, "

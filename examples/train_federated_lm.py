@@ -54,6 +54,11 @@ def main(argv=None):
                          "barrier)")
     ap.add_argument("--engine", default=None,
                     choices=["streaming", "batched", "incremental"])
+    ap.add_argument("--readahead-k", type=int, default=None,
+                    help="pipelined read-ahead window: GET up to k "
+                         "contributions ahead of the fold frontier "
+                         "(default: REPRO_AGG_READAHEAD / 1); fold order "
+                         "and the learning trajectory never change")
     ap.add_argument("--upload-mbps", type=float, default=None,
                     help="per-client uplink MB/s (None = instantaneous)")
     ap.add_argument("--download-mbps", type=float, default=None)
@@ -121,7 +126,8 @@ def main(argv=None):
     session = FederatedSession(SessionConfig(
         topology=args.topology, n_shards=args.shards,
         partition=args.partition, tensor_sizes=tensor_sizes,
-        engine=args.engine, schedule=args.schedule, upload=upload))
+        engine=args.engine, schedule=args.schedule,
+        readahead_k=args.readahead_k, upload=upload))
     for rnd, res in enumerate(session.run(client_grads, args.rounds)):
         on_round(rnd, res)
     print(f"session wall (modeled): {session.session_wall_s:.2f}s  "

@@ -64,6 +64,10 @@ class SessionConfig:
     tensor_sizes: Sequence[int] | None = None
     engine: str | None = None
     schedule: str | None = None
+    # pipelined schedule's bounded out-of-order prefetch window: GET up to
+    # k contributions ahead of the fold frontier (fold order — and thus
+    # avg_flat — is unchanged); None defers to REPRO_AGG_READAHEAD / 1
+    readahead_k: int | None = None
     upload: UploadModel | None = None
     # convenience override for UploadModel.compute_s (modeled per-client
     # local training time per round); 0.0 defers to the upload model
@@ -154,6 +158,7 @@ class FederatedSession:
             upload=cfg.resolved_upload(),
             client_ready_s=self._client_ready,
             straggler_threshold_s=cfg.straggler_threshold_s,
+            readahead_k=cfg.readahead_k,
             **cfg.round_options())
         self._observe(result)
         if not cfg.keep_records:

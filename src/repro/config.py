@@ -8,8 +8,8 @@ model. Every assigned architecture registers itself under
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field, replace
-from typing import Any, Mapping, Sequence
+from dataclasses import dataclass, replace
+from typing import Any, Mapping
 
 import jax.numpy as jnp
 

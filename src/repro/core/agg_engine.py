@@ -59,6 +59,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.sharding import PartitionPlan, ShardView, shard, shard_views
+from repro.serverless.event_sim import ReadAheadWindow
 from repro.store import ObjectStore
 
 # Fold-chunk size in elements: 256 K elements = 1 MB f32 / 2 MB f64, small
@@ -277,27 +278,50 @@ def _evaluate_nodes(nodes: Sequence[LazyAverage],
 
 def _avg_body(backend: "ExecutionBackend", store: ObjectStore,
               in_keys: Sequence[str], out_key: str,
-              weights: Sequence[float] | None = None):
-    """Read one contribution at a time, hold (sum, incoming) buffers, write
-    mean. Accumulation order = in_keys order (bit-reproducible). The ctx
-    models the paper's 3×input+450 MB peak: sum buffer + incoming buffer +
-    transient deserialization copy. The backend supplies the arithmetic
-    (inline numpy or lazy handles); every ctx call is identical either way.
-    """
+              weights: Sequence[float] | None = None,
+              readahead_k: int = 1):
+    """Streaming fold with a bounded out-of-order read-ahead window.
 
+    The fold itself is **strictly in in_keys (client-index) order** — the
+    bit-reproducibility contract — but the body may GET up to
+    ``readahead_k`` contributions at-or-ahead of the fold frontier into a
+    bounded buffer (:class:`~repro.serverless.event_sim.ReadAheadWindow`),
+    so under the pipelined schedule a late low-index upload no longer
+    blocks every later read. ``readahead_k=1`` is byte-for-byte the legacy
+    one-at-a-time loop (fetch order == index order, 2-buffer bound); under
+    the barrier schedule every key is available at time 0, so any ``k``
+    degenerates to index order too.
+
+    The ctx models peak memory ``(k+1)``·input + overhead: running sum +
+    up to ``k`` buffered inputs (incl. the transient deserialization copy
+    of the in-flight GET) — the paper's 3×input+450 MB formula at
+    ``k<=2``. The backend supplies the arithmetic (inline numpy or lazy
+    handles); the ctx call sequence is identical across backends.
+    """
     def body(ctx):
         acc = None
         n = len(in_keys)
-        for i, key in enumerate(in_keys):
-            arr = ctx.get(store, key)                 # transient tracked
-            ctx.alloc(backend.nbytes(arr))            # incoming buffer
-            if acc is None:
-                acc = backend.init_acc(arr, weights)
-                ctx.alloc(backend.nbytes(acc))
-            else:
-                acc = backend.accumulate(acc, arr, i, weights)
-                ctx.compute(backend.nbytes(arr))
-            ctx.free(backend.nbytes(arr))             # incoming released
+        win = ReadAheadWindow([ctx.avail_time(k) for k in in_keys],
+                              readahead_k)
+        buffered: dict = {}
+        while not win.done:
+            if win.foldable:
+                i = win.frontier
+                arr = buffered.pop(i)
+                if acc is None:
+                    acc = backend.init_acc(arr, weights)
+                    ctx.alloc(backend.nbytes(acc))
+                else:
+                    acc = backend.accumulate(acc, arr, i, weights)
+                    ctx.compute(backend.nbytes(arr))
+                ctx.free(backend.nbytes(arr))         # buffered slot released
+                win.folded()
+                continue
+            j = win.next_fetch(ctx.now_s)
+            arr = ctx.get(store, in_keys[j])          # stalls if unavailable
+            ctx.alloc(backend.nbytes(arr))            # buffered input
+            buffered[j] = arr
+            win.fetched(j)
         out = backend.finalize(acc, weights, n)
         ctx.compute(backend.nbytes(out))
         ctx.put(store, out_key, out, if_none_match=True)  # idempotent
@@ -359,8 +383,10 @@ class ExecutionBackend:
         return int(x.nbytes)
 
     # -- body construction ---------------------------------------------------
-    def avg_body(self, store, in_keys, out_key, weights=None):
-        return _avg_body(self, store, in_keys, out_key, weights)
+    def avg_body(self, store, in_keys, out_key, weights=None,
+                 readahead_k=1):
+        return _avg_body(self, store, in_keys, out_key, weights,
+                         readahead_k)
 
     def colocated_body(self, shared_mem, store, in_keys, weights, out_key,
                        is_global):

@@ -48,6 +48,7 @@ from repro.core.topology import (                                 # noqa: F401
     AggregationResult,
     Engine,
     available_topologies,
+    get_readahead,
     get_schedule,
     get_topology,
     k_avg_shard,
@@ -71,6 +72,7 @@ def aggregate_round(topology: str, client_grads: Sequence[np.ndarray], *,
                     upload: UploadModel | None = None,
                     client_ready_s: Sequence[float] | None = None,
                     straggler_threshold_s: float | None = None,
+                    readahead_k: int | None = None,
                     **kw) -> AggregationResult:
     """One aggregation round of any registered topology (functional form
     of :meth:`repro.api.FederatedSession.round`)."""
@@ -79,6 +81,7 @@ def aggregate_round(topology: str, client_grads: Sequence[np.ndarray], *,
         engine=engine, schedule=schedule, upload=upload,
         client_ready_s=client_ready_s,
         straggler_threshold_s=straggler_threshold_s,
+        readahead_k=readahead_k,
         n_shards=n_shards, partition=partition, tensor_sizes=tensor_sizes,
         **kw)
 

@@ -26,6 +26,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.config import AGG_COMPUTE_BPS, LambdaLimits
+from repro.serverless.event_sim import ReadAheadWindow
 
 MB = 1024 * 1024
 
@@ -132,29 +133,61 @@ def input_bytes(topology: str, grad_bytes: int, m: int = 1) -> int:
     return _registered(topology).cost_input_bytes(grad_bytes, m)
 
 
-def streaming_memory_bytes(topology: str, grad_bytes: int, m: int = 1) -> int:
-    """Two buffers: running sum + incoming contribution."""
-    return 2 * input_bytes(topology, grad_bytes, m)
+def streaming_memory_bytes(topology: str, grad_bytes: int, m: int = 1,
+                           readahead_k: int = 1) -> int:
+    """Streaming-fold buffers: running sum + the bounded prefetch window
+    (``readahead_k`` incoming contributions; the legacy two-buffer bound
+    at k=1)."""
+    return (1 + max(1, int(readahead_k))) \
+        * input_bytes(topology, grad_bytes, m)
+
+
+def collect_fanin(topology: str, n: int, m: int = 1) -> int:
+    """Widest aggregator fan-in. Every topology — builtin or plugin — is
+    a registered strategy, so this is one unconditional dispatch to its
+    ``cost_collect_fanin`` hook (no more falling through to a wrong
+    builtin branch for registry topologies)."""
+    return _registered(topology).cost_collect_fanin(n, m)
 
 
 def collect_memory_bytes(topology: str, grad_bytes: int, n: int,
-                         m: int = 1) -> int:
-    """Collect-then-average: all N contributions + the result (RQ2 Part A)."""
-    k = input_bytes(topology, grad_bytes, m)
-    if topology == "gradssharding":
-        return (n + 1) * k
-    if topology == "lambda_fl":
-        kk = lambda_fl_branching(n)
-        return (kk + 1) * k
-    l1, _ = lifl_levels(n)
-    b = math.ceil(n / l1)
-    return (b + 1) * k
+                         m: int = 1, readahead_k: int | None = None) -> int:
+    """Per-aggregator buffered bytes (RQ2 Part A): all fan-in
+    contributions + the result (collect-then-average), or — given
+    ``readahead_k`` — the bounded prefetch bound ``(min(k, fanin) + 1)``
+    buffers, which interpolates from the 2-buffer streaming bound (k=1)
+    up to full collect. Dispatches to the topology's
+    ``cost_memory_bytes`` hook (the clamp lives there, once)."""
+    return _registered(topology).cost_memory_bytes(
+        grad_bytes, n, m, readahead_k)
+
+
+def readahead_alloc_mult(readahead_k: int, fanin: int | None,
+                         limits: LambdaLimits) -> float:
+    """Billed-allocation input multiplier: the empirical 3× formula, or
+    ``k + 1`` prefetch buffers once the read-ahead window outgrows it —
+    with ``k`` clamped to the fold's fan-in (the window never buffers
+    more; ``fanin=None`` skips the clamp for fan-in-agnostic callers).
+    The single definition behind the driver's ``_alloc_mb`` and the
+    analytical model's per-fold billing — edit here, parity holds
+    everywhere."""
+    k = int(readahead_k)
+    if fanin is not None:
+        k = min(k, int(fanin))
+    return max(limits.mem_multiplier, k + 1)
 
 
 def lambda_memory_mb(topology: str, grad_bytes: int, m: int = 1,
-                     limits: LambdaLimits = LambdaLimits()) -> float:
-    """Empirical deployment formula: 3 × input_size + 450 MB (paper RQ3)."""
-    return (limits.mem_multiplier * input_bytes(topology, grad_bytes, m) / MB
+                     limits: LambdaLimits = LambdaLimits(),
+                     readahead_k: int = 1) -> float:
+    """Empirical deployment formula: 3 × input_size + 450 MB (paper RQ3).
+    A ``readahead_k`` prefetch window needs ``k + 1`` input buffers, so
+    the multiplier grows once k outruns the builtin formula's headroom.
+    Callers bill per aggregator and clamp ``readahead_k`` to that fold's
+    fan-in first (the window never buffers more) — see
+    :func:`readahead_alloc_mult`."""
+    mult = readahead_alloc_mult(readahead_k, None, limits)
+    return (mult * input_bytes(topology, grad_bytes, m) / MB
             + limits.runtime_overhead_mb)
 
 
@@ -167,8 +200,14 @@ def allocatable_memory_mb(required_mb: float,
 
 
 def feasible(topology: str, grad_bytes: int, m: int = 1,
-             limits: LambdaLimits = LambdaLimits()) -> bool:
-    return lambda_memory_mb(topology, grad_bytes, m, limits) \
+             limits: LambdaLimits = LambdaLimits(),
+             readahead_k: int = 1) -> bool:
+    """True when the aggregator allocation fits the platform ceiling.
+    ``readahead_k`` (pre-clamped to the fan-in by callers) matters: a
+    config whose 3× formula fits can still OOM once the prefetch window
+    needs ``(k+1)`` input buffers."""
+    return lambda_memory_mb(topology, grad_bytes, m, limits,
+                            readahead_k=readahead_k) \
         <= limits.max_memory_mb
 
 
@@ -316,18 +355,29 @@ def uniform_shard_bytes(grad_bytes: int, m: int, itemsize: int = 4
 
 def _fold_finish(launch_s: float, avail_s: Sequence[float],
                  in_bytes: Sequence[int], out_bytes: int,
-                 limits: LambdaLimits, cold: bool) -> float:
-    """Finish time of one streaming prefix fold: launch (+cold start), then
-    per contribution in index order — stall until available, per-GET latency
-    + transfer, accumulate (from the 2nd on) — then finalize + write.
-    Replays the exact op order of the runtime's aggregator body."""
+                 limits: LambdaLimits, cold: bool,
+                 readahead_k: int = 1) -> float:
+    """Finish time of one streaming prefix fold with a bounded read-ahead
+    window: launch (+cold start), then drive the same deterministic
+    :class:`ReadAheadWindow` schedule the simulated aggregator body runs —
+    GET the next window contribution (stalling only when none has landed),
+    fold strictly in index order (accumulate compute from the 2nd
+    contribution on) — then finalize + write. ``readahead_k=1`` replays
+    the legacy in-index-order op sequence exactly."""
     t = launch_s + (limits.cold_start_s if cold else 0.0)
-    for idx, (a, nb) in enumerate(zip(avail_s, in_bytes)):
-        if a > t:
-            t = a                                   # stall for availability
-        t += limits.s3_get_latency_s + nb / (limits.s3_read_mbps * 1e6)
-        if idx:
-            t += nb / AGG_COMPUTE_BPS
+    win = ReadAheadWindow(avail_s, readahead_k)
+    while not win.done:
+        if win.foldable:
+            if win.frontier:
+                t += in_bytes[win.frontier] / AGG_COMPUTE_BPS
+            win.folded()
+            continue
+        j = win.next_fetch(t)
+        if win.avail[j] > t:
+            t = win.avail[j]                        # stall for availability
+        t += limits.s3_get_latency_s + in_bytes[j] / (limits.s3_read_mbps
+                                                      * 1e6)
+        win.fetched(j)
     t += out_bytes / AGG_COMPUTE_BPS
     t += out_bytes / (limits.s3_write_mbps * 1e6)
     return t
@@ -356,49 +406,75 @@ def _fold_finish_colocated(launch_s: float, avail_s: Sequence[float],
 _tree_groups = tree_groups
 
 
+def _resolve_readahead(readahead_k: int | None) -> int:
+    """Shared knob resolution (``None``/"auto" -> ``REPRO_AGG_READAHEAD``
+    env, else 1) — one definition with the round driver's."""
+    from repro.core.topology import get_readahead
+    return get_readahead(readahead_k)
+
+
 def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
                          limits: LambdaLimits = LambdaLimits(),
                          upload: UploadModel | None = None,
                          rnd: int = 0, cold: bool = True,
                          shard_bytes: Sequence[int] | None = None,
-                         colocated: bool = False) -> RoundCost:
+                         colocated: bool = False,
+                         readahead_k: int | None = None) -> RoundCost:
     """Modeled round under the **pipelined** schedule.
 
     Clients locally train, then upload with per-client jitter
-    (``upload``); each aggregator launches when its first in-index-order
-    contribution lands and stream-folds the rest, stalling only on
-    unavailable inputs; tree levels chain on their first input.
+    (``upload``); each aggregator launches when the first contribution in
+    its ``readahead_k`` window lands and stream-folds in strict index
+    order while prefetching up to ``k`` contributions ahead of the fold
+    frontier (:class:`ReadAheadWindow` — ``k=1``, the default, is the
+    legacy in-index-order schedule); tree levels chain the same way.
     ``wall_clock_s`` is the makespan from round start to the last
     aggregator's output write — reads hide under uploads, which is where
     the win over :func:`round_cost`'s phase barriers comes from. Stall
-    time is billed (the function runs while it waits). ``colocated``
-    (LIFL only) models the shared-memory fast path: level ≥2 hops have
-    zero transfer time, so only the launch gating changes. The 1 ms
-    billing granularity is ignored here (<0.1 % on round-scale
-    durations); the discrete-event runtime reproduces ``wall_clock_s``
-    exactly for a no-fault round.
+    time is billed (the function runs while it waits), and the billed
+    allocation grows with the prefetch buffer (``(k+1)``·input once k
+    outruns the 3× formula). ``colocated`` (LIFL only) models the
+    shared-memory fast path: level ≥2 hops have zero transfer time (and,
+    having nothing to prefetch, keep first-input launch gating and the
+    3× allocation). Registry topologies dispatch through their
+    ``cost_pipelined_plan`` hook. The 1 ms billing granularity is
+    ignored here (<0.1 % on round-scale durations); the discrete-event
+    runtime reproduces ``wall_clock_s`` exactly for a no-fault round.
     """
     if colocated and topology != "lifl":
         raise ValueError("colocated is the LIFL shared-memory fast path")
+    ra = _resolve_readahead(readahead_k)
     upload = upload or UploadModel()
     starts, mults = upload.plan(n, rnd)
     starts = starts + upload.compute_plan(n, rnd)   # train, then upload
     ops = s3_ops(topology, n, m) if not colocated else None
-    mem_mb = allocatable_memory_mb(
-        lambda_memory_mb(topology, grad_bytes, m, limits), limits)
-    ok = feasible(topology, grad_bytes, m, limits)
+    # feasibility must see the readahead buffers: the simulated runtime
+    # OOMs mid-round on a config the 3x formula alone would green-light
+    ok = feasible(topology, grad_bytes, m, limits,
+                  readahead_k=min(ra, collect_fanin(topology, n, m)))
 
     finishes: list[float] = []
-    durations: list[float] = []          # per-aggregator busy time (billed)
+    gb_s_parts: list[float] = []         # per-aggregator billed GB-s
+    mem_mbs: list[float] = []
 
-    def run_fold(launch, avail, in_b, out_b, shared=False, write_out=True):
+    def run_fold(avail, in_b, out_b, shared=False, write_out=True):
+        # billed allocation mirrors the driver's _alloc_mb: the window
+        # never buffers more than the fold's fan-in, and colocated hops
+        # (nothing to prefetch) keep the 3x formula and legacy gating
         if shared:
+            launch = avail[0]
             end = _fold_finish_colocated(launch, avail, in_b, out_b, limits,
                                          cold, write_out)
         else:
-            end = _fold_finish(launch, avail, in_b, out_b, limits, cold)
+            launch = ReadAheadWindow.launch_s(avail, ra)
+            end = _fold_finish(launch, avail, in_b, out_b, limits, cold,
+                               readahead_k=ra)
+        mult = readahead_alloc_mult(1 if shared else ra, len(avail), limits)
+        mem = allocatable_memory_mb(
+            mult * in_b[0] / MB + limits.runtime_overhead_mb, limits)
         finishes.append(end)
-        durations.append(end - launch)
+        mem_mbs.append(mem)
+        gb_s_parts.append(mem / 1024.0 * (end - launch))
         return end
 
     if topology == "gradssharding":
@@ -409,7 +485,7 @@ def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
         avail = [[starts[i] + upload.upload_s(int(cum[j]), mults[i])
                   for i in range(n)] for j in range(m)]
         for j in range(m):
-            run_fold(avail[j][0], avail[j], [sb[j]] * n, sb[j])
+            run_fold(avail[j], [sb[j]] * n, sb[j])
     elif topology == "lambda_fl":
         k = lambda_fl_branching(n)
         grad_avail = [starts[i] + upload.upload_s(grad_bytes, mults[i])
@@ -417,11 +493,9 @@ def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
         leaf_ends = []
         for members in _tree_groups(n, k):
             avail = [grad_avail[i] for i in members]
-            leaf_ends.append(run_fold(avail[0], avail,
-                                      [grad_bytes] * len(members),
+            leaf_ends.append(run_fold(avail, [grad_bytes] * len(members),
                                       grad_bytes))
-        run_fold(leaf_ends[0], leaf_ends, [grad_bytes] * len(leaf_ends),
-                 grad_bytes)
+        run_fold(leaf_ends, [grad_bytes] * len(leaf_ends), grad_bytes)
     elif topology == "lifl":
         b = lifl_branching(n)
         grad_avail = [starts[i] + upload.upload_s(grad_bytes, mults[i])
@@ -431,16 +505,20 @@ def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
             ends = []
             for members in _tree_groups(len(level_in), b):
                 avail = [level_in[i] for i in members]
-                ends.append(run_fold(avail[0], avail,
-                                     [grad_bytes] * len(members),
+                ends.append(run_fold(avail, [grad_bytes] * len(members),
                                      grad_bytes,
                                      shared=colocated and _level == 2,
                                      write_out=False))
             level_in = ends
-        run_fold(level_in[0], level_in, [grad_bytes] * len(level_in),
+        run_fold(level_in, [grad_bytes] * len(level_in),
                  grad_bytes, shared=colocated)
     else:
-        raise ValueError(topology)
+        # registry topologies: the topology declares its pipelined fold
+        # DAG through the cost_pipelined_plan hook; run_fold owns launch
+        # gating (read-ahead window), stalls, timing and billing
+        _registered(topology).cost_pipelined_plan(
+            grad_bytes, n, m, limits, upload, starts, mults, run_fold,
+            shard_bytes=shard_bytes)
     if ops is None:
         l1, l2 = lifl_levels(n)
         # colocated: N client PUTs + l1 level-1 partials + the global; GETs
@@ -448,11 +526,11 @@ def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
         ops = S3Ops(puts=n + l1 + 1, gets_agg=n, gets_clients=n)
 
     wall = max(finishes)
-    gb_s = mem_mb / 1024.0 * sum(durations)
+    gb_s = sum(gb_s_parts)
     lam_cost = gb_s * limits.gb_s_price
     s3_cost = ops.puts * limits.s3_put_price + ops.gets * limits.s3_get_price
     return RoundCost(topology, n, m, grad_bytes, wall, gb_s, lam_cost,
-                     s3_cost, ops, mem_mb, len(durations), ok, ())
+                     s3_cost, ops, max(mem_mbs), len(mem_mbs), ok, ())
 
 
 def barrier_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,

@@ -19,12 +19,12 @@ verified against the serverless path on 8 fake CPU devices.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Sequence
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 
 Pytree = Any

@@ -8,9 +8,8 @@ bit-for-bit in fp32 because the per-element accumulation order is identical.
 """
 from __future__ import annotations
 
-from typing import Callable, Iterable, Iterator, Sequence
+from typing import Callable, Iterable, Sequence
 
-import numpy as np
 
 import jax
 import jax.numpy as jnp

@@ -104,6 +104,11 @@ class ShardedTreeTopology(Topology):
     def cost_input_bytes(self, grad_bytes, m=1):
         return math.ceil(grad_bytes / m)
 
+    def cost_collect_fanin(self, n, m=1):
+        # λ-FL's widest aggregator, per shard: the ⌈√N⌉-way leaf fold
+        # (leaf fan-in >= root fan-in == leaf count)
+        return cm.lambda_fl_branching(n)
+
     def cost_phase_plan(self, grad_bytes, n, m, limits):
         shard_b = self.cost_input_bytes(grad_bytes, m)
         k = cm.lambda_fl_branching(n)
@@ -111,3 +116,22 @@ class ShardedTreeTopology(Topology):
         return [(cm.aggregator_timing(shard_b, k, shard_b, limits),
                  m * leaves),
                 (cm.aggregator_timing(shard_b, leaves, shard_b, limits), m)]
+
+    def cost_pipelined_plan(self, grad_bytes, n, m, limits, upload, starts,
+                            mults, run_fold, shard_bytes=None):
+        """Pipelined entry, mirroring :meth:`program`: clients upload their
+        M shards sequentially (availability = start + cumulative-PUT prefix
+        time), each shard's leaf folds launch/stream off the shard
+        keyspace, and each shard root chains on its leaf finishes."""
+        sb = list(shard_bytes) if shard_bytes is not None \
+            else cm.uniform_shard_bytes(grad_bytes, m)
+        cum = np.cumsum(sb)
+        groups = cm.tree_groups(n, cm.lambda_fl_branching(n))
+        for j in range(m):
+            avail = [starts[i] + upload.upload_s(int(cum[j]), mults[i])
+                     for i in range(n)]
+            leaf_ends = [
+                run_fold([avail[i] for i in members],
+                         [sb[j]] * len(members), sb[j])
+                for members in groups]
+            run_fold(leaf_ends, [sb[j]] * len(leaf_ends), sb[j])

@@ -56,7 +56,7 @@ from repro.core import cost_model as cm
 from repro.core.agg_engine import ExecutionBackend, get_backend
 from repro.core.cost_model import UploadModel
 from repro.core.sharding import PartitionPlan, make_plan, reconstruct
-from repro.serverless.event_sim import Timeline
+from repro.serverless.event_sim import ReadAheadWindow, Timeline
 from repro.serverless.runtime import InvocationRecord, LambdaRuntime
 from repro.store import ObjectStore
 
@@ -82,6 +82,28 @@ def get_schedule(schedule: str | None = None) -> str:
         raise ValueError(f"unknown aggregation schedule {schedule!r} "
                          f"(expected one of {SCHEDULES} or 'auto')")
     return schedule
+
+
+DEFAULT_READAHEAD = 1
+
+
+def get_readahead(readahead_k: int | str | None = None) -> int:
+    """Resolve the pipelined read-ahead window: an int >= 1, or
+    ``None``/"auto" (env ``REPRO_AGG_READAHEAD``, else 1 — the legacy
+    strictly-in-index-order fetch schedule)."""
+    if readahead_k is None or readahead_k == "auto":
+        readahead_k = os.environ.get("REPRO_AGG_READAHEAD",
+                                     DEFAULT_READAHEAD)
+    try:
+        k = int(readahead_k)
+        if k != float(readahead_k):      # reject silent 1.5 -> 1 truncation
+            raise ValueError
+    except (TypeError, ValueError):
+        raise ValueError(f"readahead_k must be an integer >= 1 or 'auto', "
+                         f"got {readahead_k!r}") from None
+    if k < 1:
+        raise ValueError(f"readahead_k must be >= 1, got {k}")
+    return k
 
 
 # ---------------------------------------------------------------------------
@@ -128,6 +150,7 @@ class AggregationResult:
     peak_memory_mb: float = 0.0
     engine: str = "streaming"
     schedule: str = "barrier"
+    readahead_k: int = 1
     # absolute logical times on the session timeline (multi-round pipelining)
     round_start_s: float = 0.0
     round_end_s: float = 0.0
@@ -150,10 +173,15 @@ class AggregationResult:
         return self.lambda_cost + self.s3_cost(limits)
 
 
-def _alloc_mb(in_bytes: int, limits: LambdaLimits) -> float:
+def _alloc_mb(in_bytes: int, limits: LambdaLimits,
+              readahead_k: int = 1, fanin: int | None = None) -> float:
+    # the empirical 3x formula covers the 2-buffer fold plus the transient
+    # GET copy; a readahead_k prefetch window needs (k+1) input buffers, so
+    # the allocation (and its billing) grows once k outgrows the formula —
+    # one shared definition with the analytical model's per-fold billing
+    mult = cm.readahead_alloc_mult(readahead_k, fanin, limits)
     return cm.allocatable_memory_mb(
-        limits.mem_multiplier * in_bytes / MB + limits.runtime_overhead_mb,
-        limits)
+        mult * in_bytes / MB + limits.runtime_overhead_mb, limits)
 
 
 # ---------------------------------------------------------------------------
@@ -273,6 +301,39 @@ class Topology:
         fallback for registered topologies."""
         raise NotImplementedError(
             f"topology {self.name!r} declares no round-cost model")
+
+    def cost_collect_fanin(self, n: int, m: int = 1) -> int:
+        """Widest aggregator fan-in — the contribution count behind the
+        collect-then-average memory bound and the cap on a read-ahead
+        prefetch window (drives
+        :func:`repro.core.cost_model.collect_memory_bytes`)."""
+        raise NotImplementedError(
+            f"topology {self.name!r} declares no aggregator fan-in model")
+
+    def cost_memory_bytes(self, grad_bytes: int, n: int, m: int = 1,
+                          readahead_k: int | None = None) -> int:
+        """Per-aggregator buffered bytes: all fan-in inputs + the result
+        (collect-then-average), or — given ``readahead_k`` — the bounded
+        prefetch bound ``(min(k, fanin) + 1)``·input, which interpolates
+        from the 2-buffer streaming bound (k=1) up to full collect."""
+        fanin = self.cost_collect_fanin(n, m)
+        buffers = fanin if readahead_k is None \
+            else min(max(1, int(readahead_k)), fanin)
+        return (buffers + 1) * self.cost_input_bytes(grad_bytes, m)
+
+    def cost_pipelined_plan(self, grad_bytes: int, n: int, m: int,
+                            limits: LambdaLimits, upload, starts, mults,
+                            run_fold, shard_bytes=None) -> None:
+        """Drive :func:`repro.core.cost_model.pipelined_round_cost` for a
+        registered topology: compute per-input availability times from the
+        jittered client plan (``starts``/``mults``) and call ``run_fold
+        (avail_s, in_bytes, out_bytes)`` once per aggregator (its return
+        value is the fold's finish time, so tree levels can chain).
+        ``run_fold`` owns launch gating (read-ahead window), cold starts,
+        stalls, transfer/compute time and billing accumulation."""
+        raise NotImplementedError(
+            f"topology {self.name!r} declares no pipelined round-cost "
+            f"model")
 
 
 _REGISTRY: dict[str, Topology] = {}
@@ -397,16 +458,18 @@ def _round_base(runtime: LambdaRuntime,
 # ---------------------------------------------------------------------------
 
 def _build_body(backend: ExecutionBackend, store: ObjectStore, shared: dict,
-                inv: InvocationSpec):
+                inv: InvocationSpec, readahead_k: int = 1):
     """Materialize an :class:`InvocationSpec` into a runnable body using
-    the engine's invocation-body templates."""
+    the engine's invocation-body templates. The read-ahead window applies
+    to store-reading bodies only: a colocated (shared-memory) fold has no
+    transfers to prefetch, so it keeps the plain in-order wait."""
     weights = list(inv.weights) if inv.weights is not None else None
     if inv.colocated_in:
         return backend.colocated_body(shared, store, list(inv.in_keys),
                                       weights, inv.out_key,
                                       is_global=inv.global_out)
     inner = backend.avg_body(store, list(inv.in_keys), inv.out_key,
-                             weights=weights)
+                             weights=weights, readahead_k=readahead_k)
     if not inv.shared_copy:
         return inner
 
@@ -425,12 +488,19 @@ def run_round(topology: str | Topology,
               upload: UploadModel | None = None,
               client_ready_s: Sequence[float] | None = None,
               straggler_threshold_s: float | None = None,
+              readahead_k: int | None = None,
               **options) -> AggregationResult:
     """Execute one aggregation round of any registered topology.
 
     This is the machinery formerly triplicated across the monolithic round
     functions; every topology-specific decision comes from the
-    :class:`RoundProgram` the topology declares.
+    :class:`RoundProgram` the topology declares. ``readahead_k`` (env
+    ``REPRO_AGG_READAHEAD``) bounds the pipelined schedule's out-of-order
+    prefetch window — launch gating and fetch order generalize from "next
+    in-index contribution" to "frontier + window", while the fold itself
+    stays strictly client-index order (bit-identity by construction). The
+    barrier schedule has no frontier to run ahead of, so ``readahead_k``
+    is inert there.
     """
     topo = topology if isinstance(topology, Topology) \
         else get_topology(topology)
@@ -438,6 +508,11 @@ def run_round(topology: str | Topology,
     backend = get_backend(engine)
     sched = get_schedule(schedule)
     barrier = sched == "barrier"
+    # validate unconditionally (a bad knob must not pass silently just
+    # because the schedule is barrier); apply only where it means something
+    readahead = get_readahead(readahead_k)
+    if barrier:
+        readahead = 1
     n = len(client_grads)
     limits = runtime.limits
     p0, g0 = store.stats.puts, store.stats.gets
@@ -461,15 +536,23 @@ def run_round(topology: str | Topology,
     for phase in prog.phases:
         ph = runtime.phase(start_s=prev_end if barrier else base)
         for inv in phase:
-            body = _build_body(backend, store, shared, inv)
-            mem = _alloc_mb(inv.alloc_bytes, limits)
+            body = _build_body(backend, store, shared, inv, readahead)
+            # colocated hops have nothing to prefetch and keep the 3x
+            # formula; _alloc_mb clamps the window to the fan-in
+            inv_k = 1 if inv.colocated_in else readahead
+            mem = _alloc_mb(inv.alloc_bytes, limits, inv_k,
+                            fanin=len(inv.in_keys))
             if barrier:
                 ph.invoke_reliable(
                     body, fn_name=inv.fn_name, memory_mb=mem,
                     straggler_threshold_s=straggler_threshold_s)
             else:
-                launch = max(base, runtime.avail.time_of(inv.in_keys[0],
-                                                         base))
+                # launch on the first available input inside the window
+                # [frontier, frontier + k) — k=1 is the legacy "first
+                # in-index contribution" gating
+                avail = [runtime.avail.time_of(key, base)
+                         for key in inv.in_keys[:inv_k]]
+                launch = max(base, ReadAheadWindow.launch_s(avail, inv_k))
                 ph.invoke_reliable(
                     body, fn_name=inv.fn_name, memory_mb=mem,
                     straggler_threshold_s=straggler_threshold_s,
@@ -503,8 +586,9 @@ def run_round(topology: str | Topology,
         puts=store.stats.puts - p0, gets=store.stats.gets - g0,
         memory_mb=max(r.memory_mb for r in recs),
         peak_memory_mb=max(r.peak_memory_mb for r in recs),
-        engine=backend.name, schedule=sched, round_start_s=base,
-        round_end_s=round_end, client_done_s=client_done, limits=limits)
+        engine=backend.name, schedule=sched, readahead_k=readahead,
+        round_start_s=base, round_end_s=round_end,
+        client_done_s=client_done, limits=limits)
 
 
 # ---------------------------------------------------------------------------
@@ -589,6 +673,9 @@ class GradsShardingTopology(Topology):
     def cost_input_bytes(self, grad_bytes, m=1):
         return math.ceil(grad_bytes / m)
 
+    def cost_collect_fanin(self, n, m=1):
+        return n                      # single-phase: every client's shard
+
 
 def _full_grad_uploads(client_grads, rnd):
     """Whole-gradient client PUTs shared by the tree topologies."""
@@ -638,6 +725,9 @@ class LambdaFLTopology(Topology):
 
     def cost_n_phases(self):
         return 2
+
+    def cost_collect_fanin(self, n, m=1):
+        return cm.lambda_fl_branching(n)   # leaf fan-in >= root fan-in
 
 
 @register_topology("lifl")
@@ -697,6 +787,10 @@ class LIFLTopology(Topology):
 
     def cost_n_phases(self):
         return 3
+
+    def cost_collect_fanin(self, n, m=1):
+        l1, _ = cm.lifl_levels(n)
+        return math.ceil(n / l1)
 
 
 # The hybrid plugin topology registers itself through the public API above;

@@ -8,7 +8,6 @@ variant of QSGD; stochastic rounding would add an unbiasing noise input).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -34,18 +34,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import (
-    MULTI_POD_MESH,
-    SINGLE_POD_MESH,
     ShapeConfig,
     ShardingPlan,
     TPU_V5E,
-    shape_applicable,
 )
 from repro.configs import ASSIGNED, get_arch
 from repro.launch import partitioning as parts
 from repro.launch.mesh import make_mesh, make_production_mesh
 from repro.launch.serve import make_serve_step
-from repro.launch.train import jit_train_step, make_train_step
+from repro.launch.train import jit_train_step
 from repro.models import registry as models
 from repro.optim import adamw
 

@@ -29,8 +29,7 @@ from __future__ import annotations
 
 import argparse
 import time
-from functools import partial
-from typing import Any, Callable
+from typing import Any
 
 import numpy as np
 
@@ -40,10 +39,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config import ModelConfig, ShapeConfig, ShardingPlan
 from repro.core import device_agg
-from repro.core.sharding import FlatSpec, flatten, unflatten
+from repro.core.sharding import flatten, unflatten
 from repro.launch import partitioning as parts
 from repro.models import registry as models
-from repro.optim import Optimizer, adamw, apply_updates, sgd
+from repro.optim import Optimizer, adamw, apply_updates
 
 Pytree = Any
 

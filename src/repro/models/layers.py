@@ -9,7 +9,6 @@ sequence-sharded), and single-token decode against a (ring-buffer) cache.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any
 
 import jax

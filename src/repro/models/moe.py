@@ -65,7 +65,6 @@ def moe_block(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
 
 
 def _moe_block_local(p: dict, x: jax.Array, cfg: ModelConfig, mesh):
-    from functools import partial as _partial
 
     from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P

@@ -1,5 +1,5 @@
 from repro.serverless.event_sim import AvailabilityMap, Event, EventSim, \
-    Timeline
+    ReadAheadWindow, Timeline
 from repro.serverless.runtime import (
     FaultPlan,
     InjectedFault,
@@ -14,5 +14,6 @@ from repro.serverless.runtime import (
 
 __all__ = ["AvailabilityMap", "Event", "EventSim", "FaultPlan",
            "InjectedFault", "InvocationRecord", "LambdaContext", "LambdaOOM",
-           "LambdaRuntime", "LambdaTimeout", "PhaseHandle", "Timeline",
+           "LambdaRuntime", "LambdaTimeout", "PhaseHandle",
+           "ReadAheadWindow", "Timeline",
            "fn_family"]

@@ -16,6 +16,11 @@ Three small, composable pieces:
     an already-published key keeps the minimum (a speculative duplicate
     that finishes first defines availability, exactly like its conditional
     PUT defines the stored value).
+  * :class:`ReadAheadWindow` — the bounded out-of-order prefetch schedule
+    of the pipelined round schedule's ``readahead_k`` knob: fetch up to
+    ``k`` contributions ahead of the fold frontier (deterministic
+    ``(time, index)`` tie-breaking), fold strictly in index order. Shared
+    by the simulated aggregator bodies and the analytical cost model.
 
 :class:`~repro.serverless.runtime.LambdaRuntime` owns one ``EventSim`` and
 one ``AvailabilityMap``; scheduling policies (barrier vs pipelined, see
@@ -154,6 +159,81 @@ class Timeline:
             return 0.0
         self.t = float(time)
         return stall
+
+
+class ReadAheadWindow:
+    """Bounded out-of-order prefetch scheduler for a streaming fold.
+
+    An aggregator folds contributions **strictly in index order** (the
+    bit-reproducibility contract), but may GET up to ``k`` contributions
+    at-or-ahead of the fold frontier into a bounded buffer, so a late
+    low-index upload no longer blocks every later read (the head-of-line
+    stall of the plain pipelined schedule). ``k = 1`` is exactly the
+    legacy behavior: the window holds only the frontier, so fetches happen
+    in index order and the buffer never exceeds the 2-buffer streaming
+    bound; general ``k`` bounds the buffer at ``k`` inputs (peak memory
+    ``(k+1)``·input alongside the running accumulator).
+
+    The schedule is deterministic: among window keys already available the
+    **lowest index** is fetched first (the frontier unblocks the fold
+    soonest); when none is available, the earliest prefetch-completion
+    event — ordered by ``(availability time, index)``, the same
+    tie-breaking discipline as the event heap — defines the next fetch.
+    Both the discrete-event runtime and the analytical cost model drive
+    this one class, which is what keeps them in lock-step to float
+    epsilon.
+    """
+
+    __slots__ = ("avail", "k", "n", "frontier", "_buffered")
+
+    def __init__(self, avail_s, k: int = 1):
+        self.k = int(k)
+        if self.k < 1:
+            raise ValueError(f"readahead_k must be >= 1, got {k!r}")
+        self.avail = [float(a) for a in avail_s]
+        self.n = len(self.avail)
+        self.frontier = 0            # next index to fold
+        self._buffered: set[int] = set()   # fetched, not yet folded
+
+    @classmethod
+    def launch_s(cls, avail_s, k: int = 1) -> float:
+        """When a windowed aggregator launches: the earliest availability
+        among the first ``min(k, n)`` inputs (``k = 1`` degenerates to the
+        legacy first-in-index-order gating)."""
+        window = list(avail_s[:max(1, min(int(k), len(avail_s)))])
+        return min(window) if window else 0.0
+
+    @property
+    def done(self) -> bool:
+        return self.frontier >= self.n
+
+    @property
+    def foldable(self) -> bool:
+        """True when the frontier contribution is buffered (fold it now)."""
+        return self.frontier in self._buffered
+
+    def window(self) -> range:
+        return range(self.frontier, min(self.frontier + self.k, self.n))
+
+    def next_fetch(self, now: float) -> int | None:
+        """Index of the next contribution to GET at time ``now`` (stall
+        until its availability if it hasn't landed), or ``None`` when the
+        whole window is already buffered."""
+        cand = [j for j in self.window() if j not in self._buffered]
+        if not cand:
+            return None
+        for j in cand:                       # lowest available index wins
+            if self.avail[j] <= now:
+                return j
+        return min(cand, key=lambda j: (self.avail[j], j))
+
+    def fetched(self, j: int) -> None:
+        self._buffered.add(j)
+
+    def folded(self) -> None:
+        """Consume the frontier contribution and advance the window."""
+        self._buffered.discard(self.frontier)
+        self.frontier += 1
 
 
 class AvailabilityMap:

@@ -177,6 +177,14 @@ class LambdaContext:
         self._held = max(0, self._held - int(nbytes))
 
     # -- availability (pipelined schedule) -----------------------------------
+    def avail_time(self, key: str) -> float:
+        """Published availability of ``key`` (0.0 under the barrier
+        schedule, where phase structure already guarantees every input
+        exists — so a read-ahead window degenerates to index order)."""
+        if self._avail is None:
+            return 0.0
+        return self._avail.time_of(key)
+
     def wait_key(self, key: str) -> None:
         """Stall until ``key`` is available (no-op under the barrier
         schedule, whose phase structure already guarantees ordering)."""

@@ -13,7 +13,7 @@ from repro.core.agg_engine import (
     _evaluate_nodes,
     get_backend,
 )
-from repro.core.sharding import ShardView, make_plan, shard, shard_views
+from repro.core.sharding import make_plan, shard, shard_views
 from repro.serverless import FaultPlan, LambdaRuntime
 from repro.store import ObjectStore
 

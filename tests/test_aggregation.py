@@ -5,7 +5,6 @@ import pytest
 from repro.core import aggregation as agg
 from repro.core import cost_model as cm
 from repro.core.fedavg import streaming_mean
-from repro.core.sharding import make_plan
 from repro.serverless import FaultPlan, LambdaRuntime
 from repro.store import ObjectStore
 
@@ -124,12 +123,15 @@ def test_aggregator_peak_is_3x_input():
 # ---------------------------------------------------------------------------
 
 def test_phase_structure():
+    # pinned to the barrier schedule: phases_s are per-phase *durations*
+    # there (they sum to the wall); pipelined phases_s are completion
+    # offsets, so this identity is barrier-specific by design
     grads = _grads(20, 1_024)
     walls = {}
     for topo, phases in (("gradssharding", 1), ("lambda_fl", 2), ("lifl", 3)):
         store, rt = ObjectStore(), LambdaRuntime()
         r = agg.aggregate_round(topo, grads, rnd=0, store=store, runtime=rt,
-                                n_shards=4)
+                                n_shards=4, schedule="barrier")
         assert len(r.phases_s) == phases
         assert r.wall_clock_s == pytest.approx(sum(r.phases_s))
         walls[topo] = r.wall_clock_s

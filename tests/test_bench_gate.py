@@ -1,0 +1,56 @@
+"""The CI bench-regression gate (``benchmarks.check_invariants``) and its
+committed expectations.
+
+Two properties matter: the comparator actually catches drift (missing,
+changed, or unexpected invariants), and the committed
+``expected_smoke.json`` still matches what the smoke grid produces today —
+so tier-1 catches an invariant regression locally before CI does.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, REPO_ROOT)
+
+from benchmarks import common  # noqa: E402
+from benchmarks.check_invariants import DEFAULT_EXPECTED, compare  # noqa: E402
+
+
+def test_compare_clean():
+    inv = {"a/puts": 3, "a/wall_s": 1.25, "a/hash": "ff", "a/ok": True}
+    assert compare(inv, dict(inv)) == []
+    # float round-tripping slack, but nothing more
+    assert compare({"w": 1.0}, {"w": 1.0 + 1e-12}) == []
+    assert compare({"w": 1.0}, {"w": 1.0 + 1e-6}) != []
+
+
+def test_compare_flags_every_drift_class():
+    expected = {"puts": 3, "hash": "aa", "ok": True}
+    problems = compare(expected, {"puts": 4, "hash": "aa", "ok": True,
+                                  "extra": 1})
+    assert any(p.startswith("DRIFT") and "puts" in p for p in problems)
+    assert any(p.startswith("UNKNOWN") and "extra" in p for p in problems)
+    problems = compare(expected, {"puts": 3, "hash": "aa"})
+    assert any(p.startswith("MISSING") and "ok" in p for p in problems)
+    # booleans are not 1/0
+    assert compare({"ok": True}, {"ok": 1}) != []
+
+
+@pytest.mark.slow
+def test_committed_expectations_match_regenerated_invariants():
+    from benchmarks import smoke_invariants
+    saved = dict(common.INVARIANTS)
+    common.INVARIANTS.clear()
+    try:
+        smoke_invariants.main()
+        regenerated = dict(common.INVARIANTS)
+    finally:
+        common.INVARIANTS.clear()
+        common.INVARIANTS.update(saved)
+    with open(DEFAULT_EXPECTED) as fh:
+        expected = json.load(fh)
+    problems = compare(expected, regenerated)
+    assert problems == [], "\n".join(problems)

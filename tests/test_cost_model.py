@@ -1,7 +1,6 @@
 """Analytical cost model vs the paper's published numbers (Tables II–VII)."""
 import math
 
-import numpy as np
 import pytest
 try:
     from hypothesis import given, settings, strategies as st
@@ -9,7 +8,6 @@ except ImportError:                       # bare env: deterministic fallback
     from _hypothesis_fallback import given, settings
     from _hypothesis_fallback import strategies as st
 
-from repro.config import LambdaLimits
 from repro.core import cost_model as cm
 
 MB = 1024 * 1024

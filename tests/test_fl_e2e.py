@@ -7,14 +7,13 @@ improves — and all three architectures produce the same trajectory.
 import dataclasses
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import aggregation as agg
 from repro.core.fedavg import model_delta, apply_delta, local_sgd_update
-from repro.core.sharding import FlatSpec, flatten, unflatten
+from repro.core.sharding import flatten, unflatten
 from repro.data import SyntheticVision, dirichlet_partition
 from repro.models import cnn
 from repro.serverless import LambdaRuntime

@@ -8,7 +8,6 @@ except ImportError:                       # bare env: deterministic fallback
     from _hypothesis_fallback import given, settings
     from _hypothesis_fallback import strategies as st
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref

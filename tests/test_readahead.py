@@ -1,0 +1,409 @@
+"""Bounded out-of-order read-ahead (``readahead_k``) for the pipelined
+schedule.
+
+The contract: aggregators may GET up to ``k`` contributions ahead of the
+fold frontier (hiding head-of-line stalls behind useful transfers), but
+the fold itself stays strictly client-index order — so ``avg_flat`` is
+bit-identical to the barrier reference for every engine, topology and
+arrival-time permutation; ``readahead_k=1`` reproduces the legacy
+pipelined walls/phases/ops/billing exactly; the analytical
+``pipelined_round_cost(readahead_k=k)`` matches the event sim to float
+epsilon; and the recorded peak memory stays within the bounded-buffer
+``(k+1)``·input + overhead envelope.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # bare env: deterministic fallback
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
+
+from repro.api import FederatedSession, SessionConfig
+from repro.core import cost_model as cm
+from repro.core import topology as topo
+from repro.core.cost_model import UploadModel
+from repro.serverless import LambdaRuntime, ReadAheadWindow
+from repro.store import ObjectStore
+
+MB = 1024 * 1024
+ENGINES = ("streaming", "batched", "incremental")
+TOPOLOGIES = ("gradssharding", "lambda_fl", "lifl")
+
+JITTER = UploadModel(mbps=16.0, jitter_s=3.0, rate_jitter=0.5, seed=11)
+
+
+def _grads(n=20, size=5_003, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal(size).astype(np.float32) for _ in range(n)]
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedStarts(UploadModel):
+    """Upload model with explicit per-client start times (arrival-order
+    control for the permutation tests)."""
+
+    starts: tuple = ()
+
+    def plan(self, n, rnd=0):
+        return np.asarray(self.starts, float), np.ones(n)
+
+
+def _round(topology, grads, **kw):
+    return FederatedSession(topology=topology, **kw).round(grads)
+
+
+# ---------------------------------------------------------------------------
+# Knob resolution
+# ---------------------------------------------------------------------------
+
+def test_readahead_knob_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_AGG_READAHEAD", raising=False)
+    assert topo.get_readahead(None) == 1
+    assert topo.get_readahead("auto") == 1
+    assert topo.get_readahead(4) == 4
+    monkeypatch.setenv("REPRO_AGG_READAHEAD", "6")
+    assert topo.get_readahead(None) == 6
+    assert topo.get_readahead(2) == 2                   # explicit wins
+    for bad in (0, -3, "many", 1.5):
+        with pytest.raises(ValueError, match="readahead_k"):
+            topo.get_readahead(bad)
+
+
+def test_readahead_env_reaches_the_round(monkeypatch):
+    monkeypatch.setenv("REPRO_AGG_READAHEAD", "3")
+    r = _round("gradssharding", _grads(6, 1_024), n_shards=2,
+               schedule="pipelined", upload=JITTER)
+    assert r.readahead_k == 3
+    # the barrier schedule has no frontier to run ahead of
+    b = _round("gradssharding", _grads(6, 1_024), n_shards=2,
+               schedule="barrier")
+    assert b.readahead_k == 1
+
+
+def test_session_config_carries_readahead():
+    cfg = SessionConfig(schedule="pipelined", readahead_k=4, n_shards=2)
+    r = FederatedSession(cfg).round(_grads(6, 1_024))
+    assert r.readahead_k == 4
+
+
+def test_invalid_readahead_rejected_under_barrier_too():
+    # validation must not depend on the schedule: a bad knob in a barrier
+    # session would otherwise explode only when someone flips to pipelined
+    cfg = SessionConfig(schedule="barrier", readahead_k=0, n_shards=2)
+    with pytest.raises(ValueError, match="readahead_k"):
+        FederatedSession(cfg).round(_grads(4, 512))
+
+
+def test_feasibility_accounts_for_readahead_buffers():
+    limits = LambdaRuntime().limits
+    # a gradient whose 3x formula just fits the 10,240 MB ceiling ...
+    gb = int(cm.max_feasible_grad_mb(limits) * MB) - MB
+    assert cm.feasible("lambda_fl", gb, limits=limits)
+    # ... cannot also hold an 8-deep prefetch window
+    assert not cm.feasible("lambda_fl", gb, limits=limits, readahead_k=8)
+    rc = cm.pipelined_round_cost("lambda_fl", gb, 20, upload=JITTER,
+                                 readahead_k=8)
+    assert not rc.feasible
+    assert cm.pipelined_round_cost("lambda_fl", gb, 20,
+                                   upload=JITTER).feasible
+
+
+# ---------------------------------------------------------------------------
+# readahead_k=1 degenerates to the legacy pipelined schedule exactly
+# (grid-tested: walls, phases, op counts, billing, avg bits)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("topology,kw", [
+    ("gradssharding", {"n_shards": 8}),
+    ("lambda_fl", {}),
+    ("lifl", {}),
+    ("lifl", {"colocated": True}),
+    ("sharded_tree", {"n_shards": 4}),
+])
+def test_k1_reproduces_legacy_pipelined_exactly(topology, kw, engine):
+    grads = _grads()
+    legacy = _round(topology, grads, engine=engine, schedule="pipelined",
+                    upload=JITTER, **kw)                # default: k = 1
+    k1 = _round(topology, grads, engine=engine, schedule="pipelined",
+                upload=JITTER, readahead_k=1, **kw)
+    assert np.array_equal(k1.avg_flat, legacy.avg_flat)
+    assert k1.wall_clock_s == legacy.wall_clock_s
+    assert k1.phases_s == legacy.phases_s
+    assert (k1.puts, k1.gets) == (legacy.puts, legacy.gets)
+    assert k1.peak_memory_mb == legacy.peak_memory_mb
+    assert [r.billed_gb_s for r in k1.records] == \
+        [r.billed_gb_s for r in legacy.records]
+    assert [r.stall_s for r in k1.records] == \
+        [r.stall_s for r in legacy.records]
+
+
+def test_k1_model_matches_legacy_model_exactly():
+    gb = 64 * MB
+    for topology, m in [("gradssharding", 8), ("lambda_fl", 1),
+                        ("lifl", 1), ("sharded_tree", 4)]:
+        a = cm.pipelined_round_cost(topology, gb, 20, m, upload=JITTER)
+        b = cm.pipelined_round_cost(topology, gb, 20, m, upload=JITTER,
+                                    readahead_k=1)
+        assert a.wall_clock_s == b.wall_clock_s
+        assert a.lambda_gb_s == b.lambda_gb_s
+        assert a.memory_mb == b.memory_mb
+
+
+# ---------------------------------------------------------------------------
+# Analytical model == event sim, to float epsilon, for k in {1, 2, 4, 8}
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+@pytest.mark.parametrize("topology,m", [
+    ("gradssharding", 8), ("lambda_fl", 1), ("lifl", 1), ("sharded_tree", 8),
+])
+def test_pipelined_cost_matches_sim_across_k(topology, m, k):
+    n, elems = 20, 65_536
+    kw = {"n_shards": m} if m > 1 else {}
+    sim = _round(topology, _grads(n, elems), schedule="pipelined",
+                 upload=JITTER, readahead_k=k, **kw)
+    model = cm.pipelined_round_cost(topology, elems * 4, n, m,
+                                    upload=JITTER, readahead_k=k)
+    assert model.wall_clock_s == pytest.approx(sim.wall_clock_s, rel=1e-9)
+    assert (model.ops.puts, model.ops.gets) == (sim.puts, sim.gets)
+    # billing parity: the window (clamped to each fold's fan-in) prices
+    # identically in model and sim — residual is the 1 ms billing
+    # granularity the model deliberately ignores
+    billed = sum(rec.billed_gb_s for rec in sim.records)
+    assert model.lambda_gb_s == pytest.approx(billed, rel=1e-3)
+    assert {rec.memory_mb for rec in sim.records} >= {model.memory_mb}
+
+
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_colocated_pipelined_cost_matches_sim_across_k(k):
+    n, elems = 20, 65_536
+    sim = _round("lifl", _grads(n, elems), schedule="pipelined",
+                 upload=JITTER, colocated=True, readahead_k=k)
+    model = cm.pipelined_round_cost("lifl", elems * 4, n, upload=JITTER,
+                                    colocated=True, readahead_k=k)
+    assert model.wall_clock_s == pytest.approx(sim.wall_clock_s, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# The point of the window: a late low-index client no longer blocks reads
+# ---------------------------------------------------------------------------
+
+def _reversed_arrivals(n, gap_s=2.0):
+    """Client 0 uploads last: the worst case for the in-order fold."""
+    return FixedStarts(mbps=16.0, starts=tuple((n - 1 - i) * gap_s
+                                               for i in range(n)))
+
+
+def test_readahead_hides_head_of_line_stall():
+    n = 12
+    up = _reversed_arrivals(n)
+    grads = _grads(n, 65_536)
+    walls = {}
+    for k in (1, 2, 4, 8):
+        r = _round("gradssharding", grads, n_shards=4, schedule="pipelined",
+                   upload=up, readahead_k=k)
+        walls[k] = r.wall_clock_s
+        # arithmetic never moves
+        assert np.array_equal(
+            r.avg_flat,
+            _round("gradssharding", grads, n_shards=4).avg_flat)
+    assert walls[2] < walls[1]
+    assert walls[4] < walls[2]
+    assert walls[8] <= walls[4]
+    # the model predicts the same ordering
+    m1 = cm.pipelined_round_cost("gradssharding", 65_536 * 4, n, 4,
+                                 upload=up, readahead_k=1)
+    m8 = cm.pipelined_round_cost("gradssharding", 65_536 * 4, n, 4,
+                                 upload=up, readahead_k=8)
+    assert m8.wall_clock_s < m1.wall_clock_s
+
+
+def test_readahead_keeps_op_counts_and_moves_only_time():
+    n = 12
+    up = _reversed_arrivals(n)
+    grads = _grads(n, 32_768)
+    base = _round("gradssharding", grads, n_shards=4, schedule="pipelined",
+                  upload=up, readahead_k=1)
+    ahead = _round("gradssharding", grads, n_shards=4, schedule="pipelined",
+                   upload=up, readahead_k=8)
+    assert (ahead.puts, ahead.gets) == (base.puts, base.gets)
+    assert np.array_equal(ahead.avg_flat, base.avg_flat)
+    # the window converts the late frontier-gated launch into an early
+    # launch that prefetches during the wait: aggregators finish sooner
+    assert ahead.wall_clock_s < base.wall_clock_s
+    assert max(r.end_s for r in ahead.records) < \
+        max(r.end_s for r in base.records)
+
+
+# ---------------------------------------------------------------------------
+# Memory: bounded prefetch buffer, billed allocation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_peak_memory_within_bounded_buffer(k):
+    n, elems, m = 12, 65_536, 4
+    shard_bytes = elems // m * 4
+    limits = LambdaRuntime().limits
+    r = _round("gradssharding", _grads(n, elems), n_shards=m,
+               schedule="pipelined", upload=_reversed_arrivals(n),
+               readahead_k=k)
+    bound_mb = limits.runtime_overhead_mb + (k + 1) * shard_bytes / MB
+    assert r.peak_memory_mb <= bound_mb + 1e-9
+    # the billed allocation follows the same (k+1)-buffer formula
+    want = cm.allocatable_memory_mb(
+        cm.lambda_memory_mb("gradssharding", elems * 4, m, limits,
+                            readahead_k=k), limits)
+    assert all(rec.memory_mb == want for rec in r.records)
+
+
+def test_streaming_memory_bytes_readahead():
+    gb = 100 * MB
+    assert cm.streaming_memory_bytes("gradssharding", gb, 4) == \
+        2 * cm.input_bytes("gradssharding", gb, 4)
+    assert cm.streaming_memory_bytes("gradssharding", gb, 4,
+                                     readahead_k=5) == \
+        6 * cm.input_bytes("gradssharding", gb, 4)
+
+
+# ---------------------------------------------------------------------------
+# collect_memory_bytes: topology hook + readahead interpolation (satellite)
+# ---------------------------------------------------------------------------
+
+def test_collect_memory_routes_through_topology_hook():
+    gb, n, m = 512 * MB, 20, 8
+    # sharded_tree no longer falls through to the LIFL branch: its widest
+    # aggregator is the per-shard ceil(sqrt(N))-way leaf fold
+    k = cm.lambda_fl_branching(n)
+    shard_b = cm.input_bytes("sharded_tree", gb, m)
+    assert cm.collect_fanin("sharded_tree", n, m) == k
+    assert cm.collect_memory_bytes("sharded_tree", gb, n, m) == \
+        (k + 1) * shard_b
+    lifl_wrong = (cm.collect_fanin("lifl", n) + 1) * gb
+    assert cm.collect_memory_bytes("sharded_tree", gb, n, m) != lifl_wrong
+    # builtins unchanged
+    assert cm.collect_memory_bytes("gradssharding", gb, n, m) == \
+        (n + 1) * cm.input_bytes("gradssharding", gb, m)
+
+
+def test_collect_memory_interpolates_with_readahead():
+    gb, n, m = 512 * MB, 20, 8
+    shard_b = cm.input_bytes("gradssharding", gb, m)
+    # k=1 -> the 2-buffer streaming bound; k >= fan-in -> full collect
+    assert cm.collect_memory_bytes("gradssharding", gb, n, m,
+                                   readahead_k=1) == 2 * shard_b
+    assert cm.collect_memory_bytes("gradssharding", gb, n, m,
+                                   readahead_k=4) == 5 * shard_b
+    assert cm.collect_memory_bytes("gradssharding", gb, n, m,
+                                   readahead_k=10 ** 6) == \
+        cm.collect_memory_bytes("gradssharding", gb, n, m)
+    assert cm.collect_memory_bytes("sharded_tree", gb, n, m,
+                                   readahead_k=2) == 3 * shard_b
+
+
+# ---------------------------------------------------------------------------
+# ReadAheadWindow determinism
+# ---------------------------------------------------------------------------
+
+def test_window_prefers_lowest_available_then_earliest_event():
+    win = ReadAheadWindow([5.0, 1.0, 1.0, 0.5, 9.0], k=4)
+    # nothing fetched yet, now=0: nothing available -> earliest (time, idx)
+    assert win.next_fetch(0.0) == 3
+    win.fetched(3)
+    # at t=2, indices 1 and 2 are available: lowest index wins
+    assert win.next_fetch(2.0) == 1
+    win.fetched(1)
+    assert win.next_fetch(2.0) == 2
+    win.fetched(2)
+    # frontier (0) still missing: it is the only window candidate left
+    assert win.next_fetch(2.0) == 0
+    win.fetched(0)
+    assert win.foldable
+    for _ in range(4):
+        win.folded()
+    assert win.frontier == 4 and not win.done
+    assert win.next_fetch(2.0) == 4
+    with pytest.raises(ValueError, match="readahead_k"):
+        ReadAheadWindow([0.0], k=0)
+
+
+def test_window_launch_gating():
+    avail = [7.0, 3.0, 5.0, 1.0]
+    assert ReadAheadWindow.launch_s(avail, 1) == 7.0     # legacy gating
+    assert ReadAheadWindow.launch_s(avail, 2) == 3.0
+    assert ReadAheadWindow.launch_s(avail, 8) == 1.0     # clamped to n
+
+
+# ---------------------------------------------------------------------------
+# Property: arrival permutations x k never move arithmetic (acceptance)
+# ---------------------------------------------------------------------------
+
+N_PROP = 9
+_REFS = {t: _round(t, _grads(N_PROP, 2_048), n_shards=4)
+         for t in TOPOLOGIES}
+
+
+@settings(max_examples=12, deadline=None)
+@given(starts=st.lists(st.floats(0.0, 30.0), min_size=N_PROP,
+                       max_size=N_PROP),
+       k=st.integers(1, 8),
+       topology=st.sampled_from(TOPOLOGIES))
+def test_property_arrivals_and_k_preserve_bits(starts, k, topology):
+    up = FixedStarts(mbps=16.0, starts=tuple(starts))
+    r = _round(topology, _grads(N_PROP, 2_048), n_shards=4,
+               schedule="pipelined", upload=up, readahead_k=k)
+    assert np.array_equal(r.avg_flat, _REFS[topology].avg_flat)
+    assert (r.puts, r.gets) == (_REFS[topology].puts, _REFS[topology].gets)
+
+
+# ---------------------------------------------------------------------------
+# sharded_tree pipelined cost entry stands alone (satellite)
+# ---------------------------------------------------------------------------
+
+def test_sharded_tree_pipelined_cost_entry():
+    gb, n, m = 256 * MB, 20, 8
+    rc = cm.pipelined_round_cost("sharded_tree", gb, n, m, upload=JITTER)
+    bc = cm.barrier_round_cost("sharded_tree", gb, n, m, upload=JITTER)
+    assert rc.wall_clock_s < bc.wall_clock_s      # the overlap win
+    assert rc.ops == cm.s3_ops("sharded_tree", n, m)
+    assert rc.n_invocations == cm.n_aggregators("sharded_tree", n, m)
+
+
+def test_registry_topology_without_pipelined_entry_raises():
+    @topo.register_topology("_no_pipelined_cost")
+    class Bare(topo.Topology):
+        def cost_s3_ops(self, n, m=1):
+            return cm.S3Ops(0, 0, 0)
+
+    try:
+        with pytest.raises(NotImplementedError, match="pipelined"):
+            cm.pipelined_round_cost("_no_pipelined_cost", MB, 4)
+    finally:
+        del topo._REGISTRY["_no_pipelined_cost"]
+
+
+# ---------------------------------------------------------------------------
+# Faults/stragglers still compose
+# ---------------------------------------------------------------------------
+
+def test_readahead_composes_with_faults_and_stragglers():
+    from repro.serverless import FaultPlan
+    faults = FaultPlan(fail={("r0-shard1", 0)},
+                       slow={("r0-shard0", 0): 25.0})
+    grads = _grads(8, 2_048)
+    store, rt = ObjectStore(), LambdaRuntime(faults=faults)
+    from repro.core import aggregation as agg
+    r = agg.aggregate_round("gradssharding", grads, rnd=0, store=store,
+                            runtime=rt, n_shards=4, schedule="pipelined",
+                            upload=JITTER, straggler_threshold_s=1.0,
+                            readahead_k=4)
+    acc = grads[0].astype(np.float32).copy()
+    for g in grads[1:]:
+        acc += g
+    assert np.array_equal(r.avg_flat, acc / len(grads))
+    assert any(rec.failed for rec in rt.records)
+    assert any(rec.speculative for rec in rt.records)

@@ -2,7 +2,6 @@
 import numpy as np
 import pytest
 
-from repro.config import LambdaLimits
 from repro.serverless import (
     FaultPlan,
     LambdaOOM,

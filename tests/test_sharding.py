@@ -11,7 +11,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sharding import (
-    FlatSpec,
     flatten,
     make_plan,
     plan_balanced,

@@ -51,12 +51,15 @@ def _new(topology, grads, **kw):
 # Acceptance grid: old vs new entry points, bit-identical everything
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("readahead_k", (1, 4))
 @pytest.mark.parametrize("schedule", SCHEDULES)
 @pytest.mark.parametrize("engine", ENGINES)
 @pytest.mark.parametrize("topology", TOPOLOGIES)
-def test_grid_old_vs_new_bit_identical(topology, engine, schedule):
+def test_grid_old_vs_new_bit_identical(topology, engine, schedule,
+                                       readahead_k):
     grads = _grads()
-    kw = dict(engine=engine, schedule=schedule, upload=JITTER, n_shards=8)
+    kw = dict(engine=engine, schedule=schedule, upload=JITTER, n_shards=8,
+              readahead_k=readahead_k)
     old = _old(topology, grads, **kw)
     new = _new(topology, grads, **kw)
     assert np.array_equal(old.avg_flat, new.avg_flat)
