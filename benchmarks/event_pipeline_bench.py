@@ -66,6 +66,44 @@ def modeled_walls(grad_mb: float, sweep_n=SWEEP_N, sweep_m=SWEEP_M):
 
 
 READAHEAD_KS = (1, 2, 4, 8)
+CODECS = ("identity", "fp16", "qsgd8", "topk")
+
+
+def codec_sweep(grad_mb: float, sweep_n=SWEEP_N, sweep_m=SWEEP_M,
+                codecs=CODECS):
+    """The wire-codec win at paper scale: per (N, M, codec), bytes on the
+    wire per round (all N clients' encoded uploads), modeled pipelined
+    wall-clock and billed GB-s vs the identity codec. Transfer dominates
+    the round (paper: 91–99 % I/O share), so a 4× smaller wire format
+    shows up almost 1:1 in wall and GB-s wherever uploads/reads — not
+    cold starts — bound the round."""
+    rows = []
+    gb = int(grad_mb * MB)
+    for n in sweep_n:
+        for m in sweep_m:
+            base = None
+            for codec in codecs:
+                c = cm.pipelined_round_cost("gradssharding", gb, n, m,
+                                            upload=UPLOAD, codec=codec)
+                wire = n * cm.client_upload_bytes("gradssharding", gb, m,
+                                                  codec=codec)
+                if base is None:
+                    base = c
+                emit_timing(
+                    f"event_pipeline/codec/N{n}/M{m}/{codec}",
+                    c.wall_clock_s, wire_mb=wire / MB,
+                    win=base.wall_clock_s / c.wall_clock_s,
+                    gb_s=c.lambda_gb_s,
+                    gb_s_win=base.lambda_gb_s / c.lambda_gb_s)
+                rows.append([n, m, codec, f"{wire / MB:.1f}",
+                             f"{c.wall_clock_s:.1f}",
+                             f"{base.wall_clock_s / c.wall_clock_s:.2f}x",
+                             f"{c.lambda_gb_s:.0f}",
+                             f"{base.lambda_gb_s / c.lambda_gb_s:.2f}x"])
+    table(f"Wire-codec sweep, {grad_mb:.0f} MB gradient (modeled "
+          f"GradsSharding pipelined rounds, jittered uploads)",
+          ["N", "M", "codec", "wire MB/round", "wall (s)", "wall win",
+           "GB-s", "GB-s win"], rows)
 
 
 def readahead_sweep(grad_mb: float, sweep_n=SWEEP_N, sweep_m=SWEEP_M,
@@ -171,13 +209,16 @@ def main(argv=None) -> None:
         args.sim_elems, args.sim_rounds = 16_384, 1
     modeled_walls(args.grad_mb, sweep_n, sweep_m)
     readahead_sweep(args.grad_mb, sweep_n, sweep_m)
+    codec_sweep(args.grad_mb, sweep_n, sweep_m)
     sim_throughput(args.sim_elems, args.sim_rounds, sweep_n, sweep_m)
     readback_accounting_micro()
     print("\nPipelined rounds launch each shard aggregator on its first "
           "window contribution and fold in index order (bit-identical "
           "prefix folds); the win is the upload span the folds now hide "
           "under, and readahead_k>1 additionally hides reads behind "
-          "head-of-line straggler stalls.")
+          "head-of-line straggler stalls. The codec sweep compresses the "
+          "client->aggregator hop (uploads + level-1 GETs), which is "
+          "where the transfer-dominated round spends its time and GB-s.")
 
 
 if __name__ == "__main__":

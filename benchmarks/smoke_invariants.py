@@ -1,12 +1,17 @@
 """Deterministic smoke invariants behind the CI bench-regression gate.
 
 Runs a tiny, fixed-seed round across the full guaranteed-bit-identical
-grid — topology × engine × schedule (+ a ``readahead_k`` sweep) — and
-records only *modeled* quantities (S3 op counts, billed GB-s, wall-clock,
-peak memory) plus a SHA-256 of the averaged gradient's bytes. Everything
-recorded is independent of host speed, so
-``benchmarks/check_invariants.py`` can fail the build on any drift from
-the committed expectations (``benchmarks/expected_smoke.json``).
+grid — topology × engine × schedule (+ ``readahead_k`` sweeps at two
+(N, M) points) — and records only *modeled* quantities (S3 op counts,
+billed GB-s, wall-clock, peak memory) plus a SHA-256 of the averaged
+gradient's bytes. A **codec axis** gates the wire-format layer: the
+``identity`` codec must keep every hash bit-identical to the raw grid,
+while the lossy codecs (``fp16``/``qsgd8``/``topk``) gate on op counts,
+wire upload bytes, billed GB-s, walls, ``codec_error`` and their own
+cross-engine hash determinism. Everything recorded is independent of
+host speed, so ``benchmarks/check_invariants.py`` can fail the build on
+any drift from the committed expectations
+(``benchmarks/expected_smoke.json``).
 
 Usage:
   PYTHONPATH=src python -m benchmarks.smoke_invariants  (stdout summary)
@@ -26,18 +31,22 @@ from repro.core.cost_model import UploadModel
 N_CLIENTS = 8
 GRAD_ELEMS = 4_096
 N_SHARDS = 4
+# second readahead grid point: different N regime, wider sharding
+N_CLIENTS_2 = 12
+N_SHARDS_2 = 8
 TOPOLOGIES = ("gradssharding", "lambda_fl", "lifl", "sharded_tree")
 ENGINES = ("streaming", "batched", "incremental")
 SCHEDULES = ("barrier", "pipelined")
 READAHEAD_KS = (1, 2, 4, 8)
+CODECS = ("identity", "fp16", "qsgd8", "topk")
 
 UPLOAD = UploadModel(mbps=16.0, jitter_s=3.0, rate_jitter=0.5, seed=11)
 
 
-def _grads():
-    rng = np.random.default_rng(1234)
+def _grads(n=N_CLIENTS, seed=1234):
+    rng = np.random.default_rng(seed)
     return [rng.standard_normal(GRAD_ELEMS).astype(np.float32)
-            for _ in range(N_CLIENTS)]
+            for _ in range(n)]
 
 
 def _avg_hash(result) -> str:
@@ -52,11 +61,12 @@ def main() -> None:
     for topology in TOPOLOGIES:
         for engine in ENGINES:
             for schedule in SCHEDULES:
-                # every knob pinned (incl. readahead_k): the recorded
-                # invariants must be hermetic against REPRO_AGG_* env vars
+                # every knob pinned (incl. readahead_k and codec): the
+                # recorded invariants must be hermetic vs REPRO_AGG_* env
                 session = FederatedSession(
                     topology=topology, n_shards=N_SHARDS, engine=engine,
-                    schedule=schedule, upload=UPLOAD, readahead_k=1)
+                    schedule=schedule, upload=UPLOAD, readahead_k=1,
+                    codec="identity")
                 r = session.round(grads)
                 billed = sum(rec.billed_gb_s for rec in r.records)
                 tag = f"smoke/{topology}/{engine}/{schedule}"
@@ -70,21 +80,28 @@ def main() -> None:
                 rows.append([topology, engine, schedule, r.puts, r.gets,
                              f"{billed:.4f}", f"{r.wall_clock_s:.3f}",
                              _avg_hash(r)[:8]])
-        # the pipelined read-ahead window moves time, never bits
-        for k in READAHEAD_KS:
-            r = FederatedSession(
-                topology=topology, n_shards=N_SHARDS, schedule="pipelined",
-                upload=UPLOAD, readahead_k=k).round(grads)
-            tag = f"smoke/{topology}/readahead_k{k}"
-            record_invariant(f"{tag}/wall_s", round(r.wall_clock_s, 12))
-            record_invariant(f"{tag}/avg_sha256", _avg_hash(r))
-            record_invariant(f"{tag}/peak_memory_mb",
-                             round(r.peak_memory_mb, 6))
-            hashes[topology].add(_avg_hash(r))
+        # the pipelined read-ahead window moves time, never bits — gated
+        # at two (N, M) points (the second exercises the wider-shard /
+        # larger-cohort regime the first point's tree shapes miss)
+        for point, (n2, m2) in (("", (N_CLIENTS, N_SHARDS)),
+                                ("2", (N_CLIENTS_2, N_SHARDS_2))):
+            g2 = grads if not point else _grads(n2, seed=4321)
+            for k in READAHEAD_KS:
+                r = FederatedSession(
+                    topology=topology, n_shards=m2, schedule="pipelined",
+                    upload=UPLOAD, readahead_k=k, codec="identity").round(g2)
+                tag = f"smoke/{topology}/readahead{point}_k{k}"
+                record_invariant(f"{tag}/wall_s", round(r.wall_clock_s, 12))
+                record_invariant(f"{tag}/avg_sha256", _avg_hash(r))
+                record_invariant(f"{tag}/peak_memory_mb",
+                                 round(r.peak_memory_mb, 6))
+                if not point:
+                    hashes[topology].add(_avg_hash(r))
         # analytical == sim parity is itself an invariant worth gating
         m = N_SHARDS if topology in ("gradssharding", "sharded_tree") else 1
         model = cm.pipelined_round_cost(topology, GRAD_ELEMS * 4, N_CLIENTS,
-                                        m, upload=UPLOAD, readahead_k=1)
+                                        m, upload=UPLOAD, readahead_k=1,
+                                        codec="identity")
         record_invariant(f"smoke/{topology}/model_pipelined_wall_s",
                          round(model.wall_clock_s, 12))
 
@@ -97,6 +114,57 @@ def main() -> None:
     table("Smoke invariants (engine x schedule grid, fixed seed)",
           ["topology", "engine", "schedule", "puts", "gets", "GB-s",
            "wall (s)", "avg hash"], rows)
+    codec_axis(grads, hashes)
+
+
+def codec_axis(grads, raw_hashes) -> None:
+    """The wire-codec gate (gradssharding, N=8, M=4, pipelined).
+
+    ``identity`` must hash-identical to the raw grid; lossy codecs gate
+    on op counts (codecs change bytes, never ops), wire upload bytes,
+    billed GB-s, modeled walls, ``codec_error`` and cross-engine hash
+    determinism (encode/decode are pure functions). Sim == cost-model
+    wall parity is recorded per codec — smaller GETs shift read-ahead
+    launch times, and both sides must shift identically.
+    """
+    rows = []
+    for codec in CODECS:
+        per_engine = set()
+        for engine in ENGINES:
+            session = FederatedSession(
+                topology="gradssharding", n_shards=N_SHARDS, engine=engine,
+                schedule="pipelined", upload=UPLOAD, readahead_k=2,
+                codec=codec)
+            r = session.round(grads)
+            per_engine.add(_avg_hash(r))
+        billed = sum(rec.billed_gb_s for rec in r.records)
+        wire = sum(nb for key, nb in session.store.stats.put_log
+                   if "/avg/" not in key and "/partial/" not in key)
+        model = cm.pipelined_round_cost(
+            "gradssharding", GRAD_ELEMS * 4, N_CLIENTS, N_SHARDS,
+            upload=UPLOAD, readahead_k=2, codec=codec)
+        tag = f"smoke/codec/{codec}"
+        record_invariant(f"{tag}/puts", r.puts)
+        record_invariant(f"{tag}/gets", r.gets)
+        record_invariant(f"{tag}/wire_upload_bytes", wire)
+        record_invariant(f"{tag}/billed_gb_s", round(billed, 12))
+        record_invariant(f"{tag}/wall_s", round(r.wall_clock_s, 12))
+        record_invariant(f"{tag}/model_wall_s",
+                         round(model.wall_clock_s, 12))
+        record_invariant(f"{tag}/codec_error", round(r.codec_error, 12))
+        record_invariant(f"{tag}/engine_deterministic",
+                         len(per_engine) == 1)
+        if codec == "identity":
+            record_invariant(f"{tag}/matches_raw_grid",
+                             per_engine <= raw_hashes["gradssharding"])
+        else:
+            record_invariant(f"{tag}/avg_sha256", next(iter(per_engine)))
+        rows.append([codec, r.puts, r.gets, wire, f"{billed:.4f}",
+                     f"{r.wall_clock_s:.3f}", f"{r.codec_error:.3e}",
+                     len(per_engine) == 1])
+    table("Codec axis (gradssharding, pipelined, k=2)",
+          ["codec", "puts", "gets", "wire B", "GB-s", "wall (s)",
+           "codec_error", "engine-det"], rows)
 
 
 if __name__ == "__main__":

@@ -31,6 +31,11 @@ def main(argv=None):
                          "change)")
     ap.add_argument("--upload-mbps", type=float, default=None)
     ap.add_argument("--jitter-s", type=float, default=0.0)
+    ap.add_argument("--codec", default=None,
+                    choices=["identity", "fp16", "qsgd8", "topk"],
+                    help="on-the-wire contribution format (default: "
+                         "REPRO_AGG_CODEC / identity); lossy codecs are "
+                         "deterministic and report codec_error")
     args = ap.parse_args(argv)
 
     upload = None
@@ -46,22 +51,27 @@ def main(argv=None):
     for topology in ("gradssharding", "lambda_fl", "lifl", "sharded_tree"):
         session = FederatedSession(SessionConfig(
             topology=topology, n_shards=M, schedule=args.schedule,
-            readahead_k=args.readahead_k, upload=upload))
+            readahead_k=args.readahead_k, upload=upload, codec=args.codec))
         results[topology] = r = session.round(grads)
         print(f"{topology:14s}: wall {r.wall_clock_s:6.2f}s "
               f"({len(r.phases_s)} phase(s)), ops {r.puts}P+{r.gets}G, "
               f"peak-mem {r.peak_memory_mb:5.0f} MB, "
-              f"cost ${session.total_cost():.8f}/round")
+              f"cost ${session.total_cost():.8f}/round"
+              + (f", codec_error {r.codec_error:.2e}"
+                 if r.codec != "identity" else ""))
 
-    # the paper's equivalence claims, extended to the plugin topology
-    assert np.array_equal(results["gradssharding"].avg_flat,
-                          _streaming_mean(grads))
-    assert np.array_equal(results["sharded_tree"].avg_flat,
-                          results["lambda_fl"].avg_flat)
-    for topology, r in results.items():
-        assert np.allclose(r.avg_flat, reference, rtol=1e-5, atol=1e-6)
-    print("gradssharding bit-identical to full FedAvg: True")
-    print("sharded_tree bit-identical to lambda_fl:    True")
+    if results["gradssharding"].codec == "identity":
+        # the paper's equivalence claims, extended to the plugin topology
+        # (exact bit-identity is the *identity* codec's contract; lossy
+        # codecs guarantee determinism and a reported codec_error instead)
+        assert np.array_equal(results["gradssharding"].avg_flat,
+                              _streaming_mean(grads))
+        assert np.array_equal(results["sharded_tree"].avg_flat,
+                              results["lambda_fl"].avg_flat)
+        for topology, r in results.items():
+            assert np.allclose(r.avg_flat, reference, rtol=1e-5, atol=1e-6)
+        print("gradssharding bit-identical to full FedAvg: True")
+        print("sharded_tree bit-identical to lambda_fl:    True")
 
 
 def _streaming_mean(grads):

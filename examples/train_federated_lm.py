@@ -59,6 +59,12 @@ def main(argv=None):
                          "contributions ahead of the fold frontier "
                          "(default: REPRO_AGG_READAHEAD / 1); fold order "
                          "and the learning trajectory never change")
+    ap.add_argument("--codec", default=None,
+                    choices=["identity", "fp16", "qsgd8", "topk"],
+                    help="wire codec for client uploads (default: "
+                         "REPRO_AGG_CODEC / identity); lossy codecs cut "
+                         "upload bytes/GET time and report per-round "
+                         "codec_error")
     ap.add_argument("--upload-mbps", type=float, default=None,
                     help="per-client uplink MB/s (None = instantaneous)")
     ap.add_argument("--download-mbps", type=float, default=None)
@@ -114,10 +120,13 @@ def main(argv=None):
         state["params"] = apply_delta(
             state["params"], unflatten(jnp.asarray(res.avg_flat),
                                        state["spec"]))
+        codec = "" if res.codec == "identity" \
+            else f" {res.codec} err={res.codec_error:.1e}"
         print(f"round {rnd:3d}  client-loss {np.mean(state['losses']):.4f}  "
               f"agg-wall {res.wall_clock_s:.2f}s  "
               f"ops {res.puts}P/{res.gets}G  "
-              f"peak-mem {res.peak_memory_mb:.0f}MB  [{res.schedule}]")
+              f"peak-mem {res.peak_memory_mb:.0f}MB  "
+              f"[{res.schedule}{codec}]")
 
     print(f"federated {args.arch} ({models.param_count(cfg):,} params), "
           f"N={args.clients} clients, topology={args.topology} "
@@ -127,7 +136,7 @@ def main(argv=None):
         topology=args.topology, n_shards=args.shards,
         partition=args.partition, tensor_sizes=tensor_sizes,
         engine=args.engine, schedule=args.schedule,
-        readahead_k=args.readahead_k, upload=upload))
+        readahead_k=args.readahead_k, codec=args.codec, upload=upload))
     for rnd, res in enumerate(session.run(client_grads, args.rounds)):
         on_round(rnd, res)
     print(f"session wall (modeled): {session.session_wall_s:.2f}s  "

@@ -7,7 +7,7 @@ Paper: "Shard the Gradient, Scale the Model" (A. Barrak, CS.DC 2026).
 __version__ = "1.0.0"
 
 __all__ = ["FederatedSession", "SessionConfig", "register_topology",
-           "available_topologies"]
+           "available_topologies", "register_codec", "available_codecs"]
 
 
 def __getattr__(name):
@@ -19,4 +19,7 @@ def __getattr__(name):
     if name in ("register_topology", "available_topologies"):
         from repro.core import topology
         return getattr(topology, name)
+    if name in ("register_codec", "available_codecs"):
+        from repro.core import wire_codec
+        return getattr(wire_codec, name)
     raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -36,7 +36,8 @@ import numpy as np
 from repro.config import LambdaLimits
 from repro.core.cost_model import UploadModel
 from repro.core.topology import (AggregationResult, available_topologies,
-                                 get_topology, round_prefix, run_round)
+                                 get_codec, get_topology, round_prefix,
+                                 run_round)
 from repro.serverless.runtime import FaultPlan, LambdaRuntime
 from repro.store import ObjectStore
 
@@ -68,6 +69,16 @@ class SessionConfig:
     # k contributions ahead of the fold frontier (fold order — and thus
     # avg_flat — is unchanged); None defers to REPRO_AGG_READAHEAD / 1
     readahead_k: int | None = None
+    # on-the-wire representation of client contributions (repro.core
+    # .wire_codec registry: identity/fp16/qsgd8/topk); None defers to
+    # REPRO_AGG_CODEC / "identity". Lossy codecs shrink upload bytes, GET
+    # latency, billing and the feasibility ceiling, stay deterministic,
+    # and report their accuracy cost as AggregationResult.codec_error
+    codec: str | None = None
+    # the codec_error reference is an extra O(N·|grad|) host pass per
+    # lossy round; throughput-bound sweeps can turn it off (codec_error
+    # then reads NaN, never a misleading 0.0)
+    track_codec_error: bool = True
     upload: UploadModel | None = None
     # convenience override for UploadModel.compute_s (modeled per-client
     # local training time per round); 0.0 defers to the upload model
@@ -116,6 +127,7 @@ class FederatedSession:
             config = replace(config, **overrides)
         self.config = config
         self.topology = get_topology(config.topology)   # fail fast
+        get_codec(config.codec)                         # fail fast too
         self.store = store if store is not None else ObjectStore()
         if runtime is not None:
             # an injected runtime already fixed these; silently dropping
@@ -158,7 +170,8 @@ class FederatedSession:
             upload=cfg.resolved_upload(),
             client_ready_s=self._client_ready,
             straggler_threshold_s=cfg.straggler_threshold_s,
-            readahead_k=cfg.readahead_k,
+            readahead_k=cfg.readahead_k, codec=cfg.codec,
+            track_codec_error=cfg.track_codec_error,
             **cfg.round_options())
         self._observe(result)
         if not cfg.keep_records:
@@ -223,6 +236,7 @@ class FederatedSession:
     def summary(self) -> dict:
         return {
             "topology": self.config.topology,
+            "codec": get_codec(self.config.codec).name,
             "rounds": self.rounds_run,
             "session_wall_s": self.session_wall_s,
             "sum_round_walls_s": self.sum_round_walls_s,

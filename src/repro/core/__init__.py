@@ -7,7 +7,8 @@ from repro.core import (
     sharded_tree,
     sharding,
     topology,
+    wire_codec,
 )
 
 __all__ = ["agg_engine", "aggregation", "cost_model", "device_agg", "fedavg",
-           "sharded_tree", "sharding", "topology"]
+           "sharded_tree", "sharding", "topology", "wire_codec"]

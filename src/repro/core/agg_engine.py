@@ -49,6 +49,20 @@ in the environment; the default is ``"batched"``. Engines compose freely
 with the round *schedule* knob (``schedule="barrier" | "pipelined"`` /
 ``REPRO_AGG_SCHEDULE``): accounting is value-agnostic, so every engine
 yields identical modeled platform numbers under either schedule.
+
+**Wire codecs (decode-before-fold contract).** When a round runs with a
+non-identity :mod:`~repro.core.wire_codec` (``SessionConfig.codec`` /
+``REPRO_AGG_CODEC``), client contributions arrive as encoded
+``WirePayload`` objects. The shared body template buffers the *encoded*
+bytes (GETs, stalls and the read-ahead window's memory all see the
+reduced wire size) and decodes each contribution exactly once, at the
+fold frontier, before folding it — charging the codec's declared decode
+cost. Every engine observes the same decoded f32 values in the same
+order, so ``avg_flat`` stays **bit-identical across engines, schedules
+and readahead_k for a fixed codec** (lossy codecs are deterministic);
+only ``codec="identity"`` additionally guarantees bit-identity to the
+uncompressed reference — with it the codec layer is byte-for-byte
+invisible.
 """
 from __future__ import annotations
 
@@ -59,6 +73,8 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.sharding import PartitionPlan, ShardView, shard, shard_views
+from repro.core.wire_codec import (EncodedView, WirePayload, decode_eager,
+                                   decode_lazy)
 from repro.serverless.event_sim import ReadAheadWindow
 from repro.store import ObjectStore
 
@@ -94,7 +110,7 @@ def _chunk_of(x, s: int, e: int) -> np.ndarray:
     node's already-evaluated output slice."""
     if isinstance(x, LazyAverage):
         return x.out[s:e]
-    if isinstance(x, ShardView):
+    if isinstance(x, (ShardView, EncodedView)):
         return x.read(s, e)
     return x[s:e]
 
@@ -297,6 +313,20 @@ def _avg_body(backend: "ExecutionBackend", store: ObjectStore,
     of the in-flight GET) — the paper's 3×input+450 MB formula at
     ``k<=2``. The backend supplies the arithmetic (inline numpy or lazy
     handles); the ctx call sequence is identical across backends.
+
+    **Decode-before-fold.** When a fetched value is a
+    :class:`~repro.core.wire_codec.WirePayload` (a lossy wire codec is
+    active), the body buffers the *encoded* payload — GET latency,
+    transfer time and the prefetch window's memory all see the reduced
+    wire size — and decodes it the moment it reaches the fold frontier:
+    the codec's declared ``decode_cost_s`` is charged, the decoded f32
+    buffer is allocated, the wire buffer freed, and the fold proceeds on
+    decoded values exactly as before. ``backend.decode_value`` picks the
+    arithmetic: an eager numpy decode (streaming/incremental) or a lazy
+    chunk-decoding view (batched — the decode fuses into the chunked DAG
+    evaluation, bitwise identical to the eager decode). Under the
+    ``identity`` codec no payload ever appears and this path is
+    byte-for-byte the pre-codec loop.
     """
     def body(ctx):
         acc = None
@@ -308,6 +338,17 @@ def _avg_body(backend: "ExecutionBackend", store: ObjectStore,
             if win.foldable:
                 i = win.frontier
                 arr = buffered.pop(i)
+                if isinstance(arr, WirePayload):
+                    # decode through the instance that encoded the payload
+                    # (unregistered codec objects round-trip; a registered
+                    # name collision cannot mis-decode)
+                    codec = arr.codec_obj
+                    ctx.work(codec.decode_cost_s(arr.raw_nbytes))
+                    ctx.free(arr.nbytes)              # wire buffer released
+                    arr = backend.decode_value(codec, arr)
+                    ctx.alloc(backend.nbytes(arr))    # decoded f32 buffer
+                    # (chunk-fused in the batched engine, so the peak
+                    # stays within the (k+1)-input envelope)
                 if acc is None:
                     acc = backend.init_acc(arr, weights)
                     ctx.alloc(backend.nbytes(acc))
@@ -381,6 +422,12 @@ class ExecutionBackend:
 
     def nbytes(self, x) -> int:
         return int(x.nbytes)
+
+    def decode_value(self, codec, payload):
+        """Decoded form of a wire payload reaching the fold frontier.
+        Default: eager numpy decode (the streaming/incremental engines
+        fold real arrays the moment they reach the frontier)."""
+        return decode_eager(payload)
 
     # -- body construction ---------------------------------------------------
     def avg_body(self, store, in_keys, out_key, weights=None,
@@ -546,6 +593,12 @@ class BatchedBackend(ExecutionBackend):
     # -- client-side sharding ------------------------------------------------
     def shard_values(self, flat: np.ndarray, plan: PartitionPlan) -> list:
         return shard_views(flat, plan)
+
+    # -- wire payloads -------------------------------------------------------
+    def decode_value(self, codec, payload):
+        # lazy: the decode fuses into the chunked DAG evaluation
+        # (EncodedView.read is bitwise decode(payload)[s:e])
+        return decode_lazy(payload)
 
     # -- round lifecycle -----------------------------------------------------
     def _pallas_enabled(self) -> bool:

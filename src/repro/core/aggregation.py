@@ -23,6 +23,25 @@ Engine (``streaming``/``batched``/``incremental``, env
 ``avg_flat`` is bit-identical across engines and schedules by construction
 (pipelining moves *time*, never arithmetic).
 
+The wire **codec** knob (``identity``/``fp16``/``qsgd8``/``topk``, env
+``REPRO_AGG_CODEC``, registry :mod:`repro.core.wire_codec`) selects the
+on-the-wire representation of client contributions. The contract is
+**decode-before-fold**: clients PUT encoded payloads (the store, the
+upload schedule, GET latency and billing all see wire bytes), and each
+aggregator decodes a contribution exactly once — when it reaches the fold
+frontier — so the fold arithmetic always runs on f32 values in strict
+client-index order. Consequences: (1) under ``identity`` the codec layer
+is byte-for-byte invisible and every pre-codec bit-identity invariant
+holds unchanged; (2) under a lossy codec, bit-identity to the
+uncompressed reference is *not* guaranteed — what is guaranteed is
+**determinism**: encode/decode are pure functions, so ``avg_flat`` is
+still bit-identical across engines × schedules × readahead_k × arrival
+permutations for a fixed codec, and the accuracy cost is reported as
+``AggregationResult.codec_error`` (max-abs vs the uncompressed streaming
+mean). Inter-aggregator partials and the averaged outputs stay raw f32 —
+only the client→aggregator hop (the dominant transfer-volume term) is
+compressed.
+
 This module keeps the legacy functional surface as thin delegating shims:
 ``aggregate_round`` (the supported functional alias of
 ``FederatedSession.round``) plus the deprecated per-topology round
@@ -47,7 +66,9 @@ from repro.core.topology import (                                 # noqa: F401
     SCHEDULES,
     AggregationResult,
     Engine,
+    available_codecs,
     available_topologies,
+    get_codec,
     get_readahead,
     get_schedule,
     get_topology,
@@ -56,9 +77,11 @@ from repro.core.topology import (                                 # noqa: F401
     k_client_shard,
     k_global,
     k_partial,
+    register_codec,
     register_topology,
     run_round,
 )
+from repro.core.wire_codec import WireCodec, WirePayload          # noqa: F401
 from repro.serverless.runtime import InvocationRecord, LambdaRuntime  # noqa: F401
 from repro.store import ObjectStore
 
@@ -73,6 +96,8 @@ def aggregate_round(topology: str, client_grads: Sequence[np.ndarray], *,
                     client_ready_s: Sequence[float] | None = None,
                     straggler_threshold_s: float | None = None,
                     readahead_k: int | None = None,
+                    codec: str | WireCodec | None = None,
+                    track_codec_error: bool = True,
                     **kw) -> AggregationResult:
     """One aggregation round of any registered topology (functional form
     of :meth:`repro.api.FederatedSession.round`)."""
@@ -81,7 +106,8 @@ def aggregate_round(topology: str, client_grads: Sequence[np.ndarray], *,
         engine=engine, schedule=schedule, upload=upload,
         client_ready_s=client_ready_s,
         straggler_threshold_s=straggler_threshold_s,
-        readahead_k=readahead_k,
+        readahead_k=readahead_k, codec=codec,
+        track_codec_error=track_codec_error,
         n_shards=n_shards, partition=partition, tensor_sizes=tensor_sizes,
         **kw)
 

@@ -15,6 +15,16 @@ Encodes, for each architecture (λ-FL, LIFL, GradsSharding):
     (the discrete-event runtime reproduces this number exactly for a
     no-fault round).
 
+Every transfer/billing/feasibility entry is **wire-codec aware**
+(``codec=`` on :func:`round_cost` / :func:`barrier_round_cost` /
+:func:`pipelined_round_cost` / :func:`feasible` / :func:`lambda_memory_mb`;
+``None`` resolves ``REPRO_AGG_CODEC`` exactly like the round driver):
+client uploads and first-level GETs move ``codec.wire_bytes``, level-1
+folds pay ``decode_cost_s`` per contribution, and the billed allocation
+buffers encoded payloads (:func:`wire_alloc_bytes`). ``s3_ops`` is
+deliberately codec-independent — compression changes bytes, never op
+counts.
+
 All formulas are pure functions of (N, M, |θ|) so they are property-testable.
 """
 from __future__ import annotations
@@ -26,9 +36,16 @@ from typing import Sequence
 import numpy as np
 
 from repro.config import AGG_COMPUTE_BPS, LambdaLimits
+from repro.core.wire_codec import WireCodec, get_codec
 from repro.serverless.event_sim import ReadAheadWindow
 
 MB = 1024 * 1024
+
+#: codec knob type accepted by every codec-aware cost entry: a registered
+#: name, a WireCodec instance, or None/"auto" (env REPRO_AGG_CODEC ->
+#: "identity") — one resolution rule with the round driver's, so the
+#: analytical model and the event sim always price the same wire format.
+Codec = str | WireCodec | None
 
 
 # ---------------------------------------------------------------------------
@@ -83,6 +100,29 @@ def _registered(topology: str):
     without the topology layer)."""
     from repro.core.topology import get_topology
     return get_topology(topology)
+
+
+def _codec_kwargs(hook, codec: WireCodec) -> dict:
+    """Back-compat for topology cost hooks written before the wire-codec
+    axis: pass ``codec=`` only to hooks that accept it. A legacy plugin
+    (pre-codec ``cost_phase_plan``/``cost_pipelined_plan`` signature)
+    keeps working under the identity codec — where the knob changes
+    nothing — and gets a clear error instead of silently-raw pricing when
+    a compressing codec is requested."""
+    import inspect
+    try:
+        params = inspect.signature(hook).parameters
+        accepts = "codec" in params or any(
+            p.kind == p.VAR_KEYWORD for p in params.values())
+    except (TypeError, ValueError):          # builtins/C callables: assume new
+        accepts = True
+    if accepts:
+        return {"codec": codec}
+    if codec.wire_bytes(4) != 4:             # a size-changing codec
+        raise NotImplementedError(
+            f"{hook.__qualname__} predates the wire-codec axis and cannot "
+            f"price codec {codec.name!r}; add a codec= keyword to the hook")
+    return {}
 
 
 def s3_ops(topology: str, n: int, m: int = 1) -> S3Ops:
@@ -177,17 +217,63 @@ def readahead_alloc_mult(readahead_k: int, fanin: int | None,
     return max(limits.mem_multiplier, k + 1)
 
 
+def wire_alloc_bytes(in_bytes: int, limits: LambdaLimits,
+                     readahead_k: int = 1, fanin: int | None = None,
+                     wire_in_bytes: int | None = None,
+                     weighted: bool = False) -> float:
+    """Billed aggregator allocation in bytes (above runtime overhead).
+
+    Identity-size wire (``wire_in_bytes`` None or >= ``in_bytes``): the
+    legacy :func:`readahead_alloc_mult` formula, unchanged bit-for-bit.
+    Compressed wire: the prefetch window buffers *encoded* payloads and
+    only the fold frontier is decoded, so the bound is ``accumulator +
+    decode target + (k-1) buffered wire payloads`` — ``2·input`` for the
+    f32 running sum of an unweighted fold, ``3·input`` for the f64
+    accumulator of a weighted (tree-merge) fold — and a 4× smaller wire
+    format genuinely raises the feasibility ceiling. One definition
+    behind the driver's ``_alloc_mb`` and the analytical model's per-fold
+    billing (and :func:`lambda_memory_mb` / :func:`feasible`)."""
+    if wire_in_bytes is None or wire_in_bytes >= in_bytes:
+        return readahead_alloc_mult(readahead_k, fanin, limits) * in_bytes
+    k = int(readahead_k)
+    if fanin is not None:
+        k = min(k, int(fanin))
+    acc_buffers = 2.0 if weighted else 1.0    # f64 running sum when weighted
+    return (acc_buffers + 1.0) * in_bytes + (k - 1) * int(wire_in_bytes)
+
+
+def wire_alloc_mb(in_bytes: int, limits: LambdaLimits,
+                  readahead_k: int = 1, fanin: int | None = None,
+                  wire_in_bytes: int | None = None,
+                  weighted: bool = False) -> float:
+    """Allocatable Lambda size for one aggregator fold — the billing entry
+    both the round driver and :func:`pipelined_round_cost` call, so sim ==
+    model billing parity holds per codec by construction."""
+    return allocatable_memory_mb(
+        wire_alloc_bytes(in_bytes, limits, readahead_k, fanin,
+                         wire_in_bytes, weighted) / MB
+        + limits.runtime_overhead_mb,
+        limits)
+
+
 def lambda_memory_mb(topology: str, grad_bytes: int, m: int = 1,
                      limits: LambdaLimits = LambdaLimits(),
-                     readahead_k: int = 1) -> float:
+                     readahead_k: int = 1, codec: Codec = None) -> float:
     """Empirical deployment formula: 3 × input_size + 450 MB (paper RQ3).
     A ``readahead_k`` prefetch window needs ``k + 1`` input buffers, so
-    the multiplier grows once k outruns the builtin formula's headroom.
-    Callers bill per aggregator and clamp ``readahead_k`` to that fold's
-    fan-in first (the window never buffers more) — see
-    :func:`readahead_alloc_mult`."""
-    mult = readahead_alloc_mult(readahead_k, None, limits)
-    return (mult * input_bytes(topology, grad_bytes, m) / MB
+    the multiplier grows once k outruns the builtin formula's headroom;
+    a compressed wire ``codec`` shrinks the prefetch buffers (and the
+    GET transient) to wire size — see :func:`wire_alloc_bytes`, with the
+    topology's ``cost_wire_weighted`` hook adding the f64-accumulator
+    buffer where the encoded-input folds carry weights (LIFL), so the
+    model never green-lights a config the event sim OOMs on. Callers
+    bill per aggregator and clamp ``readahead_k`` to that fold's fan-in
+    first (the window never buffers more)."""
+    in_b = input_bytes(topology, grad_bytes, m)
+    wire_b = get_codec(codec).wire_bytes(in_b)
+    weighted = _registered(topology).cost_wire_weighted()
+    return (wire_alloc_bytes(in_b, limits, readahead_k, None, wire_b,
+                             weighted) / MB
             + limits.runtime_overhead_mb)
 
 
@@ -201,13 +287,18 @@ def allocatable_memory_mb(required_mb: float,
 
 def feasible(topology: str, grad_bytes: int, m: int = 1,
              limits: LambdaLimits = LambdaLimits(),
-             readahead_k: int = 1) -> bool:
+             readahead_k: int = 1, codec: Codec = None) -> bool:
     """True when the aggregator allocation fits the platform ceiling.
     ``readahead_k`` (pre-clamped to the fan-in by callers) matters: a
     config whose 3× formula fits can still OOM once the prefetch window
-    needs ``(k+1)`` input buffers."""
+    needs ``(k+1)`` input buffers. A compressed wire ``codec`` moves the
+    ceiling the other way — with ``qsgd8``'s ~4× smaller payloads the
+    bound shrinks to ``2·input + (k-1)·wire`` (``3·input + (k-1)·wire``
+    where the encoded-input folds are weighted, i.e. LIFL — see
+    :func:`wire_alloc_bytes`), so gradients past the paper's 10 GB wall
+    become feasible without resharding."""
     return lambda_memory_mb(topology, grad_bytes, m, limits,
-                            readahead_k=readahead_k) \
+                            readahead_k=readahead_k, codec=codec) \
         <= limits.max_memory_mb
 
 
@@ -249,10 +340,18 @@ class PhaseTiming:
 
 
 def aggregator_timing(in_bytes: int, n_contrib: int, out_bytes: int,
-                      limits: LambdaLimits = LambdaLimits()) -> PhaseTiming:
-    read = n_contrib * (in_bytes / (limits.s3_read_mbps * 1e6)
+                      limits: LambdaLimits = LambdaLimits(),
+                      wire_in_bytes: int | None = None,
+                      decode_s: float = 0.0) -> PhaseTiming:
+    """Single-aggregator phase timing. ``wire_in_bytes`` (default: the
+    raw ``in_bytes``) is what each GET actually transfers when a wire
+    codec compresses the contributions; ``decode_s`` is the codec's
+    per-contribution decode cost, charged as compute. With the defaults
+    this is the pre-codec formula, unchanged."""
+    wire = in_bytes if wire_in_bytes is None else wire_in_bytes
+    read = n_contrib * (wire / (limits.s3_read_mbps * 1e6)
                         + limits.s3_get_latency_s)
-    compute = n_contrib * in_bytes / AGG_COMPUTE_BPS
+    compute = n_contrib * (in_bytes / AGG_COMPUTE_BPS + decode_s)
     write = out_bytes / (limits.s3_write_mbps * 1e6)
     return PhaseTiming(read, compute, write)
 
@@ -353,21 +452,56 @@ def uniform_shard_bytes(grad_bytes: int, m: int, itemsize: int = 4
     return [(base + (1 if j < rem else 0)) * itemsize for j in range(m)]
 
 
+def sharded_wire_upload_bytes(grad_bytes: int, m: int = 1,
+                              codec: Codec = None,
+                              shard_bytes: Sequence[int] | None = None
+                              ) -> int:
+    """Total wire bytes of one client's M independently encoded shards —
+    the shared ``cost_client_upload_bytes`` body of every topology whose
+    clients upload the N·M shard keyspace (each shard pays its own codec
+    framing: per-tile scales, sparse budgets), exactly like the
+    simulator's per-shard PUTs."""
+    c = get_codec(codec)
+    sb = shard_bytes if shard_bytes is not None \
+        else uniform_shard_bytes(grad_bytes, m)
+    return sum(c.wire_bytes(b) for b in sb)
+
+
+def client_upload_bytes(topology: str, grad_bytes: int, m: int = 1,
+                        codec: Codec = None,
+                        shard_bytes: Sequence[int] | None = None) -> int:
+    """Total bytes one client PUTs per round, on the wire.
+
+    Dispatches to the topology's ``cost_client_upload_bytes`` hook: the
+    whole-gradient topologies upload one encoded gradient, the sharded
+    topologies upload M independently encoded shards (each shard pays its
+    own codec framing — per-tile scales, sparse budgets — exactly like
+    the simulator's per-shard PUTs)."""
+    return _registered(topology).cost_client_upload_bytes(
+        grad_bytes, m, codec=codec, shard_bytes=shard_bytes)
+
+
 def _fold_finish(launch_s: float, avail_s: Sequence[float],
                  in_bytes: Sequence[int], out_bytes: int,
                  limits: LambdaLimits, cold: bool,
-                 readahead_k: int = 1) -> float:
+                 readahead_k: int = 1,
+                 wire_bytes: Sequence[int] | None = None,
+                 decode_s: float = 0.0) -> float:
     """Finish time of one streaming prefix fold with a bounded read-ahead
     window: launch (+cold start), then drive the same deterministic
     :class:`ReadAheadWindow` schedule the simulated aggregator body runs —
-    GET the next window contribution (stalling only when none has landed),
-    fold strictly in index order (accumulate compute from the 2nd
-    contribution on) — then finalize + write. ``readahead_k=1`` replays
-    the legacy in-index-order op sequence exactly."""
+    GET the next window contribution (stalling only when none has landed;
+    transfers move ``wire_bytes``, the codec-encoded size), decode at the
+    fold frontier (``decode_s`` per contribution), fold strictly in index
+    order (accumulate compute from the 2nd contribution on, over the
+    *decoded* ``in_bytes``) — then finalize + write. ``readahead_k=1``
+    with an identity-size wire replays the legacy op sequence exactly."""
     t = launch_s + (limits.cold_start_s if cold else 0.0)
+    wire = in_bytes if wire_bytes is None else wire_bytes
     win = ReadAheadWindow(avail_s, readahead_k)
     while not win.done:
         if win.foldable:
+            t += decode_s
             if win.frontier:
                 t += in_bytes[win.frontier] / AGG_COMPUTE_BPS
             win.folded()
@@ -375,8 +509,8 @@ def _fold_finish(launch_s: float, avail_s: Sequence[float],
         j = win.next_fetch(t)
         if win.avail[j] > t:
             t = win.avail[j]                        # stall for availability
-        t += limits.s3_get_latency_s + in_bytes[j] / (limits.s3_read_mbps
-                                                      * 1e6)
+        t += limits.s3_get_latency_s + wire[j] / (limits.s3_read_mbps
+                                                  * 1e6)
         win.fetched(j)
     t += out_bytes / AGG_COMPUTE_BPS
     t += out_bytes / (limits.s3_write_mbps * 1e6)
@@ -419,7 +553,8 @@ def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
                          rnd: int = 0, cold: bool = True,
                          shard_bytes: Sequence[int] | None = None,
                          colocated: bool = False,
-                         readahead_k: int | None = None) -> RoundCost:
+                         readahead_k: int | None = None,
+                         codec: Codec = None) -> RoundCost:
     """Modeled round under the **pipelined** schedule.
 
     Clients locally train, then upload with per-client jitter
@@ -440,10 +575,20 @@ def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
     ``cost_pipelined_plan`` hook. The 1 ms billing granularity is
     ignored here (<0.1 % on round-scale durations); the discrete-event
     runtime reproduces ``wall_clock_s`` exactly for a no-fault round.
+
+    ``codec`` (name / instance / None → env ``REPRO_AGG_CODEC``) applies
+    the wire format to the client→aggregator hop: uploads and level-1
+    GETs move ``codec.wire_bytes``, level-1 folds pay ``decode_cost_s``
+    per contribution, and the level-1 billed allocation buffers encoded
+    payloads — all through the same :class:`ReadAheadWindow` /
+    :func:`wire_alloc_mb` definitions the event sim runs, so parity to
+    float epsilon holds per codec (smaller GETs legitimately shift
+    window launch and fetch times; both sides shift identically).
     """
     if colocated and topology != "lifl":
         raise ValueError("colocated is the LIFL shared-memory fast path")
     ra = _resolve_readahead(readahead_k)
+    cdc = get_codec(codec)
     upload = upload or UploadModel()
     starts, mults = upload.plan(n, rnd)
     starts = starts + upload.compute_plan(n, rnd)   # train, then upload
@@ -451,16 +596,21 @@ def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
     # feasibility must see the readahead buffers: the simulated runtime
     # OOMs mid-round on a config the 3x formula alone would green-light
     ok = feasible(topology, grad_bytes, m, limits,
-                  readahead_k=min(ra, collect_fanin(topology, n, m)))
+                  readahead_k=min(ra, collect_fanin(topology, n, m)),
+                  codec=cdc)
 
     finishes: list[float] = []
     gb_s_parts: list[float] = []         # per-aggregator billed GB-s
     mem_mbs: list[float] = []
 
-    def run_fold(avail, in_b, out_b, shared=False, write_out=True):
+    def run_fold(avail, in_b, out_b, shared=False, write_out=True,
+                 wire_b=None, decode_s=0.0, weighted=False):
         # billed allocation mirrors the driver's _alloc_mb: the window
         # never buffers more than the fold's fan-in, and colocated hops
-        # (nothing to prefetch) keep the 3x formula and legacy gating
+        # (nothing to prefetch) keep the 3x formula and legacy gating;
+        # wire_b/decode_s mark a fold over codec-encoded contributions
+        # (the client->aggregator hop; inter-aggregator hops stay raw)
+        # and weighted marks its f64 accumulator for the billing bound
         if shared:
             launch = avail[0]
             end = _fold_finish_colocated(launch, avail, in_b, out_b, limits,
@@ -468,10 +618,12 @@ def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
         else:
             launch = ReadAheadWindow.launch_s(avail, ra)
             end = _fold_finish(launch, avail, in_b, out_b, limits, cold,
-                               readahead_k=ra)
-        mult = readahead_alloc_mult(1 if shared else ra, len(avail), limits)
-        mem = allocatable_memory_mb(
-            mult * in_b[0] / MB + limits.runtime_overhead_mb, limits)
+                               readahead_k=ra, wire_bytes=wire_b,
+                               decode_s=decode_s)
+        mem = wire_alloc_mb(in_b[0], limits, 1 if shared else ra,
+                            len(avail),
+                            wire_b[0] if wire_b is not None else None,
+                            weighted)
         finishes.append(end)
         mem_mbs.append(mem)
         gb_s_parts.append(mem / 1024.0 * (end - launch))
@@ -480,35 +632,50 @@ def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
     if topology == "gradssharding":
         sb = list(shard_bytes) if shard_bytes is not None \
             else uniform_shard_bytes(grad_bytes, m)
-        cum = np.cumsum(sb)
-        # client i publishes shard j at start_i + sequential-PUT prefix time
+        wsb = [cdc.wire_bytes(b) for b in sb]
+        cum = np.cumsum(wsb)
+        # client i publishes shard j at start_i + sequential-PUT prefix
+        # time — over the *wire* sizes, exactly like the PUT schedule
         avail = [[starts[i] + upload.upload_s(int(cum[j]), mults[i])
                   for i in range(n)] for j in range(m)]
         for j in range(m):
-            run_fold(avail[j], [sb[j]] * n, sb[j])
+            run_fold(avail[j], [sb[j]] * n, sb[j], wire_b=[wsb[j]] * n,
+                     decode_s=cdc.decode_cost_s(sb[j]))
     elif topology == "lambda_fl":
         k = lambda_fl_branching(n)
-        grad_avail = [starts[i] + upload.upload_s(grad_bytes, mults[i])
+        wire_g = cdc.wire_bytes(grad_bytes)
+        grad_avail = [starts[i] + upload.upload_s(wire_g, mults[i])
                       for i in range(n)]
         leaf_ends = []
         for members in _tree_groups(n, k):
             avail = [grad_avail[i] for i in members]
             leaf_ends.append(run_fold(avail, [grad_bytes] * len(members),
-                                      grad_bytes))
+                                      grad_bytes,
+                                      wire_b=[wire_g] * len(members),
+                                      decode_s=cdc.decode_cost_s(
+                                          grad_bytes)))
         run_fold(leaf_ends, [grad_bytes] * len(leaf_ends), grad_bytes)
     elif topology == "lifl":
         b = lifl_branching(n)
-        grad_avail = [starts[i] + upload.upload_s(grad_bytes, mults[i])
+        wire_g = cdc.wire_bytes(grad_bytes)
+        grad_avail = [starts[i] + upload.upload_s(wire_g, mults[i])
                       for i in range(n)]
         level_in = grad_avail
         for _level in (1, 2):
             ends = []
             for members in _tree_groups(len(level_in), b):
                 avail = [level_in[i] for i in members]
+                # LIFL folds are weight-carrying at every level (group
+                # sizes merge), so the level-1 encoded fold bills the
+                # f64-accumulator bound
+                kw = {"wire_b": [wire_g] * len(members),
+                      "decode_s": cdc.decode_cost_s(grad_bytes),
+                      "weighted": True} \
+                    if _level == 1 else {}
                 ends.append(run_fold(avail, [grad_bytes] * len(members),
                                      grad_bytes,
                                      shared=colocated and _level == 2,
-                                     write_out=False))
+                                     write_out=False, **kw))
             level_in = ends
         run_fold(level_in, [grad_bytes] * len(level_in),
                  grad_bytes, shared=colocated)
@@ -516,9 +683,9 @@ def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
         # registry topologies: the topology declares its pipelined fold
         # DAG through the cost_pipelined_plan hook; run_fold owns launch
         # gating (read-ahead window), stalls, timing and billing
-        _registered(topology).cost_pipelined_plan(
-            grad_bytes, n, m, limits, upload, starts, mults, run_fold,
-            shard_bytes=shard_bytes)
+        hook = _registered(topology).cost_pipelined_plan
+        hook(grad_bytes, n, m, limits, upload, starts, mults, run_fold,
+             shard_bytes=shard_bytes, **_codec_kwargs(hook, cdc))
     if ops is None:
         l1, l2 = lifl_levels(n)
         # colocated: N client PUTs + l1 level-1 partials + the global; GETs
@@ -536,16 +703,22 @@ def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
 def barrier_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
                        limits: LambdaLimits = LambdaLimits(),
                        upload: UploadModel | None = None,
-                       rnd: int = 0, cold: bool = True) -> RoundCost:
+                       rnd: int = 0, cold: bool = True,
+                       codec: Codec = None) -> RoundCost:
     """:func:`round_cost` extended with the same upload model and cold-start
     accounting as :func:`pipelined_round_cost`, so the two are directly
     comparable: all uploads complete (a barrier), then each aggregation
-    phase runs to its slowest member before the next starts."""
+    phase runs to its slowest member before the next starts. ``codec``
+    shrinks the upload span (clients PUT :func:`client_upload_bytes` on
+    the wire) and the first-level read/decode terms inside
+    :func:`round_cost`."""
+    cdc = get_codec(codec)
     upload = upload or UploadModel()
     starts, mults = upload.plan(n, rnd)
     starts = starts + upload.compute_plan(n, rnd)   # train, then upload
-    base = round_cost(topology, grad_bytes, n, m, limits)
-    upload_span = max((starts[i] + upload.upload_s(grad_bytes, mults[i])
+    base = round_cost(topology, grad_bytes, n, m, limits, codec=cdc)
+    up_bytes = client_upload_bytes(topology, grad_bytes, m, codec=cdc)
+    upload_span = max((starts[i] + upload.upload_s(up_bytes, mults[i])
                        for i in range(n)), default=0.0)
     cold_s = (limits.cold_start_s if cold else 0.0) * n_phases(topology)
     wall = upload_span + cold_s + base.wall_clock_s
@@ -558,22 +731,31 @@ def barrier_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
 def round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
                limits: LambdaLimits = LambdaLimits(),
                concurrent: bool = True,
-               memory_mb_override: float | None = None) -> RoundCost:
+               memory_mb_override: float | None = None,
+               codec: Codec = None) -> RoundCost:
     """Full round-trip model: client uploads -> aggregation -> read-back.
 
     ``memory_mb_override`` reproduces deployments that fix the allocation
     (the paper's RQ2-B sweep uses 3,008 MB at every M, which is what shapes
-    its cost hump at M=4)."""
+    its cost hump at M=4). ``codec`` applies the wire format to the
+    client→aggregator hop: first-level aggregators read
+    ``codec.wire_bytes`` per GET and pay ``decode_cost_s`` per
+    contribution; inter-aggregator partials stay raw f32 (``s3_ops`` is
+    codec-independent — compression changes bytes, never op counts)."""
+    cdc = get_codec(codec)
     ops = s3_ops(topology, n, m)
     mem_mb = memory_mb_override if memory_mb_override is not None else \
         allocatable_memory_mb(
-            lambda_memory_mb(topology, grad_bytes, m, limits), limits)
-    ok = feasible(topology, grad_bytes, m, limits)
+            lambda_memory_mb(topology, grad_bytes, m, limits, codec=cdc),
+            limits)
+    ok = feasible(topology, grad_bytes, m, limits, codec=cdc)
 
     timings: list[PhaseTiming] = []
     if topology == "gradssharding":
         shard_b = input_bytes(topology, grad_bytes, m)
-        t = aggregator_timing(shard_b, n, shard_b, limits)
+        t = aggregator_timing(shard_b, n, shard_b, limits,
+                              wire_in_bytes=cdc.wire_bytes(shard_b),
+                              decode_s=cdc.decode_cost_s(shard_b))
         timings = [t] * m
         wall = t.total_s if concurrent else t.total_s * m
         gb_s = m * mem_mb / 1024.0 * t.total_s
@@ -581,7 +763,9 @@ def round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
     elif topology == "lambda_fl":
         k = lambda_fl_branching(n)
         leaves = math.ceil(n / k)
-        t_leaf = aggregator_timing(grad_bytes, k, grad_bytes, limits)
+        t_leaf = aggregator_timing(grad_bytes, k, grad_bytes, limits,
+                                   wire_in_bytes=cdc.wire_bytes(grad_bytes),
+                                   decode_s=cdc.decode_cost_s(grad_bytes))
         t_root = aggregator_timing(grad_bytes, leaves, grad_bytes, limits)
         timings = [t_leaf] * leaves + [t_root]
         wall = t_leaf.total_s + t_root.total_s          # 2 sequential phases
@@ -589,9 +773,17 @@ def round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
         n_inv = leaves + 1
     elif topology == "lifl":
         l1, l2 = lifl_levels(n)
-        b1 = math.ceil(n / l1)
-        b2 = math.ceil(l1 / l2)
-        t1 = aggregator_timing(grad_bytes, b1, grad_bytes, limits)
+        # slowest member of a phase = the widest fold. Contiguous grouping
+        # fills groups to the branching factor (last group takes the
+        # remainder), so the max fan-in is min(b, members) — NOT the
+        # average ceil(members/groups), which undershoots whenever the
+        # remainder group is short (e.g. N=12: groups [3,1], avg 2)
+        b = lifl_branching(n)
+        b1 = min(b, n)
+        b2 = min(b, l1)
+        t1 = aggregator_timing(grad_bytes, b1, grad_bytes, limits,
+                               wire_in_bytes=cdc.wire_bytes(grad_bytes),
+                               decode_s=cdc.decode_cost_s(grad_bytes))
         t2 = aggregator_timing(grad_bytes, b2, grad_bytes, limits)
         t3 = aggregator_timing(grad_bytes, l2, grad_bytes, limits)
         timings = [t1] * l1 + [t2] * l2 + [t3]
@@ -602,8 +794,8 @@ def round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
     else:
         # registry topologies: sequential (timing, count) phase groups;
         # invocations within a phase run concurrently, phases add
-        plan = _registered(topology).cost_phase_plan(grad_bytes, n, m,
-                                                     limits)
+        hook = _registered(topology).cost_phase_plan
+        plan = hook(grad_bytes, n, m, limits, **_codec_kwargs(hook, cdc))
         timings, wall, gb_s, n_inv = [], 0.0, 0.0, 0
         for t, count in plan:
             timings.extend([t] * count)

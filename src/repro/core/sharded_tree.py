@@ -31,6 +31,7 @@ from repro.core.topology import (InvocationSpec, RoundProgram, Topology,
                                  register_topology, resolve_partition_plan,
                                  sharded_client_uploads, tree_groups)
 from repro.core.sharding import reconstruct
+from repro.core.wire_codec import get_codec
 
 
 def k_shard_partial(rnd: int, j: int, leaf: int) -> str:
@@ -50,17 +51,19 @@ class ShardedTreeTopology(Topology):
         m = plan.n_shards
 
         # Step 1+2 — identical client-side keyspace to GradsSharding
-        puts, uploads, shard_bytes = sharded_client_uploads(
-            client_grads, rnd, plan, backend)
+        puts, uploads, shard_bytes, wire_bytes = sharded_client_uploads(
+            client_grads, rnd, plan, backend, codec=spec.codec)
 
-        # Phase 1 — per-shard leaf trees (λ-FL grouping, per shard)
+        # Phase 1 — per-shard leaf trees (λ-FL grouping, per shard);
+        # leaves read encoded client shards, roots read raw partials
         groups = tree_groups(n, cm.lambda_fl_branching(n))
         leaves = tuple(
             InvocationSpec(
                 fn_name=f"r{rnd}-s{j}leaf{leaf}",
                 in_keys=tuple(k_client_shard(rnd, i, j) for i in members),
                 out_key=k_shard_partial(rnd, j, leaf),
-                alloc_bytes=shard_bytes[j])
+                alloc_bytes=shard_bytes[j],
+                wire_in_bytes=wire_bytes[j])
             for j in range(m)
             for leaf, members in enumerate(groups))
 
@@ -109,29 +112,44 @@ class ShardedTreeTopology(Topology):
         # (leaf fan-in >= root fan-in == leaf count)
         return cm.lambda_fl_branching(n)
 
-    def cost_phase_plan(self, grad_bytes, n, m, limits):
+    def cost_phase_plan(self, grad_bytes, n, m, limits, codec=None):
+        cdc = get_codec(codec)
         shard_b = self.cost_input_bytes(grad_bytes, m)
         k = cm.lambda_fl_branching(n)
         leaves = self._leaves(n)
-        return [(cm.aggregator_timing(shard_b, k, shard_b, limits),
+        # leaf folds read codec-encoded client shards; roots read raw
+        # f32 leaf partials
+        return [(cm.aggregator_timing(shard_b, k, shard_b, limits,
+                                      wire_in_bytes=cdc.wire_bytes(shard_b),
+                                      decode_s=cdc.decode_cost_s(shard_b)),
                  m * leaves),
                 (cm.aggregator_timing(shard_b, leaves, shard_b, limits), m)]
 
+    def cost_client_upload_bytes(self, grad_bytes, m=1, codec=None,
+                                 shard_bytes=None):
+        return cm.sharded_wire_upload_bytes(grad_bytes, m, codec,
+                                            shard_bytes)
+
     def cost_pipelined_plan(self, grad_bytes, n, m, limits, upload, starts,
-                            mults, run_fold, shard_bytes=None):
+                            mults, run_fold, shard_bytes=None, codec=None):
         """Pipelined entry, mirroring :meth:`program`: clients upload their
         M shards sequentially (availability = start + cumulative-PUT prefix
-        time), each shard's leaf folds launch/stream off the shard
-        keyspace, and each shard root chains on its leaf finishes."""
+        time, over *wire* sizes), each shard's leaf folds launch/stream off
+        the encoded shard keyspace, and each shard root chains on its leaf
+        finishes (raw partials)."""
+        cdc = get_codec(codec)
         sb = list(shard_bytes) if shard_bytes is not None \
             else cm.uniform_shard_bytes(grad_bytes, m)
-        cum = np.cumsum(sb)
+        wsb = [cdc.wire_bytes(b) for b in sb]
+        cum = np.cumsum(wsb)
         groups = cm.tree_groups(n, cm.lambda_fl_branching(n))
         for j in range(m):
             avail = [starts[i] + upload.upload_s(int(cum[j]), mults[i])
                      for i in range(n)]
             leaf_ends = [
                 run_fold([avail[i] for i in members],
-                         [sb[j]] * len(members), sb[j])
+                         [sb[j]] * len(members), sb[j],
+                         wire_b=[wsb[j]] * len(members),
+                         decode_s=cdc.decode_cost_s(sb[j]))
                 for members in groups]
             run_fold(leaf_ends, [sb[j]] * len(leaf_ends), sb[j])

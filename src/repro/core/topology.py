@@ -56,6 +56,9 @@ from repro.core import cost_model as cm
 from repro.core.agg_engine import ExecutionBackend, get_backend
 from repro.core.cost_model import UploadModel
 from repro.core.sharding import PartitionPlan, make_plan, reconstruct
+from repro.core.wire_codec import WireCodec, get_codec
+from repro.core.wire_codec import available_codecs  # noqa: F401  (re-export)
+from repro.core.wire_codec import register_codec    # noqa: F401  (re-export)
 from repro.serverless.event_sim import ReadAheadWindow, Timeline
 from repro.serverless.runtime import InvocationRecord, LambdaRuntime
 from repro.store import ObjectStore
@@ -151,6 +154,12 @@ class AggregationResult:
     engine: str = "streaming"
     schedule: str = "barrier"
     readahead_k: int = 1
+    # the wire codec contributions travelled under, and — for lossy
+    # codecs — the deterministic per-round max-abs deviation of avg_flat
+    # from the uncompressed streaming-mean reference (0.0 under identity:
+    # accuracy impact is observable, never silent)
+    codec: str = "identity"
+    codec_error: float = 0.0
     # absolute logical times on the session timeline (multi-round pipelining)
     round_start_s: float = 0.0
     round_end_s: float = 0.0
@@ -174,14 +183,18 @@ class AggregationResult:
 
 
 def _alloc_mb(in_bytes: int, limits: LambdaLimits,
-              readahead_k: int = 1, fanin: int | None = None) -> float:
+              readahead_k: int = 1, fanin: int | None = None,
+              wire_in_bytes: int | None = None,
+              weighted: bool = False) -> float:
     # the empirical 3x formula covers the 2-buffer fold plus the transient
     # GET copy; a readahead_k prefetch window needs (k+1) input buffers, so
-    # the allocation (and its billing) grows once k outgrows the formula —
-    # one shared definition with the analytical model's per-fold billing
-    mult = cm.readahead_alloc_mult(readahead_k, fanin, limits)
-    return cm.allocatable_memory_mb(
-        mult * in_bytes / MB + limits.runtime_overhead_mb, limits)
+    # the allocation (and its billing) grows once k outgrows the formula.
+    # A compressed wire codec shrinks the window's buffers to wire size
+    # (the accumulator — f64 when the fold is weighted — and the decode
+    # target stay full-size). One shared definition with the analytical
+    # model's per-fold billing.
+    return cm.wire_alloc_mb(in_bytes, limits, readahead_k, fanin,
+                            wire_in_bytes, weighted)
 
 
 # ---------------------------------------------------------------------------
@@ -200,7 +213,11 @@ class InvocationSpec:
     the store (LIFL fast path); ``shared_copy`` additionally mirrors the
     S3 output into shared memory (LIFL level 1 feeding colocated level 2);
     ``global_out`` marks the round's final output (colocated invocations
-    still PUT it to S3 for client read-back).
+    still PUT it to S3 for client read-back). ``wire_in_bytes`` is the
+    codec-encoded size of one input when this invocation reads encoded
+    client contributions (the client→aggregator hop); ``None`` means raw
+    f32 inputs (inter-aggregator partials, or the identity codec) and
+    keeps the legacy billing formula bit-for-bit.
     """
 
     fn_name: str
@@ -211,6 +228,7 @@ class InvocationSpec:
     colocated_in: bool = False
     shared_copy: bool = False
     global_out: bool = False
+    wire_in_bytes: int | None = None
 
 
 @dataclass(frozen=True)
@@ -232,13 +250,20 @@ class RoundProgram:
 
 @dataclass(frozen=True)
 class RoundSpec:
-    """Per-round scalars handed to :meth:`Topology.program`."""
+    """Per-round scalars handed to :meth:`Topology.program`.
+
+    ``codec`` is the resolved wire codec the round runs under; topologies
+    thread it through :func:`sharded_client_uploads` /
+    :func:`full_grad_uploads` so client PUTs carry encoded payloads and
+    the upload schedule carries wire bytes.
+    """
 
     rnd: int
     n: int
     grad_bytes: int
     limits: LambdaLimits
     options: Mapping[str, Any] = field(default_factory=dict)
+    codec: WireCodec = field(default_factory=get_codec)
 
     def opt(self, name: str, default=None):
         return self.options.get(name, default)
@@ -295,12 +320,32 @@ class Topology:
         return grad_bytes
 
     def cost_phase_plan(self, grad_bytes: int, n: int, m: int,
-                        limits: LambdaLimits) -> list:
+                        limits: LambdaLimits,
+                        codec: "cm.Codec" = None) -> list:
         """Sequential phases as (PhaseTiming, invocation_count) pairs —
         drives the generic :func:`repro.core.cost_model.round_cost`
-        fallback for registered topologies."""
+        fallback for registered topologies. ``codec`` is the resolved
+        wire codec; phases reading client contributions should price
+        wire-size GETs plus per-contribution decode."""
         raise NotImplementedError(
             f"topology {self.name!r} declares no round-cost model")
+
+    def cost_client_upload_bytes(self, grad_bytes: int, m: int = 1,
+                                 codec: "cm.Codec" = None,
+                                 shard_bytes=None) -> int:
+        """Total wire bytes one client PUTs per round. Default: one
+        encoded whole gradient; sharded topologies override to sum their
+        M independently encoded shards."""
+        return get_codec(codec).wire_bytes(grad_bytes)
+
+    def cost_wire_weighted(self) -> bool:
+        """True when the folds that read *encoded client contributions*
+        carry weights (an f64 running sum — one extra input buffer in the
+        compressed-wire memory bound of
+        :func:`repro.core.cost_model.wire_alloc_bytes`). Raw-input folds
+        higher up a tree don't matter here: the legacy 3× formula already
+        covers their f64 accumulator."""
+        return False
 
     def cost_collect_fanin(self, n: int, m: int = 1) -> int:
         """Widest aggregator fan-in — the contribution count behind the
@@ -323,14 +368,17 @@ class Topology:
 
     def cost_pipelined_plan(self, grad_bytes: int, n: int, m: int,
                             limits: LambdaLimits, upload, starts, mults,
-                            run_fold, shard_bytes=None) -> None:
+                            run_fold, shard_bytes=None,
+                            codec: "cm.Codec" = None) -> None:
         """Drive :func:`repro.core.cost_model.pipelined_round_cost` for a
         registered topology: compute per-input availability times from the
         jittered client plan (``starts``/``mults``) and call ``run_fold
         (avail_s, in_bytes, out_bytes)`` once per aggregator (its return
         value is the fold's finish time, so tree levels can chain).
         ``run_fold`` owns launch gating (read-ahead window), cold starts,
-        stalls, transfer/compute time and billing accumulation."""
+        stalls, transfer/compute time and billing accumulation; folds over
+        encoded client contributions pass ``wire_b``/``decode_s`` so
+        transfers move ``codec.wire_bytes`` and pay the decode."""
         raise NotImplementedError(
             f"topology {self.name!r} declares no pipelined round-cost "
             f"model")
@@ -489,6 +537,8 @@ def run_round(topology: str | Topology,
               client_ready_s: Sequence[float] | None = None,
               straggler_threshold_s: float | None = None,
               readahead_k: int | None = None,
+              codec: str | WireCodec | None = None,
+              track_codec_error: bool = True,
               **options) -> AggregationResult:
     """Execute one aggregation round of any registered topology.
 
@@ -501,6 +551,17 @@ def run_round(topology: str | Topology,
     stays strictly client-index order (bit-identity by construction). The
     barrier schedule has no frontier to run ahead of, so ``readahead_k``
     is inert there.
+
+    ``codec`` (env ``REPRO_AGG_CODEC``) selects the wire representation
+    of client contributions (:mod:`repro.core.wire_codec`): clients PUT
+    encoded payloads, the upload schedule and every GET/stall/billing
+    term see wire bytes, and aggregators decode-before-fold. With the
+    default ``identity`` codec this path is byte-for-byte the raw-f32
+    round; lossy codecs stay deterministic and report ``codec_error`` —
+    whose uncompressed reference costs an extra O(N·|θ|) host pass per
+    round, so throughput-bound sweeps can set
+    ``track_codec_error=False`` (``codec_error`` then reads NaN, never a
+    misleading 0.0).
     """
     topo = topology if isinstance(topology, Topology) \
         else get_topology(topology)
@@ -513,6 +574,7 @@ def run_round(topology: str | Topology,
     readahead = get_readahead(readahead_k)
     if barrier:
         readahead = 1
+    cdc = get_codec(codec)
     n = len(client_grads)
     limits = runtime.limits
     p0, g0 = store.stats.puts, store.stats.gets
@@ -520,7 +582,7 @@ def run_round(topology: str | Topology,
     base = _round_base(runtime, client_ready_s)
     spec = RoundSpec(rnd=rnd, n=n,
                      grad_bytes=int(np.asarray(client_grads[0]).nbytes),
-                     limits=limits, options=options)
+                     limits=limits, options=options, codec=cdc)
     prog = topo.program(client_grads, spec, backend)
 
     # -- client uploads: values land immediately, availability is modeled ----
@@ -541,7 +603,9 @@ def run_round(topology: str | Topology,
             # formula; _alloc_mb clamps the window to the fan-in
             inv_k = 1 if inv.colocated_in else readahead
             mem = _alloc_mb(inv.alloc_bytes, limits, inv_k,
-                            fanin=len(inv.in_keys))
+                            fanin=len(inv.in_keys),
+                            wire_in_bytes=inv.wire_in_bytes,
+                            weighted=inv.weights is not None)
             if barrier:
                 ph.invoke_reliable(
                     body, fn_name=inv.fn_name, memory_mb=mem,
@@ -587,8 +651,29 @@ def run_round(topology: str | Topology,
         memory_mb=max(r.memory_mb for r in recs),
         peak_memory_mb=max(r.peak_memory_mb for r in recs),
         engine=backend.name, schedule=sched, readahead_k=readahead,
+        codec=cdc.name,
+        codec_error=_codec_error(cdc, avg, client_grads)
+        if track_codec_error else float("nan"),
         round_start_s=base, round_end_s=round_end,
         client_done_s=client_done, limits=limits)
+
+
+def _codec_error(codec: WireCodec, avg: np.ndarray,
+                 client_grads: Sequence[np.ndarray]) -> float:
+    """Max-abs deviation of the round's average from the uncompressed
+    streaming-mean reference — the per-round accuracy cost of a lossy
+    wire codec, deterministic across engines, schedules and arrival
+    permutations (encode/decode are pure functions of the inputs).
+    Identity is 0.0 by definition (bit-identity holds by construction);
+    for tree topologies the reference's f32 left-fold differs from the
+    weighted f64 fold by ~1 ulp, which lossy-codec errors dwarf."""
+    if codec.lossless or avg.size == 0:
+        return 0.0
+    ref = np.asarray(client_grads[0], np.float32).copy()
+    for g in client_grads[1:]:
+        ref += np.asarray(g, np.float32)
+    ref /= np.float32(len(client_grads))
+    return float(np.max(np.abs(avg - ref)))
 
 
 # ---------------------------------------------------------------------------
@@ -612,21 +697,27 @@ def resolve_partition_plan(spec: RoundSpec, total_elems: int) -> PartitionPlan:
 
 
 def sharded_client_uploads(client_grads, rnd: int, plan: PartitionPlan,
-                           backend: ExecutionBackend):
+                           backend: ExecutionBackend,
+                           codec: WireCodec | None = None):
     """Per-client shard PUTs + upload schedule shared by every topology
     whose clients upload the GradsSharding N·M shard keyspace (Step 1+2;
-    zero-copy views under the batched engine). Returns
-    ``(client_puts, uploads, shard_bytes)``."""
+    zero-copy views under the batched engine). Each shard is encoded
+    through the round's wire ``codec`` before its PUT, and the upload
+    schedule carries *wire* bytes — under the identity codec both are
+    the raw values, byte-for-byte. Returns
+    ``(client_puts, uploads, shard_bytes, wire_shard_bytes)``."""
+    codec = get_codec(codec)
     m = plan.n_shards
     shard_bytes = [s * 4 for s in plan.shard_sizes()]
+    wire_bytes = [codec.wire_bytes(b) for b in shard_bytes]
     puts, uploads = [], []
     for i, g in enumerate(client_grads):
         flat = np.asarray(g, np.float32)
-        puts.extend((k_client_shard(rnd, i, j), sh)
+        puts.extend((k_client_shard(rnd, i, j), codec.encode(sh))
                     for j, sh in enumerate(backend.shard_values(flat, plan)))
-        uploads.append([(k_client_shard(rnd, i, j), shard_bytes[j])
+        uploads.append([(k_client_shard(rnd, i, j), wire_bytes[j])
                         for j in range(m)])
-    return tuple(puts), tuple(uploads), shard_bytes
+    return tuple(puts), tuple(uploads), shard_bytes, wire_bytes
 
 
 # ---------------------------------------------------------------------------
@@ -642,15 +733,16 @@ class GradsShardingTopology(Topology):
         plan = resolve_partition_plan(
             spec, int(np.asarray(client_grads[0]).size))
         m = plan.n_shards
-        puts, uploads, shard_bytes = sharded_client_uploads(
-            client_grads, rnd, plan, backend)
+        puts, uploads, shard_bytes, wire_bytes = sharded_client_uploads(
+            client_grads, rnd, plan, backend, codec=spec.codec)
 
         phase = tuple(
             InvocationSpec(
                 fn_name=f"r{rnd}-shard{j}",
                 in_keys=tuple(k_client_shard(rnd, i, j) for i in range(n)),
                 out_key=k_avg_shard(rnd, j),
-                alloc_bytes=shard_bytes[j])
+                alloc_bytes=shard_bytes[j],
+                wire_in_bytes=wire_bytes[j])
             for j in range(m))
         readback = tuple((k_avg_shard(rnd, j), shard_bytes[j])
                          for j in range(m))
@@ -676,15 +768,26 @@ class GradsShardingTopology(Topology):
     def cost_collect_fanin(self, n, m=1):
         return n                      # single-phase: every client's shard
 
+    def cost_client_upload_bytes(self, grad_bytes, m=1, codec=None,
+                                 shard_bytes=None):
+        return cm.sharded_wire_upload_bytes(grad_bytes, m, codec,
+                                            shard_bytes)
 
-def _full_grad_uploads(client_grads, rnd):
-    """Whole-gradient client PUTs shared by the tree topologies."""
+
+def full_grad_uploads(client_grads, rnd, codec: WireCodec | None = None):
+    """Whole-gradient client PUTs shared by the tree topologies: each
+    client's gradient is codec-encoded before its PUT and the upload
+    schedule carries wire bytes. Returns
+    ``(client_puts, uploads, grad_bytes, wire_grad_bytes)``."""
+    codec = get_codec(codec)
     grad_bytes = int(np.asarray(client_grads[0]).nbytes)
-    puts = tuple((k_client_grad(rnd, i), np.asarray(g, np.float32))
+    wire_grad_bytes = codec.wire_bytes(grad_bytes)
+    puts = tuple((k_client_grad(rnd, i),
+                  codec.encode(np.asarray(g, np.float32)))
                  for i, g in enumerate(client_grads))
-    uploads = tuple([(k_client_grad(rnd, i), grad_bytes)]
+    uploads = tuple([(k_client_grad(rnd, i), wire_grad_bytes)]
                     for i in range(len(client_grads)))
-    return puts, uploads, grad_bytes
+    return puts, uploads, grad_bytes, wire_grad_bytes
 
 
 @register_topology("lambda_fl")
@@ -693,7 +796,8 @@ class LambdaFLTopology(Topology):
 
     def program(self, client_grads, spec, backend):
         rnd, n = spec.rnd, spec.n
-        puts, uploads, grad_bytes = _full_grad_uploads(client_grads, rnd)
+        puts, uploads, grad_bytes, wire_grad = full_grad_uploads(
+            client_grads, rnd, codec=spec.codec)
         k = cm.lambda_fl_branching(n)
         groups = tree_groups(n, k)
         leaves = tuple(
@@ -701,7 +805,8 @@ class LambdaFLTopology(Topology):
                 fn_name=f"r{rnd}-leaf{leaf}",
                 in_keys=tuple(k_client_grad(rnd, i) for i in members),
                 out_key=k_partial(rnd, 1, leaf),
-                alloc_bytes=grad_bytes)
+                alloc_bytes=grad_bytes,
+                wire_in_bytes=wire_grad)
             for leaf, members in enumerate(groups))
         root = InvocationSpec(
             fn_name=f"r{rnd}-root",
@@ -742,7 +847,8 @@ class LIFLTopology(Topology):
     def program(self, client_grads, spec, backend):
         rnd, n = spec.rnd, spec.n
         colocated = bool(spec.opt("colocated", False))
-        puts, uploads, grad_bytes = _full_grad_uploads(client_grads, rnd)
+        puts, uploads, grad_bytes, wire_grad = full_grad_uploads(
+            client_grads, rnd, codec=spec.codec)
 
         b = cm.lifl_branching(n)
         phases = []
@@ -765,7 +871,9 @@ class LIFLTopology(Topology):
                     weights=tuple(level_weights[i] for i in members),
                     colocated_in=colocated and level >= 2,
                     shared_copy=colocated and level == 1,
-                    global_out=is_global))
+                    global_out=is_global,
+                    # only level 1 reads encoded client uploads
+                    wire_in_bytes=wire_grad if level == 1 else None))
                 out_keys.append(out_key)
                 out_weights.append(float(sum(level_weights[i]
                                              for i in members)))
@@ -791,6 +899,12 @@ class LIFLTopology(Topology):
     def cost_collect_fanin(self, n, m=1):
         l1, _ = cm.lifl_levels(n)
         return math.ceil(n / l1)
+
+    def cost_wire_weighted(self):
+        # every LIFL level folds with group-size weights — including
+        # level 1, which reads the encoded client gradients, so its
+        # compressed-wire memory bound must budget the f64 accumulator
+        return True
 
 
 # The hybrid plugin topology registers itself through the public API above;

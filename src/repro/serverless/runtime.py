@@ -226,6 +226,15 @@ class LambdaContext:
         self.compute_s += t
         self._advance(t)
 
+    def work(self, seconds: float) -> None:
+        """Model auxiliary CPU work at a caller-declared cost (e.g. a wire
+        codec's payload decode, whose throughput the codec — not the
+        accumulate constant — defines). Billed as compute time."""
+        if seconds <= 0.0:
+            return
+        self.compute_s += seconds
+        self._advance(seconds)
+
     def _advance(self, seconds: float) -> None:
         self.time_s += seconds
         if self.time_s > self.timeout_s:

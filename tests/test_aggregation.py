@@ -32,9 +32,12 @@ def test_gradssharding_bit_identical(m, partition):
     grads = _grads(20, 5_003)
     store, rt = ObjectStore(), LambdaRuntime()
     sizes = [1_000, 3, 4_000]  # tensor sizes for balanced
+    # identity codec pinned: exact equality to the raw reference is the
+    # identity wire format's contract (lossy codecs guarantee determinism
+    # + a reported codec_error instead)
     r = agg.aggregate_round("gradssharding", grads, rnd=0, store=store,
                             runtime=rt, n_shards=m, partition=partition,
-                            tensor_sizes=sizes)
+                            tensor_sizes=sizes, codec="identity")
     assert np.array_equal(r.avg_flat, _reference_mean(grads)), \
         "sharded averaging must be bit-identical to full-vector averaging"
 
@@ -44,7 +47,8 @@ def test_gradssharding_bit_identical(m, partition):
 def test_tree_topologies_equivalent(topology, n):
     grads = _grads(n, 2_048)
     store, rt = ObjectStore(), LambdaRuntime()
-    r = agg.aggregate_round(topology, grads, rnd=0, store=store, runtime=rt)
+    r = agg.aggregate_round(topology, grads, rnd=0, store=store, runtime=rt,
+                            codec="identity")
     # trees reassociate fp additions: mathematically equal, fp-tolerant
     np.testing.assert_allclose(r.avg_flat, _reference_mean(grads),
                                rtol=1e-5, atol=1e-6)
@@ -56,7 +60,8 @@ def test_all_three_agree():
     for topo in ("gradssharding", "lambda_fl", "lifl"):
         store, rt = ObjectStore(), LambdaRuntime()
         results[topo] = agg.aggregate_round(topo, grads, rnd=0, store=store,
-                                            runtime=rt, n_shards=4).avg_flat
+                                            runtime=rt, n_shards=4,
+                                            codec="identity").avg_flat
     np.testing.assert_allclose(results["gradssharding"],
                                results["lambda_fl"], rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(results["gradssharding"],
@@ -148,7 +153,7 @@ def test_aggregator_failure_retried_idempotently():
     faults = FaultPlan(fail={("r0-shard1", 0), ("r0-shard1", 1)})
     store, rt = ObjectStore(), LambdaRuntime(faults=faults)
     r = agg.aggregate_round("gradssharding", grads, rnd=0, store=store,
-                            runtime=rt, n_shards=4)
+                            runtime=rt, n_shards=4, codec="identity")
     assert np.array_equal(r.avg_flat, _reference_mean(grads))
     attempts = [rec for rec in rt.records if rec.fn_name == "r0-shard1"]
     assert len(attempts) == 3 and attempts[-1].failed is False
@@ -169,7 +174,7 @@ def test_straggler_speculative_duplicate():
     store, rt = ObjectStore(), LambdaRuntime(faults=faults)
     r = agg.aggregate_round("gradssharding", grads, rnd=0, store=store,
                             runtime=rt, n_shards=2,
-                            straggler_threshold_s=1.0)
+                            straggler_threshold_s=1.0, codec="identity")
     assert np.array_equal(r.avg_flat, _reference_mean(grads))
     spec = [rec for rec in rt.records if rec.speculative]
     assert spec, "speculative duplicate should have been launched"

@@ -30,7 +30,8 @@ def _loss_fn(params, batch):
 
 
 def run_federated(topology: str, rounds: int = 3, n_clients: int = 4,
-                  n_shards: int = 4, seed: int = 0, local_steps: int = 4):
+                  n_shards: int = 4, seed: int = 0, local_steps: int = 4,
+                  codec: str | None = None):
     params = cnn.init_params(jax.random.PRNGKey(seed), CFG)
     store, rt = ObjectStore(), LambdaRuntime()
     accs = []
@@ -50,7 +51,7 @@ def run_federated(topology: str, rounds: int = 3, n_clients: int = 4,
             f, spec = flatten(d)
             flats.append(np.asarray(f))
         r = agg.aggregate_round(topology, flats, rnd=rnd, store=store,
-                                runtime=rt, n_shards=n_shards)
+                                runtime=rt, n_shards=n_shards, codec=codec)
         params = apply_delta(params, unflatten(jnp.asarray(r.avg_flat),
                                                spec))
         test = DATA.batch(99, 999, 128)
@@ -66,9 +67,12 @@ def test_federated_training_improves():
 
 
 def test_topologies_produce_same_model():
-    p1, _ = run_federated("gradssharding", rounds=2)
-    p2, _ = run_federated("lambda_fl", rounds=2)
-    p3, _ = run_federated("lifl", rounds=2)
+    # cross-topology equality at 1e-4 is a raw-wire claim: under a lossy
+    # codec each topology encodes different objects (shards vs full
+    # gradients), so trajectories legitimately diverge by codec error
+    p1, _ = run_federated("gradssharding", rounds=2, codec="identity")
+    p2, _ = run_federated("lambda_fl", rounds=2, codec="identity")
+    p3, _ = run_federated("lifl", rounds=2, codec="identity")
     f1, _ = flatten(p1)
     f2, _ = flatten(p2)
     f3, _ = flatten(p3)
@@ -128,7 +132,8 @@ def test_lm_federated_round_with_transformer():
     for topo in ("gradssharding", "lambda_fl", "lifl"):
         store, rt = ObjectStore(), LambdaRuntime()
         outs[topo] = agg.aggregate_round(topo, flats, rnd=0, store=store,
-                                         runtime=rt, n_shards=4).avg_flat
+                                         runtime=rt, n_shards=4,
+                                         codec="identity").avg_flat
     np.testing.assert_allclose(outs["gradssharding"], outs["lambda_fl"],
                                rtol=1e-5, atol=1e-6)
     # applying the averaged delta must keep the model finite

@@ -400,7 +400,7 @@ def test_readahead_composes_with_faults_and_stragglers():
     r = agg.aggregate_round("gradssharding", grads, rnd=0, store=store,
                             runtime=rt, n_shards=4, schedule="pipelined",
                             upload=JITTER, straggler_threshold_s=1.0,
-                            readahead_k=4)
+                            readahead_k=4, codec="identity")
     acc = grads[0].astype(np.float32).copy()
     for g in grads[1:]:
         acc += g

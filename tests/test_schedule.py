@@ -136,7 +136,9 @@ def test_barrier_phase_matches_aggregator_timing():
     """Satellite: LambdaContext.get charges the per-GET latency, so a
     no-fault barrier phase equals cold start + aggregator_timing."""
     n, m, elems = 8, 4, 4_096                     # divisible: equal shards
-    r, rt, _ = _run("gradssharding", n=n, size=elems, n_shards=m)
+    # identity pinned: the closed-form timing below prices raw-f32 GETs
+    r, rt, _ = _run("gradssharding", n=n, size=elems, n_shards=m,
+                    codec="identity")
     shard_b = elems // m * 4
     t = cm.aggregator_timing(shard_b, n, shard_b, rt.limits)
     assert r.phases_s[0] == pytest.approx(
@@ -321,7 +323,8 @@ def test_faults_and_stragglers_compose_with_pipelined():
     store, rt = ObjectStore(), LambdaRuntime(faults=faults)
     r = agg.aggregate_round("gradssharding", grads, rnd=0, store=store,
                             runtime=rt, n_shards=4, schedule="pipelined",
-                            upload=JITTER, straggler_threshold_s=1.0)
+                            upload=JITTER, straggler_threshold_s=1.0,
+                            codec="identity")
     acc = grads[0].astype(np.float32).copy()
     for g in grads[1:]:
         acc += g

@@ -50,7 +50,8 @@ def test_session_kwarg_overrides_and_eager_validation():
 
 def test_session_injected_runtime_and_faults():
     faults = FaultPlan(fail={("r0-shard1", 0)})
-    session = FederatedSession(SessionConfig(n_shards=4), faults=faults)
+    session = FederatedSession(SessionConfig(n_shards=4, codec="identity"),
+                               faults=faults)
     grads = _grads()
     r = session.round(grads)
     acc = grads[0].copy()
