@@ -27,6 +27,7 @@ from benchmarks.common import record_invariant, table
 from repro.api import FederatedSession
 from repro.core import cost_model as cm
 from repro.core.cost_model import UploadModel
+from repro.serverless.faults import FaultModel
 
 N_CLIENTS = 8
 GRAD_ELEMS = 4_096
@@ -115,6 +116,64 @@ def main() -> None:
           ["topology", "engine", "schedule", "puts", "gets", "GB-s",
            "wall (s)", "avg hash"], rows)
     codec_axis(grads, hashes)
+    fault_axis(grads)
+
+
+# seeded disturbance model of the fault rows: dropout + upload stalls +
+# aggregator failures with exponential-backoff retries, all streams keyed
+# on (seed, round) so the gate replays bit-identically
+FAULTS = FaultModel(dropout_rate=0.2, stall_rate=0.2, stall_s=4.0,
+                    failure_rate=0.3, retry_backoff_s=0.5, seed=9)
+
+
+def fault_axis(grads) -> None:
+    """The fault-tolerance gate: seeded faulty rounds must replay exactly.
+
+    Three rows (gradssharding): a faulty pipelined round under dropout +
+    stalls + retries with partial participation, the same disturbance
+    under ``schedule="quorum"`` (the FedBuff-style semi-async fold), and
+    a deadline round that cuts stragglers at T. Each row gates the
+    delivered fraction, retry count, modeled wall/billing and the
+    averaged-gradient hash — plus cross-engine hash determinism (subset
+    folds are membership-level, so engines stay bit-identical).
+    """
+    rows = []
+    cases = (
+        ("faulty_pipelined",
+         dict(schedule="pipelined", faults=FAULTS, participation_k=6)),
+        ("faulty_quorum",
+         dict(schedule="quorum", quorum=4, faults=FAULTS,
+              participation_k=6)),
+        ("deadline",
+         dict(schedule="pipelined", faults=FAULTS, deadline_s=4.0)),
+    )
+    for name, knobs in cases:
+        per_engine = set()
+        for engine in ENGINES:
+            session = FederatedSession(
+                topology="gradssharding", n_shards=N_SHARDS, engine=engine,
+                upload=UPLOAD, readahead_k=1, codec="identity", **knobs)
+            r = session.round(grads)
+            per_engine.add(_avg_hash(r))
+        billed = sum(rec.billed_gb_s for rec in r.records)
+        tag = f"smoke/fault/{name}"
+        record_invariant(f"{tag}/delivered_fraction",
+                         round(r.delivered_fraction, 12))
+        record_invariant(f"{tag}/n_arrivals", len(r.arrivals))
+        record_invariant(f"{tag}/retries", r.retries)
+        record_invariant(f"{tag}/puts", r.puts)
+        record_invariant(f"{tag}/gets", r.gets)
+        record_invariant(f"{tag}/billed_gb_s", round(billed, 12))
+        record_invariant(f"{tag}/wall_s", round(r.wall_clock_s, 12))
+        record_invariant(f"{tag}/avg_sha256", next(iter(per_engine)))
+        record_invariant(f"{tag}/engine_deterministic",
+                         len(per_engine) == 1)
+        rows.append([name, f"{r.delivered_fraction:.3f}", r.retries,
+                     r.puts, r.gets, f"{billed:.4f}",
+                     f"{r.wall_clock_s:.3f}", len(per_engine) == 1])
+    table("Fault axis (gradssharding, seeded disturbances)",
+          ["case", "delivered", "retries", "puts", "gets", "GB-s",
+           "wall (s)", "engine-det"], rows)
 
 
 def codec_axis(grads, raw_hashes) -> None:

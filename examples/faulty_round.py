@@ -1,0 +1,90 @@
+"""A round that survives faults: dropout, a stalled upload, a retried
+aggregator — and still delivers the exact mean over the survivors.
+
+The seeded :class:`~repro.serverless.faults.FaultModel` drives every
+disturbance: ~10% of the sampled participants drop out before uploading,
+some uploads stall, and aggregator invocations die at launch with the
+configured probability (the runtime retries with exponential backoff and
+idempotent first-write-wins PUTs, so a retried round is still correct).
+The result reports the degradation honestly: ``delivered_fraction``,
+``dropped``/``late``, ``retries`` — and ``avg_flat`` equals the plain
+mean over the arrivals' gradients, on every engine.
+
+Run:  PYTHONPATH=src python examples/faulty_round.py \
+          [--seed 9 --schedule pipelined --deadline-s 8 --quorum 12]
+"""
+import argparse
+
+import numpy as np
+
+from repro import FederatedSession, SessionConfig
+from repro.core import cost_model as cm
+from repro.core.cost_model import UploadModel
+from repro.serverless.faults import FaultModel
+
+N_CLIENTS, M, GRAD_SIZE = 20, 4, 50_000
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=9,
+                    help="FaultModel seed (every disturbance stream is "
+                         "deterministic given the seed and round)")
+    ap.add_argument("--schedule", default="pipelined",
+                    choices=["barrier", "pipelined", "quorum"])
+    ap.add_argument("--participation-k", type=int, default=16,
+                    help="sample K of the 20-client cohort per round")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="aggregate whatever landed by T (cuts stragglers)")
+    ap.add_argument("--quorum", type=int, default=None,
+                    help="with --schedule quorum: fold fires on the q-th "
+                         "arrival, in arrival order (semi-async FedBuff)")
+    ap.add_argument("--rounds", type=int, default=3)
+    args = ap.parse_args(argv)
+    if args.schedule == "quorum" and args.quorum is None:
+        args.quorum = 12
+
+    faults = FaultModel(dropout_rate=0.10, stall_rate=0.15, stall_s=6.0,
+                        failure_rate=0.30, retry_backoff_s=0.5,
+                        seed=args.seed)
+    session = FederatedSession(SessionConfig(
+        topology="gradssharding", n_shards=M, schedule=args.schedule,
+        upload=UploadModel(mbps=16.0, jitter_s=3.0, rate_jitter=0.5,
+                           seed=11),
+        faults=faults, participation_k=args.participation_k,
+        deadline_s=args.deadline_s, quorum=args.quorum))
+
+    rng = np.random.default_rng(0)
+    grads = [rng.standard_normal(GRAD_SIZE).astype(np.float32)
+             for _ in range(N_CLIENTS)]
+
+    print(f"cohort N={N_CLIENTS}, K={args.participation_k} sampled/round, "
+          f"schedule={args.schedule}, fault seed={args.seed}")
+    e_deliver = cm.expected_deliveries(N_CLIENTS, args.participation_k,
+                                       faults.dropout_rate)
+    print(f"expected deliveries/round: {e_deliver:.1f}, "
+          f"expected attempts/invocation: "
+          f"{cm.expected_attempts(faults.failure_rate):.3f}\n")
+
+    for r in session.run(lambda rnd: grads, rounds=args.rounds):
+        survivors = np.mean(np.stack([grads[i] for i in r.arrivals]),
+                            axis=0).astype(np.float32)
+        exact = np.allclose(r.avg_flat, survivors, rtol=1e-6)
+        rnd = session.rounds_run - 1
+        print(f"round {rnd}: delivered {len(r.arrivals)}/"
+              f"{len(r.participants)} "
+              f"({r.delivered_fraction:.0%}), dropped={list(r.dropped)}, "
+              f"late={list(r.late)}, retries={r.retries}, "
+              f"wall={r.wall_clock_s:.2f}s, survivor-mean exact: {exact}")
+        assert exact
+
+    print(f"\nsession: wall={session.session_wall_s:.2f}s, "
+          f"total cost=${session.total_cost():.6f} "
+          f"(lambda ${session.lambda_cost():.6f} + "
+          f"s3 ${session.s3_cost():.6f})")
+    print("every failed attempt was retried and billed; the averages "
+          "above are bit-exact over each round's survivors.")
+
+
+if __name__ == "__main__":
+    main()

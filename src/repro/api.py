@@ -36,8 +36,10 @@ import numpy as np
 from repro.config import LambdaLimits
 from repro.core.cost_model import UploadModel
 from repro.core.topology import (AggregationResult, available_topologies,
-                                 get_codec, get_topology, round_prefix,
-                                 run_round)
+                                 get_codec, get_schedule, get_topology,
+                                 round_prefix, run_round,
+                                 validate_fault_knobs)
+from repro.serverless.faults import FaultModel
 from repro.serverless.runtime import FaultPlan, LambdaRuntime
 from repro.store import ObjectStore
 
@@ -85,6 +87,20 @@ class SessionConfig:
     local_compute_s: float = 0.0
     colocated: bool = False              # LIFL shared-memory fast path
     straggler_threshold_s: float | None = None
+    # -- fault-tolerant rounds ------------------------------------------------
+    # seeded disturbance model (client dropout, upload stalls, aggregator
+    # invocation failures + retry backoff); None = fault-free. The model
+    # also seeds the participation stream.
+    faults: FaultModel | None = None
+    # sample K of N cohort clients per round (seeded stream); None = all N
+    participation_k: int | None = None
+    # aggregate whatever landed by round start + deadline_s; stragglers
+    # past the cut are excluded and the average divides by the arrivals
+    deadline_s: float | None = None
+    # with schedule="quorum": the FedBuff-style semi-async fold fires once
+    # this many contributions arrived, folding them in arrival order (a
+    # documented, seeded departure from barrier/pipelined bit-identity)
+    quorum: int | None = None
     limits: LambdaLimits | None = None
     warm_pool_size: int | None = None
     keep_records: bool = True
@@ -125,9 +141,29 @@ class FederatedSession:
         config = config or SessionConfig()
         if overrides:
             config = replace(config, **overrides)
+        if isinstance(faults, FaultModel):
+            # a seeded FaultModel drives membership (dropout/participation)
+            # through the round driver, not just the runtime — promote it
+            # to the config so both layers see it
+            if config.faults is not None:
+                raise ValueError(
+                    "FaultModel given twice: SessionConfig.faults and the "
+                    "faults= keyword; configure one")
+            config = replace(config, faults=faults)
+            faults = None
         self.config = config
         self.topology = get_topology(config.topology)   # fail fast
         get_codec(config.codec)                         # fail fast too
+        # fail fast on bad fault/participation/deadline/quorum combos
+        # (cohort-size-dependent bounds re-check per round)
+        validate_fault_knobs(get_schedule(config.schedule),
+                             participation_k=config.participation_k,
+                             deadline_s=config.deadline_s,
+                             quorum=config.quorum, faults=config.faults)
+        if faults is not None and config.faults is not None:
+            raise ValueError(
+                "cannot combine SessionConfig.faults (a seeded FaultModel) "
+                "with an injected FaultPlan; configure one fault source")
         self.store = store if store is not None else ObjectStore()
         if runtime is not None:
             # an injected runtime already fixed these; silently dropping
@@ -144,7 +180,7 @@ class FederatedSession:
             self.runtime = runtime
         else:
             self.runtime = LambdaRuntime(
-                limits=config.limits, faults=faults,
+                limits=config.limits, faults=faults or config.faults,
                 warm_pool_size=config.warm_pool_size)
         self.rounds_run = 0
         self._client_ready: tuple | None = None
@@ -172,6 +208,8 @@ class FederatedSession:
             straggler_threshold_s=cfg.straggler_threshold_s,
             readahead_k=cfg.readahead_k, codec=cfg.codec,
             track_codec_error=cfg.track_codec_error,
+            faults=cfg.faults, participation_k=cfg.participation_k,
+            deadline_s=cfg.deadline_s, quorum=cfg.quorum,
             **cfg.round_options())
         self._observe(result)
         if not cfg.keep_records:

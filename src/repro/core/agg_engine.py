@@ -63,6 +63,16 @@ and readahead_k for a fixed codec** (lossy codecs are deterministic);
 only ``codec="identity"`` additionally guarantees bit-identity to the
 uncompressed reference — with it the codec layer is byte-for-byte
 invisible.
+
+**Fault-tolerant rounds (subset folds).** Dropout, partial participation,
+deadlines and the quorum schedule (:mod:`repro.serverless.faults`) are
+handled entirely at the round-driver level: the driver builds the
+aggregation program over the *surviving* membership, so engines see an
+ordinary N'-client round — group sizes, weights and the divide-by-N'
+normalization all follow from the program, and no engine carries
+fault-awareness. Consequently a faulty round's ``avg_flat`` equals the
+plain mean over the survivors' gradients and remains bit-identical
+across engines for a fixed survivor set and fold order.
 """
 from __future__ import annotations
 

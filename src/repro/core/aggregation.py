@@ -98,9 +98,16 @@ def aggregate_round(topology: str, client_grads: Sequence[np.ndarray], *,
                     readahead_k: int | None = None,
                     codec: str | WireCodec | None = None,
                     track_codec_error: bool = True,
+                    faults=None,
+                    participation_k: int | None = None,
+                    deadline_s: float | None = None,
+                    quorum: int | None = None,
                     **kw) -> AggregationResult:
     """One aggregation round of any registered topology (functional form
-    of :meth:`repro.api.FederatedSession.round`)."""
+    of :meth:`repro.api.FederatedSession.round`). The fault-tolerance
+    knobs (``faults``/``participation_k``/``deadline_s``/``quorum``)
+    mirror :class:`repro.api.SessionConfig`; see
+    :func:`repro.core.topology.run_round`."""
     return run_round(
         topology, client_grads, rnd=rnd, store=store, runtime=runtime,
         engine=engine, schedule=schedule, upload=upload,
@@ -108,6 +115,8 @@ def aggregate_round(topology: str, client_grads: Sequence[np.ndarray], *,
         straggler_threshold_s=straggler_threshold_s,
         readahead_k=readahead_k, codec=codec,
         track_codec_error=track_codec_error,
+        faults=faults, participation_k=participation_k,
+        deadline_s=deadline_s, quorum=quorum,
         n_shards=n_shards, partition=partition, tensor_sizes=tensor_sizes,
         **kw)
 

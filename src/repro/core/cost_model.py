@@ -35,7 +35,7 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.config import AGG_COMPUTE_BPS, LambdaLimits
+from repro.config import AGG_COMPUTE_BPS, DEFAULT_LIMITS, LambdaLimits
 from repro.core.wire_codec import WireCodec, get_codec
 from repro.serverless.event_sim import ReadAheadWindow
 
@@ -807,3 +807,67 @@ def round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
     s3_cost = ops.puts * limits.s3_put_price + ops.gets * limits.s3_get_price
     return RoundCost(topology, n, m, grad_bytes, wall, gb_s, lam_cost,
                      s3_cost, ops, mem_mb, n_inv, ok, tuple(timings))
+
+
+# ---------------------------------------------------------------------------
+# Fault-tolerant round analytics
+# ---------------------------------------------------------------------------
+# Analytical counterparts of the seeded disturbance machinery
+# (repro.serverless.faults.FaultModel + LambdaRuntime.invoke_reliable):
+# expected attempt counts, the expected wall-clock stretch a retrying
+# phase pays, the extra GB-s billed by failed attempts, and the expected
+# arrival count under partial participation + dropout. All take the
+# *per-attempt* failure probability (FaultModel.failure_rate); a failed
+# attempt dies before its body runs, billing half a cold start (the
+# runtime's die-midway model), and its replacement always cold-starts
+# because a crash evicts the family's warm container.
+
+
+def expected_attempts(failure_rate: float, max_attempts: int = 3) -> float:
+    """Expected invocation-attempt count of one ``invoke_reliable`` call:
+    attempt ``k`` launches iff the first ``k`` attempts all failed, so
+    ``E = sum_k p^k`` for ``k in range(max_attempts)`` (= 1.0 when
+    fault-free)."""
+    p = float(failure_rate)
+    if not 0.0 <= p < 1.0:
+        raise ValueError(f"failure_rate must be in [0, 1), got {p!r}")
+    return sum(p ** k for k in range(int(max_attempts)))
+
+
+def expected_retry_delay_s(failure_rate: float,
+                           limits: LambdaLimits = DEFAULT_LIMITS,
+                           backoff_s: float = 0.0,
+                           max_attempts: int = 3) -> float:
+    """Expected start-time stretch of one reliable invocation: the ``j``-th
+    failure (probability ``p^j``) delays the winning attempt by the dead
+    attempt's half-cold-start plus the exponential backoff wait
+    ``backoff_s * 2^(j-1)``."""
+    p = float(failure_rate)
+    dead_s = 0.5 * limits.cold_start_s
+    return sum(p ** j * (dead_s + backoff_s * 2.0 ** (j - 1))
+               for j in range(1, int(max_attempts)))
+
+
+def expected_retry_gb_s(memory_mb: float, failure_rate: float,
+                        limits: LambdaLimits = DEFAULT_LIMITS,
+                        max_attempts: int = 3) -> float:
+    """Expected *extra* GB-s one reliable invocation bills for its failed
+    attempts (each dies after half a cold start at the full allocation) —
+    the retry term of the fault-tolerance cost overhead."""
+    p = float(failure_rate)
+    e_failures = sum(p ** j for j in range(1, int(max_attempts)))
+    return memory_mb / 1024.0 * 0.5 * limits.cold_start_s * e_failures
+
+
+def expected_deliveries(n: int, participation_k: int | None = None,
+                        dropout_rate: float = 0.0) -> float:
+    """Expected number of client contributions that reach the fold under
+    per-round sampling (``participation_k`` of ``n``) and independent
+    dropout — the numerator of the expected ``delivered_fraction``."""
+    k = n if participation_k is None else int(participation_k)
+    if not 1 <= k <= n:
+        raise ValueError(f"participation_k must be in [1, {n}], got {k}")
+    if not 0.0 <= dropout_rate <= 1.0:
+        raise ValueError(
+            f"dropout_rate must be in [0, 1], got {dropout_rate!r}")
+    return k * (1.0 - float(dropout_rate))

@@ -59,8 +59,11 @@ from repro.core.sharding import PartitionPlan, make_plan, reconstruct
 from repro.core.wire_codec import WireCodec, get_codec
 from repro.core.wire_codec import available_codecs  # noqa: F401  (re-export)
 from repro.core.wire_codec import register_codec    # noqa: F401  (re-export)
-from repro.serverless.event_sim import ReadAheadWindow, Timeline
-from repro.serverless.runtime import InvocationRecord, LambdaRuntime
+from repro.serverless.event_sim import ReadAheadWindow, Timeline, \
+    arrival_order
+from repro.serverless.faults import FaultModel
+from repro.serverless.runtime import FaultPlan, InvocationRecord, \
+    LambdaRuntime
 from repro.store import ObjectStore
 
 MB = 1024 * 1024
@@ -72,13 +75,20 @@ Engine = str | ExecutionBackend | None
 # Schedules
 # ---------------------------------------------------------------------------
 
-SCHEDULES = ("barrier", "pipelined")
+SCHEDULES = ("barrier", "pipelined", "quorum")
 DEFAULT_SCHEDULE = "barrier"
 
 
 def get_schedule(schedule: str | None = None) -> str:
     """Resolve the schedule knob: a name, or ``None``/"auto" (env
-    ``REPRO_AGG_SCHEDULE``, else ``"barrier"``)."""
+    ``REPRO_AGG_SCHEDULE``, else ``"barrier"``).
+
+    ``"quorum"`` is the FedBuff-style semi-async mode: the round fires
+    once ``quorum`` contributions have arrived, folds them **in arrival
+    order**, and excludes stragglers beyond the cut — a documented,
+    seeded departure from the barrier/pipelined bit-identity contract
+    (fold order follows the seeded arrival times, not client index).
+    """
     if schedule is None or schedule == "auto":
         schedule = os.environ.get("REPRO_AGG_SCHEDULE", DEFAULT_SCHEDULE)
     if schedule not in SCHEDULES:
@@ -107,6 +117,69 @@ def get_readahead(readahead_k: int | str | None = None) -> int:
     if k < 1:
         raise ValueError(f"readahead_k must be >= 1, got {k}")
     return k
+
+
+def validate_fault_knobs(schedule: str, *,
+                         participation_k: int | None = None,
+                         deadline_s: float | None = None,
+                         quorum: int | None = None,
+                         faults: "FaultModel | None" = None,
+                         n_clients: int | None = None) -> None:
+    """Up-front validation of the fault-tolerance knob combinations.
+
+    Called eagerly by :class:`repro.api.FederatedSession` (without a
+    cohort size) and again by :func:`run_round` (with one), so a bad
+    combination fails with a clear ``ValueError`` instead of a
+    deep-in-driver surprise. Rules:
+
+      * ``participation_k`` — int >= 1, and <= the cohort size when known;
+      * ``deadline_s`` — strictly positive (the round must be able to
+        deliver *something*); composes with every schedule: a barrier
+        round whose stragglers miss the deadline starts aggregating at
+        ``T`` over the arrivals, pipelined/quorum rounds cut membership;
+      * ``quorum`` — requires ``schedule="quorum"`` (a count-gated fold
+        frontier is meaningless under a barrier), int >= 1, and bounded
+        by the participant count when known; conversely
+        ``schedule="quorum"`` requires an explicit ``quorum``;
+      * ``faults`` — a :class:`~repro.serverless.faults.FaultModel`
+        (rates already validated by its constructor) or ``None``.
+    """
+    if participation_k is not None:
+        if int(participation_k) != participation_k or participation_k < 1:
+            raise ValueError(
+                f"participation_k must be an integer >= 1, got "
+                f"{participation_k!r}")
+        if n_clients is not None and participation_k > n_clients:
+            raise ValueError(
+                f"participation_k={participation_k} exceeds the cohort "
+                f"size ({n_clients} clients)")
+    if deadline_s is not None and not deadline_s > 0.0:
+        raise ValueError(
+            f"deadline_s must be > 0 (a round must be able to deliver "
+            f"at least one contribution), got {deadline_s!r}")
+    if schedule == "quorum":
+        if quorum is None:
+            raise ValueError(
+                "schedule='quorum' requires an explicit quorum= (the "
+                "contribution count that fires the fold)")
+    elif quorum is not None:
+        raise ValueError(
+            f"quorum={quorum} requires schedule='quorum' (got "
+            f"schedule={schedule!r}: a count-gated fold frontier has no "
+            f"meaning under a barrier or plain pipelined round)")
+    if quorum is not None:
+        if int(quorum) != quorum or quorum < 1:
+            raise ValueError(f"quorum must be an integer >= 1, got "
+                             f"{quorum!r}")
+        cap = participation_k if participation_k is not None else n_clients
+        if cap is not None and quorum > cap:
+            raise ValueError(
+                f"quorum={quorum} exceeds the participant count ({cap})")
+    if faults is not None and not hasattr(faults, "dropout_plan"):
+        raise TypeError(
+            f"faults must be a repro.serverless.faults.FaultModel (got "
+            f"{type(faults).__name__}); raw FaultPlan schedules attach to "
+            f"the runtime, not the round driver")
 
 
 # ---------------------------------------------------------------------------
@@ -164,6 +237,20 @@ class AggregationResult:
     round_start_s: float = 0.0
     round_end_s: float = 0.0
     client_done_s: tuple = ()            # per-client read-back completion
+    # fault-tolerant rounds: the cohort indices invited this round, the
+    # subset actually folded (in fold order — arrival order under
+    # schedule="quorum", index order otherwise), seeded dropouts, clients
+    # cut by the deadline/quorum, the delivered fraction
+    # (len(arrivals) / len(participants)) and the count of failed
+    # aggregator attempts that were retried. A fault-free full-
+    # participation round reads participants == arrivals == 0..n-1,
+    # delivered_fraction == 1.0, retries == 0.
+    participants: tuple = ()
+    arrivals: tuple = ()
+    dropped: tuple = ()
+    late: tuple = ()
+    delivered_fraction: float = 1.0
+    retries: int = 0
     # the platform limits this round was simulated (and is priced) under —
     # keeps per-round dollar figures consistent with the session's totals
     # when SessionConfig.limits overrides the defaults
@@ -437,30 +524,56 @@ class _UploadTimes:
     span_end_s: float                    # max end over clients
 
 
-def _register_uploads(runtime: LambdaRuntime, upload: UploadModel | None,
-                      n: int, rnd: int, base_s: float,
-                      client_ready_s: Sequence[float] | None,
-                      key_bytes: Sequence[Sequence[tuple]]) -> _UploadTimes:
-    """Model client uploads: per-client local compute, then start jitter,
-    then sequential PUTs in ``key_bytes`` order at the client's (jittered)
-    uplink rate. Each PUT's completion is pushed as an availability-publish
-    event and the heap drained, so keys become readable in deterministic
-    time order."""
+def _upload_schedule(upload: UploadModel | None, members: Sequence[int],
+                     n_cohort: int, rnd: int, base_s: float,
+                     client_ready_s: Sequence[float] | None,
+                     key_bytes: Sequence[Sequence[tuple]],
+                     stall_s: Sequence[float] | None = None
+                     ) -> tuple[_UploadTimes, list]:
+    """Pure per-client upload timing: local compute, then start jitter
+    (plus any injected stall), then sequential PUTs in ``key_bytes`` order
+    at the client's (jittered) uplink rate.
+
+    ``members`` are the *cohort indices* of the uploading clients (the
+    full cohort, or the fault-tolerant driver's surviving subset);
+    ``key_bytes`` is position-indexed (parallel to ``members``). Jitter /
+    compute / rate draws are always taken over the full ``n_cohort`` so a
+    client keeps its own draw regardless of who else participates — the
+    determinism contract behind the seeded dropout/participation streams.
+    Returns the per-position :class:`_UploadTimes` plus the per-position
+    ``[(key, completion_time), ...]`` PUT schedules; no runtime state is
+    touched, so the fault-tolerant driver can probe arrival times before
+    committing to a membership (:func:`_publish_uploads` then registers
+    the chosen schedule's availability events).
+    """
     upload = upload or UploadModel()
-    starts, mults = upload.plan(n, rnd)
-    computes = upload.compute_plan(n, rnd)
-    t_start, t_end = [], []
-    for i in range(n):
+    starts, mults = upload.plan(n_cohort, rnd)
+    computes = upload.compute_plan(n_cohort, rnd)
+    t_start, t_end, put_times = [], [], []
+    for pos, i in enumerate(members):
         ready = base_s if client_ready_s is None else float(client_ready_s[i])
         t = ready + float(computes[i]) + float(starts[i])
+        if stall_s is not None and stall_s[i]:
+            t += float(stall_s[i])
         t_start.append(t)
-        for key, nb in key_bytes[i]:
+        puts = []
+        for key, nb in key_bytes[pos]:
             t += upload.upload_s(nb, float(mults[i]))
-            runtime.sim.at(t, runtime.avail.publish, key, t)
+            puts.append((key, t))
+        put_times.append(puts)
         t_end.append(t)
+    member_mults = np.asarray([float(mults[i]) for i in members])
+    return _UploadTimes(t_start, t_end, member_mults,
+                        max(t_end, default=base_s)), put_times
+
+
+def _publish_uploads(runtime: LambdaRuntime, put_times: Sequence) -> None:
+    """Push every PUT completion as an availability-publish event and
+    drain the heap, so keys become readable in deterministic time order."""
+    for puts in put_times:
+        for key, t in puts:
+            runtime.sim.at(t, runtime.avail.publish, key, t)
     runtime.sim.drain()
-    return _UploadTimes(t_start, t_end, mults,
-                        max(t_end, default=base_s))
 
 
 def _readback_times(sched: str, runtime: LambdaRuntime,
@@ -529,6 +642,28 @@ def _build_body(backend: ExecutionBackend, store: ObjectStore, shared: dict,
     return body
 
 
+_NO_FAULTS = FaultModel()   # seeds participation sampling when faults=None
+
+
+def _bind_runtime_faults(runtime: LambdaRuntime, fm: FaultModel) -> None:
+    """Attach the round's :class:`FaultModel` to the runtime's
+    invocation-failure hook (the runtime is the single source of truth
+    for per-attempt failures, slowdowns and retry backoff). Binding is
+    idempotent across a session's rounds; a runtime that already carries
+    a different, non-empty fault configuration is a conflict — silently
+    preferring either side would make a fault study measure the wrong
+    thing."""
+    cur = runtime.faults
+    if cur is fm:
+        return
+    if isinstance(cur, FaultPlan) and cur.is_empty:
+        runtime.faults = fm
+        return
+    raise ValueError(
+        "run_round(faults=...) conflicts with the runtime's existing "
+        "fault configuration; configure faults in exactly one place")
+
+
 def run_round(topology: str | Topology,
               client_grads: Sequence[np.ndarray], *, rnd: int,
               store: ObjectStore, runtime: LambdaRuntime,
@@ -539,6 +674,10 @@ def run_round(topology: str | Topology,
               readahead_k: int | None = None,
               codec: str | WireCodec | None = None,
               track_codec_error: bool = True,
+              faults: FaultModel | None = None,
+              participation_k: int | None = None,
+              deadline_s: float | None = None,
+              quorum: int | None = None,
               **options) -> AggregationResult:
     """Execute one aggregation round of any registered topology.
 
@@ -562,6 +701,30 @@ def run_round(topology: str | Topology,
     round, so throughput-bound sweeps can set
     ``track_codec_error=False`` (``codec_error`` then reads NaN, never a
     misleading 0.0).
+
+    The fault-tolerance knobs degrade the round gracefully instead of
+    assuming the all-N fault-free best case:
+
+      * ``faults`` — a seeded :class:`~repro.serverless.faults
+        .FaultModel`; its dropout/stall streams shape the upload
+        timeline, and its invocation-failure stream is bound to the
+        runtime (idempotent retries with exponential backoff).
+      * ``participation_k`` — sample K of N cohort clients per round
+        from the model's seeded participation stream.
+      * ``deadline_s`` — aggregate whatever landed by ``round start +
+        deadline_s``; stragglers past the cut are excluded and the
+        round is only declared complete at the deadline when someone
+        was cut.
+      * ``quorum`` (with ``schedule="quorum"``) — the FedBuff-style
+        semi-async mode: the fold covers the first ``quorum`` arrivals
+        **in arrival order** (deterministic ``(time, index)``
+        tie-breaking from the seeded upload plan) — a documented
+        departure from the barrier/pipelined bit-identity contract.
+
+    In every case the program is built over the surviving subset, so the
+    average divides by the number of *arrivals*, never the cohort size,
+    and tree weights reflect the delivered group sizes. With all knobs
+    off this path is bit-for-bit the legacy fault-free round.
     """
     topo = topology if isinstance(topology, Topology) \
         else get_topology(topology)
@@ -576,25 +739,89 @@ def run_round(topology: str | Topology,
         readahead = 1
     cdc = get_codec(codec)
     n = len(client_grads)
+    validate_fault_knobs(sched, participation_k=participation_k,
+                         deadline_s=deadline_s, quorum=quorum,
+                         faults=faults, n_clients=n)
     limits = runtime.limits
     p0, g0 = store.stats.puts, store.stats.gets
     rec_start = len(runtime.records)
     base = _round_base(runtime, client_ready_s)
-    spec = RoundSpec(rnd=rnd, n=n,
-                     grad_bytes=int(np.asarray(client_grads[0]).nbytes),
-                     limits=limits, options=options, codec=cdc)
-    prog = topo.program(client_grads, spec, backend)
+
+    # -- membership: participation sampling, dropout, stalls -----------------
+    if faults is not None:
+        _bind_runtime_faults(runtime, faults)
+    if participation_k is not None and participation_k < n:
+        participants = list((faults or _NO_FAULTS)
+                            .participants(n, rnd, participation_k))
+    else:
+        participants = list(range(n))
+    dropped: tuple = ()
+    stalls = None
+    order = participants
+    if faults is not None:
+        drop = faults.dropout_plan(n, rnd)
+        dropped = tuple(i for i in participants if drop[i])
+        order = [i for i in participants if not drop[i]]
+        st = faults.stall_plan(n, rnd)
+        if st.any():
+            stalls = st
+    if not order:
+        detail = "" if faults is None else (
+            f" (dropout_rate={faults.dropout_rate}, seed={faults.seed})")
+        raise RuntimeError(f"round {rnd}: no active participants{detail}")
+
+    def build(members):
+        """Program + pure upload schedule over one membership (cohort
+        indices). Nothing here touches runtime or store state, so the
+        fault-tolerant path can probe arrival times before committing."""
+        sub = [client_grads[i] for i in members]
+        spec = RoundSpec(rnd=rnd, n=len(members),
+                         grad_bytes=int(np.asarray(sub[0]).nbytes),
+                         limits=limits, options=options, codec=cdc)
+        prog = topo.program(sub, spec, backend)
+        up, put_times = _upload_schedule(
+            upload, members, n, rnd, base, client_ready_s, prog.uploads,
+            stalls)
+        return sub, prog, up, put_times
+
+    sub, prog, up, put_times = build(order)
+
+    # -- deadline / quorum cut on the probed arrival times -------------------
+    late: tuple = ()
+    deadline_abs = None if deadline_s is None else base + float(deadline_s)
+    if deadline_abs is not None or sched == "quorum":
+        keep = arrival_order(up.end_s, quorum=quorum,
+                             deadline_s=deadline_abs)
+        if not keep:
+            raise RuntimeError(
+                f"round {rnd}: no client upload completed by the deadline "
+                f"({deadline_s:.3f} s) — nothing to aggregate")
+        if sched != "quorum":
+            keep.sort()           # a deadline alone never reorders the fold
+        kept = [order[pos] for pos in keep]
+        kept_set = set(kept)
+        late = tuple(i for i in order if i not in kept_set)
+        if kept != order:
+            # membership shrank (or the quorum reordered the fold):
+            # rebuild over the survivors. The probe's puts were never
+            # stored and its events never registered, so only this final
+            # program touches runtime/store state.
+            order = kept
+            sub, prog, up, put_times = build(order)
 
     # -- client uploads: values land immediately, availability is modeled ----
     for key, value in prog.client_puts:
         store.put(key, value)
-    up = _register_uploads(runtime, upload, n, rnd, base, client_ready_s,
-                           prog.uploads)
+    _publish_uploads(runtime, put_times)
 
     # -- aggregation phases ---------------------------------------------------
     shared: dict = {}
     handles = []
     prev_end = max(base, up.span_end_s)
+    if barrier and late and deadline_abs is not None:
+        # stragglers were cut: the barrier only learns membership at T
+        prev_end = max(prev_end, deadline_abs)
+    first_start = prev_end
     for phase in prog.phases:
         ph = runtime.phase(start_s=prev_end if barrier else base)
         for inv in phase:
@@ -624,8 +851,12 @@ def run_round(topology: str | Topology,
         prev_end = runtime.finish_phase(ph, barrier=barrier)
         handles.append(ph)
     agg_end = prev_end
+    if not barrier and late and deadline_abs is not None:
+        # a cut round is only known complete at the deadline itself
+        agg_end = max(agg_end, deadline_abs)
+        runtime.advance_to(agg_end)
     if barrier:
-        wall = (up.span_end_s - base) + sum(ph.wall_s for ph in handles)
+        wall = (first_start - base) + sum(ph.wall_s for ph in handles)
         phases = tuple(ph.wall_s for ph in handles)
     else:
         wall = agg_end - base
@@ -633,13 +864,27 @@ def run_round(topology: str | Topology,
     backend.end_round(store)
 
     # -- client read-back (N-1 redundant sweeps batch-accounted in O(1)) -----
+    # the whole cohort reads the round result back (next round's local
+    # training needs it), so read-back op counts stay at cohort size even
+    # when the fold covered a subset
     values = [store.get(key) for key, _nb in prog.readback]
     if n > 1:
         for key, _nb in prog.readback:
             store.account_gets(key, n - 1)
     avg = np.asarray(prog.collect(values))
-    client_done = _readback_times(sched, runtime, upload, up,
+    member_done = _readback_times(sched, runtime, upload, up,
                                   prog.readback, agg_end)
+    if order == list(range(n)):
+        client_done = member_done
+    else:
+        # excluded clients re-sync when the aggregate lands (they rejoin
+        # the next round from there); delivered members keep their
+        # modeled download timelines. member_done is fold-position
+        # indexed, so remap to cohort indices for the session threading.
+        done = [agg_end] * n
+        for pos, i in enumerate(order):
+            done[i] = member_done[pos]
+        client_done = tuple(done)
     round_end = max(agg_end, max(client_done, default=agg_end))
     runtime.advance_to(round_end)
 
@@ -652,10 +897,15 @@ def run_round(topology: str | Topology,
         peak_memory_mb=max(r.peak_memory_mb for r in recs),
         engine=backend.name, schedule=sched, readahead_k=readahead,
         codec=cdc.name,
-        codec_error=_codec_error(cdc, avg, client_grads)
+        codec_error=_codec_error(cdc, avg, sub)
         if track_codec_error else float("nan"),
         round_start_s=base, round_end_s=round_end,
-        client_done_s=client_done, limits=limits)
+        client_done_s=client_done,
+        participants=tuple(participants), arrivals=tuple(order),
+        dropped=dropped, late=late,
+        delivered_fraction=len(order) / len(participants),
+        retries=sum(1 for r in recs if r.failed and not r.speculative),
+        limits=limits)
 
 
 def _codec_error(codec: WireCodec, avg: np.ndarray,

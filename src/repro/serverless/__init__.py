@@ -1,5 +1,6 @@
 from repro.serverless.event_sim import AvailabilityMap, Event, EventSim, \
-    ReadAheadWindow, Timeline
+    ReadAheadWindow, Timeline, arrival_order
+from repro.serverless.faults import FaultModel, fault_model_from_env
 from repro.serverless.runtime import (
     FaultPlan,
     InjectedFault,
@@ -12,8 +13,8 @@ from repro.serverless.runtime import (
     fn_family,
 )
 
-__all__ = ["AvailabilityMap", "Event", "EventSim", "FaultPlan",
+__all__ = ["AvailabilityMap", "Event", "EventSim", "FaultModel", "FaultPlan",
            "InjectedFault", "InvocationRecord", "LambdaContext", "LambdaOOM",
            "LambdaRuntime", "LambdaTimeout", "PhaseHandle",
            "ReadAheadWindow", "Timeline",
-           "fn_family"]
+           "arrival_order", "fault_model_from_env", "fn_family"]

@@ -236,6 +236,28 @@ class ReadAheadWindow:
         self.frontier += 1
 
 
+def arrival_order(avail_s, *, quorum: int | None = None,
+                  deadline_s: float | None = None) -> list[int]:
+    """Deterministic arrival cut for the quorum/deadline round drivers.
+
+    Returns the indices of ``avail_s`` sorted by ``(time, index)`` — the
+    same tie-breaking discipline as the event heap and the read-ahead
+    window — restricted to arrivals at or before ``deadline_s`` (when
+    given) and truncated to the first ``quorum`` (when given). This is
+    the FedBuff-style frontier rule: the fold fires on the ``quorum``-th
+    buffered contribution, in arrival order, and stragglers beyond the
+    cut are excluded from the round.
+    """
+    order = sorted(range(len(avail_s)), key=lambda j: (avail_s[j], j))
+    if deadline_s is not None:
+        order = [j for j in order if avail_s[j] <= deadline_s]
+    if quorum is not None:
+        if quorum < 1:
+            raise ValueError(f"quorum must be >= 1, got {quorum}")
+        order = order[:int(quorum)]
+    return order
+
+
 class AvailabilityMap:
     """Key -> earliest time the object under that key is readable.
 

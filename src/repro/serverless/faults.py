@@ -1,0 +1,162 @@
+"""Seeded fault model for fault-tolerant aggregation rounds.
+
+Production serverless FL treats client dropout, upload stalls and Lambda
+invocation failures as the norm (FedLess builds failure handling into its
+aggregator; IBM's adaptive aggregation advances on a participation quorum
+rather than a barrier). :class:`FaultModel` is the single seeded source of
+every such disturbance the simulator injects:
+
+  * **participation sampling** — ``participants(n, rnd, k)`` draws the K
+    of N clients invited to a round (``SessionConfig.participation_k``);
+  * **client dropout** — ``dropout_plan(n, rnd)`` marks participants that
+    never start their upload (device died / went offline mid-round);
+  * **upload stalls** — ``stall_plan(n, rnd)`` adds a fixed extra delay
+    before a stalled client's first PUT (a network brown-out);
+  * **aggregator invocation failures** — ``failure(fn_name, attempt)``
+    kills a Lambda attempt at launch (the cold-start/invocation failure
+    mode FedLess reports as dominant); the runtime retries with
+    ``retry_backoff_s``-exponential backoff and first-write-wins PUTs
+    keep retries idempotent.
+
+Every stream is deterministic and *independent*:
+
+  * per-client draws are keyed by the client's **cohort index** (streams
+    ``[seed, rnd, STREAM]`` of cohort length), so client ``i``'s fate is
+    the same whether or not other clients are sampled, and adding one
+    stream never perturbs another — the same discipline as
+    :meth:`repro.core.cost_model.UploadModel.plan` / ``compute_plan``;
+  * per-invocation failure draws are keyed by ``(seed, crc32(fn_name),
+    attempt)``, so they are independent of invocation *order* (barrier
+    vs pipelined vs quorum replay the same failures).
+
+``failure`` injects at most ``max_failures`` consecutive failures per
+invocation, and validation keeps ``max_failures`` below the runtime's
+retry budget — a seeded faulty round always completes (the simulator
+asserts graceful degradation, not crash loops).
+
+The model duck-types :class:`repro.serverless.runtime.FaultPlan`
+(``failure``/``slowdown``/``retry_backoff_s``), so it plugs straight into
+``LambdaRuntime(faults=...)``; the round driver binds it there itself
+when handed one (see ``run_round(faults=...)``).
+"""
+from __future__ import annotations
+
+import os
+import zlib
+from dataclasses import dataclass
+
+import numpy as np
+
+# per-round substream ids (UploadModel owns [seed, rnd] and [seed, rnd, 1])
+_S_PARTICIPATION = 11
+_S_DROPOUT = 12
+_S_STALL = 13
+# failure draws are round-free: fn_name already carries the round prefix
+_S_FAILURE = 14
+
+#: the runtime retries up to this many attempts (LambdaRuntime.invoke_reliable)
+MAX_ATTEMPTS = 3
+
+
+@dataclass(frozen=True)
+class FaultModel:
+    """Seeded, deterministic disturbance generator for one session.
+
+    All rates are probabilities in ``[0, 1]``; every field defaults to
+    "off", and an all-default model is a strict no-op (zero-fault rounds
+    stay bit-identical to the fault-free driver path).
+    """
+
+    dropout_rate: float = 0.0      # P(a participant never uploads)
+    stall_rate: float = 0.0        # P(a participant's upload stalls)
+    stall_s: float = 0.0           # extra seconds a stalled upload waits
+    failure_rate: float = 0.0      # P(an aggregator attempt dies at launch)
+    max_failures: int = MAX_ATTEMPTS - 1   # consecutive failures injected, cap
+    retry_backoff_s: float = 0.0   # base backoff before a retry (doubles)
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        for name in ("dropout_rate", "stall_rate", "failure_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"FaultModel.{name} must be in [0, 1], "
+                                 f"got {v!r}")
+        if self.stall_s < 0.0 or self.retry_backoff_s < 0.0:
+            raise ValueError("FaultModel.stall_s/retry_backoff_s must be "
+                             ">= 0")
+        if not 0 <= self.max_failures < MAX_ATTEMPTS:
+            raise ValueError(
+                f"FaultModel.max_failures must be in [0, {MAX_ATTEMPTS - 1}] "
+                f"(the runtime retries {MAX_ATTEMPTS} attempts, and a seeded "
+                f"round must always complete), got {self.max_failures!r}")
+
+    # -- seeded per-round streams -------------------------------------------
+    def participants(self, n: int, rnd: int, k: int) -> tuple:
+        """The K of N cohort indices invited to round ``rnd`` (sorted)."""
+        if not 1 <= k <= n:
+            raise ValueError(f"participation_k must be in [1, {n}], got {k}")
+        if k == n:
+            return tuple(range(n))
+        rng = np.random.default_rng([self.seed, rnd, _S_PARTICIPATION])
+        return tuple(sorted(rng.choice(n, size=k, replace=False).tolist()))
+
+    def dropout_plan(self, n: int, rnd: int) -> np.ndarray:
+        """Boolean dropout flags keyed by cohort index."""
+        if self.dropout_rate <= 0.0:
+            return np.zeros(n, dtype=bool)
+        rng = np.random.default_rng([self.seed, rnd, _S_DROPOUT])
+        return rng.random(n) < self.dropout_rate
+
+    def stall_plan(self, n: int, rnd: int) -> np.ndarray:
+        """Per-client extra upload delay (seconds) keyed by cohort index."""
+        if self.stall_rate <= 0.0 or self.stall_s <= 0.0:
+            return np.zeros(n)
+        rng = np.random.default_rng([self.seed, rnd, _S_STALL])
+        return np.where(rng.random(n) < self.stall_rate, self.stall_s, 0.0)
+
+    # -- FaultPlan interface (consumed by LambdaRuntime) ---------------------
+    def failure(self, fn_name: str, attempt: int) -> bool:
+        """Whether this (invocation, attempt) dies at launch. Keyed by the
+        function name (not call order), so barrier/pipelined/quorum replays
+        inject identical failures; capped at ``max_failures`` consecutive
+        deaths so retry always converges."""
+        if self.failure_rate <= 0.0 or attempt >= self.max_failures:
+            return False
+        rng = np.random.default_rng(
+            [self.seed, _S_FAILURE, zlib.crc32(fn_name.encode()), attempt])
+        return bool(rng.random() < self.failure_rate)
+
+    def slowdown(self, fn_name: str, attempt: int) -> float:
+        return 1.0
+
+    @property
+    def is_empty(self) -> bool:
+        return (self.dropout_rate <= 0.0 and self.stall_rate <= 0.0
+                and self.failure_rate <= 0.0 and self.retry_backoff_s <= 0.0)
+
+
+def fault_model_from_env(env: str = "REPRO_AGG_FAULTS",
+                         seed: int = 0) -> FaultModel | None:
+    """Opt-in env resolution of a fault model for tests and examples.
+
+    ``REPRO_AGG_FAULTS`` unset/empty/``off``/``0`` -> ``None`` (no faults);
+    ``on`` -> a canonical nonzero model (the CI fault matrix job); a float
+    ``r`` -> dropout/stall/failure all at rate ``r``. Sessions never read
+    this env themselves — injected faults change walls and billing, so
+    fault injection is strictly explicit (``SessionConfig.faults``); this
+    helper just gives the opt-in callers one shared spelling.
+    """
+    raw = os.environ.get(env, "").strip().lower()
+    if raw in ("", "off", "0", "0.0", "false", "none"):
+        return None
+    if raw in ("on", "true", "1"):
+        return FaultModel(dropout_rate=0.1, stall_rate=0.1, stall_s=4.0,
+                          failure_rate=0.25, retry_backoff_s=0.5, seed=seed)
+    try:
+        rate = float(raw)
+    except ValueError:
+        raise ValueError(
+            f"{env} must be 'on', 'off' or a rate in [0, 1], got {raw!r}"
+        ) from None
+    return FaultModel(dropout_rate=rate, stall_rate=rate, stall_s=4.0,
+                      failure_rate=rate, retry_backoff_s=0.5, seed=seed)

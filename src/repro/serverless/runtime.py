@@ -79,16 +79,28 @@ class InjectedFault(RuntimeError):
 
 @dataclass
 class FaultPlan:
-    """Deterministic fault/straggler schedule keyed by (function, attempt)."""
+    """Deterministic fault/straggler schedule keyed by (function, attempt).
+
+    ``retry_backoff_s`` is the base wait before a failed attempt is
+    re-launched (doubling per further failure); 0.0 is the legacy
+    retry-immediately-at-death semantics. The probabilistic counterpart —
+    :class:`repro.serverless.faults.FaultModel` — duck-types this
+    interface, so either can drive a :class:`LambdaRuntime`.
+    """
 
     fail: set = field(default_factory=set)        # {(fn_name, attempt_idx)}
     slow: dict = field(default_factory=dict)      # {(fn_name, attempt_idx): x}
+    retry_backoff_s: float = 0.0
 
     def failure(self, fn_name: str, attempt: int) -> bool:
         return (fn_name, attempt) in self.fail
 
     def slowdown(self, fn_name: str, attempt: int) -> float:
         return self.slow.get((fn_name, attempt), 1.0)
+
+    @property
+    def is_empty(self) -> bool:
+        return not self.fail and not self.slow and self.retry_backoff_s <= 0.0
 
 
 @dataclass
@@ -375,6 +387,7 @@ class LambdaRuntime:
 
         failed = False
         result = None
+        raised: Exception | None = None
         try:
             if self.faults.failure(fn_name, attempt):
                 # die midway: half the work billed, no output written
@@ -383,6 +396,12 @@ class LambdaRuntime:
             result = fn(ctx)
         except InjectedFault:
             failed = True
+        except Exception as exc:
+            # a body that raises (OOM, timeout, a bug) is still a crashed
+            # container: bill the accrued duration, mark the record failed,
+            # and re-raise after the finally block finishes accounting
+            failed = True
+            raised = exc
         finally:
             slow = self.faults.slowdown(fn_name, attempt)
             # the straggler multiplier stretches *work* (cold start, I/O,
@@ -405,6 +424,13 @@ class LambdaRuntime:
             self.records.append(rec)
             self._billed_gb_s += rec.billed_gb_s
         if failed:
+            # the container died with the attempt: release its warm-pool
+            # slot so the retry (or the family's next round) cold-starts
+            # instead of inheriting a phantom warm container
+            self._warm.pop(fn_family(fn_name), None)
+        if raised is not None:
+            raise raised
+        if failed:
             return None, rec
         return result, rec
 
@@ -417,13 +443,16 @@ class LambdaRuntime:
 
         Retries are safe because aggregators write with first-write-wins
         conditional PUTs (idempotent); a retry launches when its failed
-        predecessor dies (``start_s`` chains through ``end_s``). If the
+        predecessor dies (``start_s`` chains through ``end_s``), plus the
+        fault plan's ``retry_backoff_s`` doubling per further failure
+        (0.0 — the default — is the legacy immediate relaunch). If the
         attempt's modeled duration exceeds ``straggler_threshold_s``, a
         speculative duplicate is launched and the faster of the two defines
         wall-clock (the paper's cold-start-variance mitigation, Kim et al.
         [26]).
         """
         last = None
+        backoff = getattr(self.faults, "retry_backoff_s", 0.0)
         start = self.now if start_s is None else float(start_s)
         for attempt in range(max_attempts):
             result, rec = self.invoke(fn, fn_name=fn_name,
@@ -443,7 +472,10 @@ class LambdaRuntime:
                             dup_rec.duration_s < rec.duration_s:
                         return dup, dup_rec
                 return result, rec
-            start = rec.end_s                 # retry launches after the death
+            # retry launches after the death, plus exponential backoff
+            start = rec.end_s
+            if backoff > 0.0:
+                start += backoff * (2.0 ** attempt)
         raise RuntimeError(
             f"{fn_name}: all {max_attempts} attempts failed ({last})")
 

@@ -1,0 +1,467 @@
+"""Fault-tolerant rounds: seeded dropout/stall/failure injection, retries
+with backoff, round deadlines, partial participation and the quorum-gated
+semi-async fold.
+
+The contracts under test:
+
+  * **determinism** — every seeded stream replays bit-identically: same
+    seed => identical participant set, dropout set, retry timeline, fold
+    order and ``avg_flat`` bits across engines and topologies; different
+    seeds => different participant sets.
+  * **zero-fault no-op** — an all-default ``FaultModel`` (and every knob
+    left ``None``) reproduces the fault-free driver path bit-for-bit.
+  * **subset-fold correctness** — for any surviving membership the round
+    average equals the plain mean over the survivors' gradients, on all
+    three engines (membership is program-level; engines stay unaware).
+  * **graceful degradation** — injected aggregator failures retry (with
+    exponential backoff) and the round always completes within the
+    runtime's attempt budget; the result reports ``delivered_fraction``,
+    ``retries``, ``dropped``/``late`` honestly.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # bare env: deterministic fallback
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
+
+from repro.api import FederatedSession, SessionConfig
+from repro.core import cost_model as cm
+from repro.core.topology import run_round, validate_fault_knobs
+from repro.serverless import FaultModel, FaultPlan, LambdaRuntime, \
+    fault_model_from_env
+from repro.store import ObjectStore
+
+ENGINES = ("streaming", "batched", "incremental")
+TOPOLOGIES = ("gradssharding", "lambda_fl", "lifl", "sharded_tree")
+
+UPLOAD = cm.UploadModel(mbps=16.0, jitter_s=3.0, rate_jitter=0.5, seed=11)
+FAULTS = FaultModel(dropout_rate=0.2, stall_rate=0.2, stall_s=4.0,
+                    failure_rate=0.3, retry_backoff_s=0.5, seed=9)
+
+
+def _grads(n=8, elems=512, seed=1234):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal(elems).astype(np.float32) for _ in range(n)]
+
+
+def _round(grads, **over):
+    cfg = dict(topology="gradssharding", n_shards=4, schedule="pipelined",
+               upload=UPLOAD, readahead_k=1, codec="identity")
+    cfg.update(over)
+    return FederatedSession(SessionConfig(**cfg)).round(grads)
+
+
+def _survivor_mean(grads, result):
+    return np.mean(np.stack([grads[i] for i in result.arrivals]),
+                   axis=0).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# FaultModel streams
+# ---------------------------------------------------------------------------
+
+class TestFaultModelStreams:
+    def test_participants_deterministic_and_seed_sensitive(self):
+        fm = FaultModel(seed=3)
+        a = fm.participants(20, 5, 8)
+        assert a == fm.participants(20, 5, 8)
+        assert a == tuple(sorted(a)) and len(set(a)) == 8
+        assert all(0 <= i < 20 for i in a)
+        others = {FaultModel(seed=s).participants(20, 5, 8)
+                  for s in range(10)}
+        assert len(others) > 1          # different seeds => different sets
+
+    def test_participants_full_cohort_identity(self):
+        assert FaultModel(seed=1).participants(6, 0, 6) == tuple(range(6))
+
+    def test_dropout_and_stall_streams_independent(self):
+        fm = FaultModel(dropout_rate=0.5, stall_rate=0.5, stall_s=2.0,
+                        seed=4)
+        drop = fm.dropout_plan(64, 1)
+        assert np.array_equal(drop, fm.dropout_plan(64, 1))
+        # stall stream must not perturb the dropout stream (separate keys)
+        assert np.array_equal(
+            drop, dataclasses.replace(fm, stall_rate=0.9).dropout_plan(64, 1))
+        st_plan = fm.stall_plan(64, 1)
+        assert set(np.unique(st_plan)) <= {0.0, 2.0}
+
+    def test_failure_keyed_by_name_not_order(self):
+        fm = FaultModel(failure_rate=0.5, seed=5)
+        names = [f"r3-shard{j}" for j in range(32)]
+        fates = [fm.failure(nm, 0) for nm in names]
+        assert fates == [fm.failure(nm, 0) for nm in reversed(names)][::-1]
+        assert any(fates) and not all(fates)
+
+    def test_failure_capped_below_retry_budget(self):
+        fm = FaultModel(failure_rate=1.0, seed=0)   # always-fail rate ...
+        assert fm.failure("r0-x", 0) and fm.failure("r0-x", 1)
+        assert not fm.failure("r0-x", 2)            # ... capped at 2 deaths
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="dropout_rate"):
+            FaultModel(dropout_rate=1.5)
+        with pytest.raises(ValueError, match="stall_s"):
+            FaultModel(stall_s=-1.0)
+        with pytest.raises(ValueError, match="max_failures"):
+            FaultModel(max_failures=3)
+        with pytest.raises(ValueError):
+            FaultModel(seed=0).participants(4, 0, 5)
+
+    def test_is_empty(self):
+        assert FaultModel().is_empty
+        assert not FAULTS.is_empty
+
+
+class TestEnvResolution:
+    def test_off_spellings(self, monkeypatch):
+        for raw in ("", "off", "0", "false", "none"):
+            monkeypatch.setenv("REPRO_AGG_FAULTS", raw)
+            assert fault_model_from_env() is None
+        monkeypatch.delenv("REPRO_AGG_FAULTS")
+        assert fault_model_from_env() is None
+
+    def test_on_and_rate(self, monkeypatch):
+        monkeypatch.setenv("REPRO_AGG_FAULTS", "on")
+        fm = fault_model_from_env(seed=2)
+        assert fm is not None and not fm.is_empty and fm.seed == 2
+        monkeypatch.setenv("REPRO_AGG_FAULTS", "0.35")
+        fm = fault_model_from_env()
+        assert fm.dropout_rate == fm.failure_rate == pytest.approx(0.35)
+        monkeypatch.setenv("REPRO_AGG_FAULTS", "bogus")
+        with pytest.raises(ValueError, match="REPRO_AGG_FAULTS"):
+            fault_model_from_env()
+
+
+# ---------------------------------------------------------------------------
+# Knob validation
+# ---------------------------------------------------------------------------
+
+class TestKnobValidation:
+    def test_participation_bounds(self):
+        with pytest.raises(ValueError, match="participation_k"):
+            validate_fault_knobs("pipelined", participation_k=0)
+        with pytest.raises(ValueError, match="participation_k"):
+            validate_fault_knobs("pipelined", participation_k=9, n_clients=8)
+
+    def test_deadline_positive(self):
+        with pytest.raises(ValueError, match="deadline_s"):
+            validate_fault_knobs("pipelined", deadline_s=0.0)
+
+    def test_quorum_schedule_coupling(self):
+        with pytest.raises(ValueError, match="quorum"):
+            validate_fault_knobs("pipelined", quorum=3)     # not quorum sched
+        with pytest.raises(ValueError, match="quorum"):
+            validate_fault_knobs("quorum")                  # knob missing
+        with pytest.raises(ValueError, match="quorum"):
+            validate_fault_knobs("quorum", quorum=9, n_clients=8)
+        with pytest.raises(ValueError, match="quorum"):
+            validate_fault_knobs("quorum", quorum=5, participation_k=4,
+                                 n_clients=8)
+
+    def test_faults_must_be_a_fault_model(self):
+        with pytest.raises(TypeError, match="FaultModel"):
+            validate_fault_knobs("pipelined", faults=FaultPlan())
+
+    def test_session_validates_eagerly(self):
+        with pytest.raises(ValueError, match="quorum"):
+            FederatedSession(SessionConfig(schedule="barrier", quorum=3))
+        with pytest.raises(ValueError, match="deadline_s"):
+            FederatedSession(SessionConfig(deadline_s=-1.0))
+
+    def test_session_rejects_two_fault_sources(self):
+        with pytest.raises(ValueError, match="one"):
+            FederatedSession(SessionConfig(faults=FAULTS), faults=FAULTS)
+        with pytest.raises(ValueError, match="exactly one place"):
+            rt = LambdaRuntime(faults=FaultPlan(fail={("r0-x", 0)}))
+            run_round("gradssharding", _grads(4), rnd=0, store=ObjectStore(),
+                      runtime=rt, faults=FAULTS, n_shards=2)
+
+    def test_runtime_faultmodel_keyword_promotes_to_config(self):
+        # a FaultModel passed via the faults= keyword must drive membership
+        # (dropout/participation), not just runtime failures
+        s = FederatedSession(topology="gradssharding", n_shards=2,
+                             schedule="pipelined", upload=UPLOAD,
+                             faults=FAULTS, participation_k=6)
+        r = s.round(_grads())
+        assert r.participants == FAULTS.participants(8, 0, 6)
+
+
+# ---------------------------------------------------------------------------
+# Zero-fault paths stay bit-identical
+# ---------------------------------------------------------------------------
+
+class TestZeroFaultNoOp:
+    @pytest.mark.parametrize("schedule", ("barrier", "pipelined"))
+    def test_empty_fault_model_is_invisible(self, schedule):
+        grads = _grads()
+        ref = _round(grads, schedule=schedule)
+        r = _round(grads, schedule=schedule, faults=FaultModel(seed=99))
+        assert np.array_equal(ref.avg_flat, r.avg_flat)
+        assert ref.wall_clock_s == r.wall_clock_s
+        assert ref.puts == r.puts and ref.gets == r.gets
+        assert sum(x.billed_gb_s for x in ref.records) == \
+            sum(x.billed_gb_s for x in r.records)
+        assert r.delivered_fraction == 1.0 and r.retries == 0
+        assert r.participants == tuple(range(8)) == r.arrivals
+
+    def test_full_participation_k_is_invisible(self):
+        grads = _grads()
+        ref = _round(grads)
+        r = _round(grads, participation_k=8)
+        assert np.array_equal(ref.avg_flat, r.avg_flat)
+        assert ref.wall_clock_s == r.wall_clock_s
+
+    def test_loose_deadline_is_invisible(self):
+        grads = _grads()
+        ref = _round(grads)
+        r = _round(grads, deadline_s=1e6)
+        assert np.array_equal(ref.avg_flat, r.avg_flat)
+        assert ref.wall_clock_s == r.wall_clock_s and r.late == ()
+
+    def test_full_quorum_zero_jitter_matches_pipelined(self):
+        # without upload jitter arrivals are index-ordered, so a full
+        # quorum is exactly the pipelined round, bit for bit
+        grads = _grads()
+        ref = _round(grads, upload=None)
+        r = _round(grads, upload=None, schedule="quorum", quorum=8)
+        assert np.array_equal(ref.avg_flat, r.avg_flat)
+        assert ref.wall_clock_s == r.wall_clock_s
+
+
+# ---------------------------------------------------------------------------
+# Faulty rounds: determinism + honest accounting
+# ---------------------------------------------------------------------------
+
+class TestFaultyRoundDeterminism:
+    @pytest.mark.parametrize("topology", TOPOLOGIES)
+    def test_same_seed_identical_everything(self, topology):
+        grads = _grads()
+        opts = dict(topology=topology, faults=FAULTS, participation_k=6)
+        if topology not in ("gradssharding", "sharded_tree"):
+            opts.pop("n_shards", None)
+        runs = [_round(grads, **opts) for _ in range(2)]
+        a, b = runs
+        assert a.participants == b.participants
+        assert a.dropped == b.dropped and a.arrivals == b.arrivals
+        assert np.array_equal(a.avg_flat, b.avg_flat)
+        assert a.wall_clock_s == b.wall_clock_s
+        assert a.retries == b.retries
+        assert a.delivered_fraction == b.delivered_fraction
+        # full retry timeline replays: (name, attempt, start, end, failed)
+        tl = lambda r: [(x.fn_name, x.attempt, x.start_s, x.end_s, x.failed)
+                        for x in r.records]
+        assert tl(a) == tl(b)
+
+    def test_engines_bit_identical_under_faults(self):
+        grads = _grads()
+        avgs = {_round(grads, engine=e, faults=FAULTS, participation_k=6)
+                .avg_flat.tobytes() for e in ENGINES}
+        assert len(avgs) == 1
+
+    def test_different_seeds_different_participants(self):
+        grads = _grads(n=16)
+        seen = {_round(grads, faults=FaultModel(seed=s),
+                       participation_k=8).participants for s in range(8)}
+        assert len(seen) > 1
+
+    def test_faulty_average_is_survivor_mean(self):
+        grads = _grads()
+        r = _round(grads, faults=FAULTS, participation_k=6)
+        assert 0.0 < r.delivered_fraction <= 1.0
+        assert set(r.dropped).isdisjoint(r.arrivals)
+        np.testing.assert_allclose(r.avg_flat, _survivor_mean(grads, r),
+                                   rtol=1e-6)
+
+    def test_retries_bill_and_backoff_delays(self):
+        grads = _grads()
+        fm = dataclasses.replace(FAULTS, dropout_rate=0.0, stall_rate=0.0)
+        r = _round(grads, faults=fm)
+        assert r.retries > 0            # seed 9 injects failures
+        failed = [x for x in r.records if x.failed]
+        assert all(x.billed_gb_s > 0.0 for x in failed)
+        # the retry relaunches after the death plus the backoff wait
+        for f in failed:
+            nxt = next(x for x in r.records
+                       if x.fn_name == f.fn_name
+                       and x.attempt == f.attempt + 1)
+            assert nxt.start_s == pytest.approx(
+                f.end_s + fm.retry_backoff_s * 2.0 ** f.attempt)
+            assert nxt.cold_start   # the crash evicted the warm container
+
+    def test_all_dropped_raises(self):
+        grads = _grads(4)
+        with pytest.raises(RuntimeError, match="no active participants"):
+            _round(grads, faults=FaultModel(dropout_rate=1.0, seed=1))
+
+
+class TestDeadline:
+    def test_deadline_excludes_stragglers(self):
+        grads = _grads()
+        r = _round(grads, faults=FAULTS, deadline_s=4.0)
+        assert r.late != ()                      # seed 9 stalls stragglers
+        assert set(r.late).isdisjoint(r.arrivals)
+        assert r.delivered_fraction < 1.0
+        np.testing.assert_allclose(r.avg_flat, _survivor_mean(grads, r),
+                                   rtol=1e-6)
+        # a cut round is only known complete at the deadline
+        assert r.wall_clock_s >= 4.0
+
+    def test_deadline_alone_preserves_index_fold_order(self):
+        grads = _grads()
+        r = _round(grads, faults=FAULTS, deadline_s=4.0)
+        assert list(r.arrivals) == sorted(r.arrivals)
+
+    def test_impossible_deadline_raises(self):
+        grads = _grads()
+        with pytest.raises(RuntimeError, match="deadline"):
+            _round(grads, deadline_s=1e-9)
+
+    @pytest.mark.parametrize("schedule", ("barrier", "pipelined"))
+    def test_deadline_deterministic_across_schedules(self, schedule):
+        grads = _grads()
+        a = _round(grads, schedule=schedule, faults=FAULTS, deadline_s=4.0)
+        b = _round(grads, schedule=schedule, faults=FAULTS, deadline_s=4.0)
+        assert np.array_equal(a.avg_flat, b.avg_flat)
+        assert a.late == b.late and a.wall_clock_s == b.wall_clock_s
+
+
+class TestQuorum:
+    def test_quorum_takes_first_q_arrivals(self):
+        grads = _grads()
+        r = _round(grads, schedule="quorum", quorum=5)
+        assert len(r.arrivals) == 5
+        assert r.delivered_fraction == pytest.approx(5 / 8)
+        np.testing.assert_allclose(r.avg_flat, _survivor_mean(grads, r),
+                                   rtol=1e-6)
+
+    def test_quorum_folds_in_arrival_order(self):
+        # jittered starts: arrival order is the upload-completion order,
+        # not index order — and it replays identically
+        grads = _grads()
+        r = _round(grads, schedule="quorum", quorum=5)
+        r2 = _round(grads, schedule="quorum", quorum=5)
+        assert r.arrivals == r2.arrivals
+        assert len(set(r.arrivals)) == 5
+        assert list(r.arrivals) != sorted(r.arrivals)   # UPLOAD jitter bites
+
+    def test_quorum_composes_with_faults(self):
+        grads = _grads()
+        r = _round(grads, schedule="quorum", quorum=3, faults=FAULTS,
+                   participation_k=6)
+        assert len(r.arrivals) == 3
+        assert set(r.arrivals) <= set(r.participants)
+        np.testing.assert_allclose(r.avg_flat, _survivor_mean(grads, r),
+                                   rtol=1e-6)
+
+    def test_quorum_engine_bit_identity(self):
+        grads = _grads()
+        avgs = {_round(grads, schedule="quorum", quorum=5, engine=e)
+                .avg_flat.tobytes() for e in ENGINES}
+        assert len(avgs) == 1
+
+
+# ---------------------------------------------------------------------------
+# Multi-round sessions under faults
+# ---------------------------------------------------------------------------
+
+class TestFaultySessions:
+    def test_session_survives_and_varies_per_round(self):
+        grads = _grads()
+        s = FederatedSession(SessionConfig(
+            topology="gradssharding", n_shards=4, schedule="pipelined",
+            upload=UPLOAD, codec="identity", faults=FAULTS,
+            participation_k=6))
+        results = list(s.run(lambda rnd: grads, rounds=4))
+        assert len(results) == 4
+        assert len({r.participants for r in results}) > 1   # per-round draw
+        for r in results:
+            np.testing.assert_allclose(
+                r.avg_flat, _survivor_mean(grads, r), rtol=1e-6)
+
+    def test_ambient_env_matrix(self):
+        # the CI fault matrix job (REPRO_AGG_FAULTS=on) widens this test:
+        # with the env set these rounds run under the canonical nonzero
+        # model; unset, they assert the fault-free invariants instead
+        fm = fault_model_from_env(seed=3)
+        grads = _grads()
+        a = _round(grads, faults=fm, participation_k=6)
+        b = _round(grads, faults=fm, participation_k=6)
+        assert np.array_equal(a.avg_flat, b.avg_flat)
+        assert a.participants == b.participants and a.retries == b.retries
+        np.testing.assert_allclose(a.avg_flat, _survivor_mean(grads, a),
+                                   rtol=1e-6)
+        if fm is None:
+            assert a.delivered_fraction == 1.0 and a.retries == 0
+
+    def test_env_model_round_trips_through_session(self, monkeypatch):
+        monkeypatch.setenv("REPRO_AGG_FAULTS", "on")
+        fm = fault_model_from_env(seed=5)
+        grads = _grads()
+        a = _round(grads, faults=fm, participation_k=6)
+        b = _round(grads, faults=fm, participation_k=6)
+        assert np.array_equal(a.avg_flat, b.avg_flat)
+        assert a.retries == b.retries
+
+
+# ---------------------------------------------------------------------------
+# Analytical fault model (cost_model counterparts)
+# ---------------------------------------------------------------------------
+
+class TestFaultAnalytics:
+    def test_expected_attempts(self):
+        assert cm.expected_attempts(0.0) == 1.0
+        assert cm.expected_attempts(0.5) == pytest.approx(1 + 0.5 + 0.25)
+        with pytest.raises(ValueError):
+            cm.expected_attempts(1.0)
+
+    def test_expected_retry_delay_monotone(self):
+        lim = cm.LambdaLimits()
+        assert cm.expected_retry_delay_s(0.0, lim) == 0.0
+        d1 = cm.expected_retry_delay_s(0.2, lim)
+        d2 = cm.expected_retry_delay_s(0.4, lim)
+        assert 0.0 < d1 < d2
+        assert cm.expected_retry_delay_s(0.2, lim, backoff_s=1.0) > d1
+
+    def test_expected_retry_gb_s_scales_with_memory(self):
+        lim = cm.LambdaLimits()
+        assert cm.expected_retry_gb_s(1024, 0.0, lim) == 0.0
+        assert cm.expected_retry_gb_s(2048, 0.3, lim) == pytest.approx(
+            2 * cm.expected_retry_gb_s(1024, 0.3, lim))
+
+    def test_expected_deliveries(self):
+        assert cm.expected_deliveries(8) == 8.0
+        assert cm.expected_deliveries(8, 6, 0.25) == pytest.approx(4.5)
+        with pytest.raises(ValueError):
+            cm.expected_deliveries(8, 9)
+
+
+# ---------------------------------------------------------------------------
+# Property: partial-participation average == plain mean over survivors
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(2, 10),
+       dropout=st.floats(0.0, 0.6),
+       engine=st.sampled_from(ENGINES))
+def test_property_survivor_mean(seed, n, dropout, engine):
+    grads = _grads(n=n, elems=64, seed=seed)
+    fm = FaultModel(dropout_rate=dropout, seed=seed)
+    try:
+        r = run_round("gradssharding", grads, rnd=0, store=ObjectStore(),
+                      runtime=LambdaRuntime(), engine=engine,
+                      schedule="pipelined", upload=UPLOAD, faults=fm,
+                      codec="identity", n_shards=2)
+    except RuntimeError:
+        # every participant dropped — the documented failure mode
+        assert fm.dropout_plan(n, 0).all()
+        return
+    survivors = [grads[i] for i in r.arrivals]
+    assert len(survivors) == round(r.delivered_fraction * n)
+    np.testing.assert_allclose(
+        r.avg_flat,
+        np.mean(np.stack(survivors), axis=0).astype(np.float32), rtol=1e-5)

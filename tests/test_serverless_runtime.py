@@ -112,3 +112,67 @@ def test_store_accounting():
     assert store.list("a") == ["a"]
     store.delete("a")
     assert not store.exists("a")
+
+
+def test_raised_body_still_billed_and_recorded():
+    # a body that raises mid-phase is a crashed container, not an
+    # accounting hole: the record lands with its accrued billed duration
+    rt = LambdaRuntime()
+
+    def bad(ctx):
+        ctx.compute(8 * MB)
+        raise RuntimeError("bug in body")
+
+    with pytest.raises(RuntimeError, match="bug in body"):
+        rt.invoke(bad, fn_name="f", memory_mb=512)
+    assert len(rt.records) == 1
+    rec = rt.records[0]
+    assert rec.failed and rec.billed_gb_s > 0.0
+    assert rec.duration_s > rt.limits.cold_start_s   # cold start + compute
+    assert rt.total_cost() > 0.0
+
+
+def test_raised_body_releases_warm_slot():
+    rt = LambdaRuntime()
+    rt.invoke(lambda ctx: None, fn_name="f", memory_mb=512)   # warm "f"
+
+    def bad(ctx):
+        raise RuntimeError("crash")
+
+    with pytest.raises(RuntimeError, match="crash"):
+        rt.invoke(bad, fn_name="f", memory_mb=512)
+    # the container died with the body: the next invocation cold-starts
+    _, rec = rt.invoke(lambda ctx: None, fn_name="f", memory_mb=512)
+    assert rec.cold_start
+
+
+def test_injected_failure_evicts_warm_slot_for_retry():
+    rt = LambdaRuntime(faults=FaultPlan(fail={("f", 1)}))
+    _, r0 = rt.invoke(lambda ctx: "ok", fn_name="f", memory_mb=512)
+    _, r1 = rt.invoke(lambda ctx: "ok", fn_name="f", memory_mb=512,
+                      attempt=1)
+    _, r2 = rt.invoke(lambda ctx: "ok", fn_name="f", memory_mb=512,
+                      attempt=2)
+    assert r0.cold_start and not r0.failed
+    assert r1.failed and not r1.cold_start     # died in r0's warm container
+    assert r2.cold_start            # the crash evicted the warm container
+
+
+def test_retry_backoff_delays_relaunch():
+    rt = LambdaRuntime(faults=FaultPlan(fail={("f", 0), ("f", 1)},
+                                        retry_backoff_s=2.0))
+    out, rec = rt.invoke_reliable(lambda ctx: "ok", fn_name="f",
+                                  memory_mb=512, start_s=0.0)
+    assert out == "ok" and rec.attempt == 2
+    a0, a1, a2 = rt.records
+    assert a1.start_s == pytest.approx(a0.end_s + 2.0)        # backoff * 2^0
+    assert a2.start_s == pytest.approx(a1.end_s + 4.0)        # backoff * 2^1
+    assert rec is a2
+
+
+def test_zero_backoff_is_legacy_immediate_relaunch():
+    rt = LambdaRuntime(faults=FaultPlan(fail={("f", 0)}))
+    rt.invoke_reliable(lambda ctx: "ok", fn_name="f", memory_mb=512,
+                       start_s=0.0)
+    a0, a1 = rt.records
+    assert a1.start_s == a0.end_s
