@@ -13,6 +13,10 @@ Two quantities, per (N, M):
     O(1) ``ObjectStore.account_gets`` read-back path keep host time flat in
     the N·M op count that large-N rounds generate.
 
+Plus a **speculative-hedging sweep** (hedge factor x stall rate at a
+fixed aggregator failure rate): the tail-wall reduction a racing replica
+buys vs the extra GB-s the losing copy bills.
+
 Usage:
   PYTHONPATH=src python -m benchmarks.event_pipeline_bench [--grad-mb 512]
       [--sim-elems 65536] [--sim-rounds 3]
@@ -139,6 +143,71 @@ def readahead_sweep(grad_mb: float, sweep_n=SWEEP_N, sweep_m=SWEEP_M,
           + [f"win k={ks[-1]}", f"buf MB (k={ks[-1]})"], rows)
 
 
+HEDGE_FACTORS = (1.1, 1.2, 1.5)
+HEDGE_STALL_RATES = (0.0, 0.2, 0.4)
+SMOKE_HEDGE_FACTORS = (1.2,)
+SMOKE_HEDGE_STALL_RATES = (0.0, 0.2)
+
+
+def hedging_sweep(elems: int, rounds: int = 4, n: int = 20, m: int = 4,
+                  factors=HEDGE_FACTORS, stall_rates=HEDGE_STALL_RATES,
+                  failure_rate: float = 0.4):
+    """The speculative-hedging trade-off: tail-wall cut vs extra GB-s.
+
+    Per (hedge_factor, stall_rate) at a fixed aggregator failure rate,
+    runs a seeded multi-round session twice — hedged and its unhedged
+    twin over the *same* disturbance streams — and reports the tail
+    (max) and summed round walls, hedge launches/wins, and the extra
+    billed GB-s the losing replicas cost. Hedging is a pure time/billing
+    trade: ``avg_flat`` is asserted bit-identical to the unhedged twin
+    on every round. Retry chains (failure + slow backoff) are what the
+    replica races; stalls shift the upload span under it, moving how
+    much of the retry tail the round can already hide."""
+    from repro.serverless.faults import FaultModel
+
+    rng = np.random.default_rng(0)
+    grads = [rng.standard_normal(elems).astype(np.float32)
+             for _ in range(n)]
+    rows = []
+    for stall_rate in stall_rates:
+        for factor in factors:
+            runs = {}
+            for hedge in (None, factor):
+                faults = FaultModel(
+                    failure_rate=failure_rate, retry_backoff_s=2.0,
+                    stall_rate=stall_rate, stall_s=6.0, seed=5)
+                session = FederatedSession(
+                    topology="gradssharding", n_shards=m,
+                    schedule="pipelined", upload=UPLOAD, faults=faults,
+                    hedge_factor=hedge, keep_records=False)
+                walls, avgs = [], []
+                for r in session.run(lambda rnd: grads, rounds=rounds):
+                    walls.append(r.wall_clock_s)
+                    avgs.append(np.ascontiguousarray(r.avg_flat).tobytes())
+                runs[hedge] = (walls, avgs, session.runtime.total_gb_s(),
+                               session.fault_totals)
+            walls, avgs, gb_s, totals = runs[factor]
+            walls0, avgs0, gb_s0, _ = runs[None]
+            assert avgs == avgs0, "hedging must never change avg_flat"
+            tail, tail0 = max(walls), max(walls0)
+            emit_timing(
+                f"event_pipeline/hedging/stall{stall_rate}/f{factor}",
+                tail, tail_unhedged_s=tail0,
+                tail_cut=tail0 / tail if tail else 1.0,
+                sum_walls_s=sum(walls), sum_walls_unhedged_s=sum(walls0),
+                hedges=totals["hedges"], hedge_wins=totals["hedge_wins"],
+                extra_gb_s=gb_s - gb_s0)
+            rows.append([stall_rate, f"{factor:.1f}",
+                         f"{totals['hedges']}/{totals['hedge_wins']}",
+                         f"{tail0:.2f}", f"{tail:.2f}",
+                         f"{tail0 / tail:.2f}x" if tail else "-",
+                         f"{gb_s - gb_s0:+.2f}"])
+    table(f"Speculative hedging sweep (GradsSharding N={n} M={m}, "
+          f"{rounds} rounds, failure_rate={failure_rate}, seeded)",
+          ["stall rate", "factor", "hedges/wins", "tail wall (s)",
+           "hedged tail (s)", "tail cut", "extra GB-s"], rows)
+
+
 def sim_throughput(elems: int, rounds: int, sweep_n=SWEEP_N,
                    sweep_m=SWEEP_M):
     rows = []
@@ -210,6 +279,12 @@ def main(argv=None) -> None:
     modeled_walls(args.grad_mb, sweep_n, sweep_m)
     readahead_sweep(args.grad_mb, sweep_n, sweep_m)
     codec_sweep(args.grad_mb, sweep_n, sweep_m)
+    if args.smoke:
+        hedging_sweep(args.sim_elems, rounds=2,
+                      factors=SMOKE_HEDGE_FACTORS,
+                      stall_rates=SMOKE_HEDGE_STALL_RATES)
+    else:
+        hedging_sweep(args.sim_elems)
     sim_throughput(args.sim_elems, args.sim_rounds, sweep_n, sweep_m)
     readback_accounting_micro()
     print("\nPipelined rounds launch each shard aggregator on its first "

@@ -8,10 +8,12 @@ gradient's bytes. A **codec axis** gates the wire-format layer: the
 ``identity`` codec must keep every hash bit-identical to the raw grid,
 while the lossy codecs (``fp16``/``qsgd8``/``topk``) gate on op counts,
 wire upload bytes, billed GB-s, walls, ``codec_error`` and their own
-cross-engine hash determinism. Everything recorded is independent of
-host speed, so ``benchmarks/check_invariants.py`` can fail the build on
-any drift from the committed expectations
-(``benchmarks/expected_smoke.json``).
+cross-engine hash determinism. A **fault axis** gates seeded faulty
+rounds (dropout/stalls/retries, quorum, deadline) and a **robustness
+axis** gates stale re-entry and speculative hedging over multi-round
+sessions. Everything recorded is independent of host speed, so
+``benchmarks/check_invariants.py`` can fail the build on any drift from
+the committed expectations (``benchmarks/expected_smoke.json``).
 
 Usage:
   PYTHONPATH=src python -m benchmarks.smoke_invariants  (stdout summary)
@@ -27,7 +29,7 @@ from benchmarks.common import record_invariant, table
 from repro.api import FederatedSession
 from repro.core import cost_model as cm
 from repro.core.cost_model import UploadModel
-from repro.serverless.faults import FaultModel
+from repro.serverless.faults import FaultModel, StalenessPolicy
 
 N_CLIENTS = 8
 GRAD_ELEMS = 4_096
@@ -117,6 +119,7 @@ def main() -> None:
            "wall (s)", "avg hash"], rows)
     codec_axis(grads, hashes)
     fault_axis(grads)
+    robustness_axis(grads)
 
 
 # seeded disturbance model of the fault rows: dropout + upload stalls +
@@ -174,6 +177,95 @@ def fault_axis(grads) -> None:
     table("Fault axis (gradssharding, seeded disturbances)",
           ["case", "delivered", "retries", "puts", "gets", "GB-s",
            "wall (s)", "engine-det"], rows)
+
+
+# the robustness rows run multi-round sessions: stale re-entry needs a
+# round-r casualty whose buffered upload folds in a later round, and
+# hedging needs a retry chain long enough for the speculative replica to
+# win — both streams keyed on (seed, round) so the gate replays exactly
+STALE_FAULTS = FaultModel(dropout_rate=0.2, stall_rate=0.3, stall_s=6.0,
+                          seed=9)
+STALE_POLICY = StalenessPolicy(kind="polynomial", alpha=0.5,
+                               reentry_delay_s=2.0)
+HEDGE_FAULTS = FaultModel(failure_rate=0.4, retry_backoff_s=2.0, seed=5)
+ROBUST_ROUNDS = 3
+
+
+def robustness_axis(grads) -> None:
+    """The PR-7 robustness gate (gradssharding, 3-round sessions).
+
+    Two rows. **stale_reentry**: a tight deadline cuts stragglers every
+    round; their buffered uploads re-enter later rounds with polynomial
+    staleness weights — gates the stale-fold count, the dropped/late
+    tallies, billed GB-s, summed walls and the per-round hash chain
+    (weighted folds are membership + weights, so engines stay
+    bit-identical). **hedging**: aggregator failures with slow backoff
+    let the speculative replica win twice — gates hedge launches/wins,
+    the tail-wall reduction vs the unhedged twin, the extra billed GB-s
+    the loser costs, and that ``avg_flat`` never changes (the hedge
+    replica folds the same inputs; only *time* and billing move).
+    """
+    rows = []
+    # --- stale re-entry -------------------------------------------------
+    per_engine: set = set()
+    for engine in ENGINES:
+        session = FederatedSession(
+            topology="gradssharding", n_shards=N_SHARDS, engine=engine,
+            schedule="pipelined", upload=UPLOAD, readahead_k=1,
+            codec="identity", faults=STALE_FAULTS, deadline_s=2.0,
+            staleness_policy=STALE_POLICY)
+        results = [r for r in session.run(lambda rnd: grads,
+                                          rounds=ROBUST_ROUNDS)]
+        per_engine.add("|".join(_avg_hash(r) for r in results))
+    totals = session.fault_totals
+    walls = sum(r.wall_clock_s for r in results)
+    billed = session.runtime.total_gb_s()
+    tag = "smoke/robust/stale_reentry"
+    record_invariant(f"{tag}/stale_folded", totals["stale_folded"])
+    record_invariant(f"{tag}/dropped", totals["dropped"])
+    record_invariant(f"{tag}/late", totals["late"])
+    record_invariant(f"{tag}/billed_gb_s", round(billed, 12))
+    record_invariant(f"{tag}/sum_walls_s", round(walls, 12))
+    record_invariant(f"{tag}/avg_sha_chain", next(iter(per_engine)))
+    record_invariant(f"{tag}/engine_deterministic", len(per_engine) == 1)
+    rows.append(["stale_reentry", totals["stale_folded"],
+                 f"{totals['hedges']}/{totals['hedge_wins']}",
+                 f"{billed:.4f}", f"{walls:.3f}", len(per_engine) == 1])
+    # --- speculative hedging (vs its unhedged twin) ---------------------
+    runs = {}
+    for hedge in (None, 1.2):
+        per_engine = set()
+        for engine in ENGINES:
+            session = FederatedSession(
+                topology="gradssharding", n_shards=N_SHARDS, engine=engine,
+                schedule="pipelined", upload=UPLOAD, readahead_k=1,
+                codec="identity", faults=HEDGE_FAULTS, hedge_factor=hedge)
+            results = [r for r in session.run(lambda rnd: grads,
+                                              rounds=ROBUST_ROUNDS)]
+            per_engine.add("|".join(_avg_hash(r) for r in results))
+        runs[hedge] = (session.fault_totals,
+                       sum(r.wall_clock_s for r in results),
+                       session.runtime.total_gb_s(), per_engine)
+    totals, walls, billed, per_engine = runs[1.2]
+    _, walls0, billed0, sha0 = runs[None]
+    tag = "smoke/robust/hedging"
+    record_invariant(f"{tag}/hedges", totals["hedges"])
+    record_invariant(f"{tag}/hedge_wins", totals["hedge_wins"])
+    record_invariant(f"{tag}/retries", totals["retries"])
+    record_invariant(f"{tag}/billed_gb_s", round(billed, 12))
+    record_invariant(f"{tag}/sum_walls_s", round(walls, 12))
+    record_invariant(f"{tag}/unhedged_sum_walls_s", round(walls0, 12))
+    record_invariant(f"{tag}/extra_billed_gb_s", round(billed - billed0, 12))
+    record_invariant(f"{tag}/tail_wall_cut", walls < walls0)
+    record_invariant(f"{tag}/avg_sha_chain", next(iter(per_engine)))
+    record_invariant(f"{tag}/avg_matches_unhedged", per_engine == sha0)
+    record_invariant(f"{tag}/engine_deterministic", len(per_engine) == 1)
+    rows.append(["hedging", totals["stale_folded"],
+                 f"{totals['hedges']}/{totals['hedge_wins']}",
+                 f"{billed:.4f}", f"{walls:.3f}", len(per_engine) == 1])
+    table("Robustness axis (gradssharding, 3-round seeded sessions)",
+          ["case", "stale folds", "hedges/wins", "GB-s", "sum walls (s)",
+           "engine-det"], rows)
 
 
 def codec_axis(grads, raw_hashes) -> None:

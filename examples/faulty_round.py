@@ -10,8 +10,21 @@ The result reports the degradation honestly: ``delivered_fraction``,
 ``dropped``/``late``, ``retries`` — and ``avg_flat`` equals the plain
 mean over the arrivals' gradients, on every engine.
 
+Robustness knobs layered on top:
+
+* ``--staleness-policy`` keeps a cut straggler's upload in the session's
+  :class:`~repro.serverless.faults.StaleBuffer` and folds it into a later
+  round with a staleness weight (``--staleness-alpha`` tunes the
+  polynomial 1/(1+s)^alpha decay; the demo shows a round-r casualty's
+  gradient landing, weighted, in round r+2). When stale gradients fold,
+  the reported average is the *weighted* survivor mean.
+* ``--hedge`` races a speculative replica against any aggregator whose
+  retry chain overruns ``hedge_factor`` x its fault-free expected finish
+  — first finisher wins, the loser stays billed.
+
 Run:  PYTHONPATH=src python examples/faulty_round.py \
           [--seed 9 --schedule pipelined --deadline-s 8 --quorum 12]
+          [--staleness-policy polynomial --staleness-alpha 0.5 --hedge 1.2]
 """
 import argparse
 
@@ -20,7 +33,7 @@ import numpy as np
 from repro import FederatedSession, SessionConfig
 from repro.core import cost_model as cm
 from repro.core.cost_model import UploadModel
-from repro.serverless.faults import FaultModel
+from repro.serverless.faults import FaultModel, StalenessPolicy
 
 N_CLIENTS, M, GRAD_SIZE = 20, 4, 50_000
 
@@ -39,10 +52,39 @@ def main(argv=None):
     ap.add_argument("--quorum", type=int, default=None,
                     help="with --schedule quorum: fold fires on the q-th "
                          "arrival, in arrival order (semi-async FedBuff)")
+    ap.add_argument("--staleness-policy", default=None,
+                    choices=["constant", "polynomial", "cutoff"],
+                    help="fold cut stragglers' buffered uploads into later "
+                         "rounds with this staleness weighting")
+    ap.add_argument("--staleness-alpha", type=float, default=0.5,
+                    help="polynomial decay exponent: weight 1/(1+s)^alpha")
+    ap.add_argument("--reentry-delay-s", type=float, default=None,
+                    help="extra delay before a dropped client's buffered "
+                         "upload re-enters (defaults: long enough to "
+                         "demonstrate a round-r upload landing in r+2)")
+    ap.add_argument("--hedge", type=float, default=None, metavar="FACTOR",
+                    help="speculative hedging: replica races any "
+                         "aggregator lagging FACTOR x its expected finish "
+                         "(> 1.0; needs a non-barrier schedule)")
     ap.add_argument("--rounds", type=int, default=3)
     args = ap.parse_args(argv)
     if args.schedule == "quorum" and args.quorum is None:
         args.quorum = 12
+
+    policy = None
+    if args.staleness_policy is not None:
+        if args.reentry_delay_s is None:
+            # push a dropped client's re-entry past round r+1's cut so
+            # the demo shows staleness s=2: upload from round r folds in
+            # round r+2 (late clients re-enter at their probed completion
+            # and typically land in r+1 with s=1)
+            args.reentry_delay_s = 14.0
+        policy = StalenessPolicy(
+            kind=args.staleness_policy, alpha=args.staleness_alpha,
+            max_staleness=4 if args.staleness_policy == "cutoff" else None,
+            reentry_delay_s=args.reentry_delay_s)
+        if args.deadline_s is None and args.schedule != "quorum":
+            args.deadline_s = 8.0   # a cut is what creates stragglers
 
     faults = FaultModel(dropout_rate=0.10, stall_rate=0.15, stall_s=6.0,
                         failure_rate=0.30, retry_backoff_s=0.5,
@@ -52,7 +94,8 @@ def main(argv=None):
         upload=UploadModel(mbps=16.0, jitter_s=3.0, rate_jitter=0.5,
                            seed=11),
         faults=faults, participation_k=args.participation_k,
-        deadline_s=args.deadline_s, quorum=args.quorum))
+        deadline_s=args.deadline_s, quorum=args.quorum,
+        staleness_policy=policy, hedge_factor=args.hedge))
 
     rng = np.random.default_rng(0)
     grads = [rng.standard_normal(GRAD_SIZE).astype(np.float32)
@@ -67,21 +110,40 @@ def main(argv=None):
           f"{cm.expected_attempts(faults.failure_rate):.3f}\n")
 
     for r in session.run(lambda rnd: grads, rounds=args.rounds):
-        survivors = np.mean(np.stack([grads[i] for i in r.arrivals]),
-                            axis=0).astype(np.float32)
-        exact = np.allclose(r.avg_flat, survivors, rtol=1e-6)
+        fresh = [grads[i] for i in r.arrivals]
+        if r.stale_folded and policy is not None:
+            # stale entries fold with their policy weight; fresh ones
+            # weigh 1.0 — the exactness contract becomes the weighted
+            # survivor mean
+            w = [1.0] * len(fresh) \
+                + [policy.weight(s) for _c, s in r.stale_folded]
+            g = fresh + [grads[c] for c, _s in r.stale_folded]
+            ref = np.average(np.stack(g), axis=0, weights=w) \
+                .astype(np.float32)
+        else:
+            ref = np.mean(np.stack(fresh), axis=0).astype(np.float32)
+        exact = np.allclose(r.avg_flat, ref, rtol=1e-5, atol=1e-6)
         rnd = session.rounds_run - 1
+        stale = "".join(f", stale client {c} (s={s})"
+                        for c, s in r.stale_folded)
+        hedge = f", hedges={r.hedges}/{r.hedge_wins} won" \
+            if args.hedge else ""
         print(f"round {rnd}: delivered {len(r.arrivals)}/"
               f"{len(r.participants)} "
               f"({r.delivered_fraction:.0%}), dropped={list(r.dropped)}, "
-              f"late={list(r.late)}, retries={r.retries}, "
+              f"late={list(r.late)}, retries={r.retries}{stale}{hedge}, "
               f"wall={r.wall_clock_s:.2f}s, survivor-mean exact: {exact}")
         assert exact
 
+    totals = session.fault_totals
     print(f"\nsession: wall={session.session_wall_s:.2f}s, "
           f"total cost=${session.total_cost():.6f} "
           f"(lambda ${session.lambda_cost():.6f} + "
           f"s3 ${session.s3_cost():.6f})")
+    if policy is not None or args.hedge:
+        print(f"totals: {totals['stale_folded']} stale fold(s), "
+              f"{totals['hedges']} hedge(s) ({totals['hedge_wins']} won), "
+              f"{totals['retries']} retried attempt(s)")
     print("every failed attempt was retried and billed; the averages "
           "above are bit-exact over each round's survivors.")
 

@@ -39,7 +39,7 @@ from repro.core.topology import (AggregationResult, available_topologies,
                                  get_codec, get_schedule, get_topology,
                                  round_prefix, run_round,
                                  validate_fault_knobs)
-from repro.serverless.faults import FaultModel
+from repro.serverless.faults import FaultModel, StaleBuffer, StalenessPolicy
 from repro.serverless.runtime import FaultPlan, LambdaRuntime
 from repro.store import ObjectStore
 
@@ -99,8 +99,21 @@ class SessionConfig:
     deadline_s: float | None = None
     # with schedule="quorum": the FedBuff-style semi-async fold fires once
     # this many contributions arrived, folding them in arrival order (a
-    # documented, seeded departure from barrier/pipelined bit-identity)
+    # documented, seeded departure from barrier/pipelined bit-identity).
+    # Combined with deadline_s the deadline cuts first and the quorum
+    # gates within its survivors (degenerate combos raise per round)
     quorum: int | None = None
+    # stale re-entry: keep a cut straggler's (or dropped client's) upload
+    # in a per-session buffer and fold it into a later round with this
+    # policy's staleness weight (constant / polynomial 1/(1+s)^alpha /
+    # cutoff at max_staleness); None = legacy drop-forever semantics,
+    # bit-for-bit identical folds
+    staleness_policy: StalenessPolicy | None = None
+    # speculative hedging (pipelined/quorum schedules): once an
+    # aggregator's actual finish overruns hedge_factor x its fault-free
+    # expected finish, race a replica on the same keyspace — first
+    # finisher wins, the loser stays billed. Must be > 1.0; None = off
+    hedge_factor: float | None = None
     limits: LambdaLimits | None = None
     warm_pool_size: int | None = None
     keep_records: bool = True
@@ -159,7 +172,11 @@ class FederatedSession:
         validate_fault_knobs(get_schedule(config.schedule),
                              participation_k=config.participation_k,
                              deadline_s=config.deadline_s,
-                             quorum=config.quorum, faults=config.faults)
+                             quorum=config.quorum, faults=config.faults,
+                             staleness_policy=config.staleness_policy,
+                             hedge_factor=config.hedge_factor,
+                             allow_auto_quorum=config.schedule
+                             in (None, "auto"))
         if faults is not None and config.faults is not None:
             raise ValueError(
                 "cannot combine SessionConfig.faults (a seeded FaultModel) "
@@ -183,10 +200,21 @@ class FederatedSession:
                 limits=config.limits, faults=faults or config.faults,
                 warm_pool_size=config.warm_pool_size)
         self.rounds_run = 0
+        # stale re-entry buffer: cut stragglers' uploads persist here
+        # across rounds (and across keep_records=False compaction) until
+        # a later round folds them, staleness-weighted
+        self.stale_buffer = StaleBuffer() \
+            if config.staleness_policy is not None else None
         self._client_ready: tuple | None = None
         self._session_start_s: float | None = None
         self._session_end_s = 0.0
         self._round_walls_sum = 0.0
+        # cumulative fault accounting: survives per-round compaction
+        # (keep_records=False), unlike the per-round records it is
+        # derived from
+        self._fault_totals = {"retries": 0, "dropped": 0, "late": 0,
+                              "stale_folded": 0, "hedges": 0,
+                              "hedge_wins": 0}
 
     # ------------------------------------------------------------------
     def round(self, client_grads: Sequence[np.ndarray], *,
@@ -210,6 +238,9 @@ class FederatedSession:
             track_codec_error=cfg.track_codec_error,
             faults=cfg.faults, participation_k=cfg.participation_k,
             deadline_s=cfg.deadline_s, quorum=cfg.quorum,
+            staleness_policy=cfg.staleness_policy,
+            stale_buffer=self.stale_buffer,
+            hedge_factor=cfg.hedge_factor,
             **cfg.round_options())
         self._observe(result)
         if not cfg.keep_records:
@@ -235,6 +266,13 @@ class FederatedSession:
         self._client_ready = result.client_done_s or None
         self._session_end_s = max(self._session_end_s, result.round_end_s)
         self._round_walls_sum += result.wall_clock_s
+        t = self._fault_totals
+        t["retries"] += result.retries
+        t["dropped"] += len(result.dropped)
+        t["late"] += len(result.late)
+        t["stale_folded"] += len(result.stale_folded)
+        t["hedges"] += result.hedges
+        t["hedge_wins"] += result.hedge_wins
 
     def _compact(self, rnd: int) -> None:
         """Drop the finished round's per-op state (records, availability
@@ -271,6 +309,14 @@ class FederatedSession:
     def total_cost(self) -> float:
         return self.lambda_cost() + self.s3_cost()
 
+    @property
+    def fault_totals(self) -> dict:
+        """Cumulative fault/robustness counters over the whole session
+        (retries, dropped, late, stale_folded, hedges, hedge_wins) —
+        accumulated per round in :meth:`_observe`, so they survive
+        ``keep_records=False`` compaction."""
+        return dict(self._fault_totals)
+
     def summary(self) -> dict:
         return {
             "topology": self.config.topology,
@@ -283,6 +329,7 @@ class FederatedSession:
             "total_cost": self.total_cost(),
             "puts": self.store.stats.puts,
             "gets": self.store.stats.gets,
+            "fault_totals": self.fault_totals,
         }
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid

@@ -102,11 +102,17 @@ def aggregate_round(topology: str, client_grads: Sequence[np.ndarray], *,
                     participation_k: int | None = None,
                     deadline_s: float | None = None,
                     quorum: int | None = None,
+                    staleness_policy=None,
+                    stale_buffer=None,
+                    hedge_factor: float | None = None,
                     **kw) -> AggregationResult:
     """One aggregation round of any registered topology (functional form
     of :meth:`repro.api.FederatedSession.round`). The fault-tolerance
-    knobs (``faults``/``participation_k``/``deadline_s``/``quorum``)
-    mirror :class:`repro.api.SessionConfig`; see
+    knobs (``faults``/``participation_k``/``deadline_s``/``quorum``) and
+    the robustness knobs (``staleness_policy`` + caller-owned
+    ``stale_buffer`` for cross-round stale re-entry, ``hedge_factor``
+    for speculative aggregator hedging) mirror
+    :class:`repro.api.SessionConfig`; see
     :func:`repro.core.topology.run_round`."""
     return run_round(
         topology, client_grads, rnd=rnd, store=store, runtime=runtime,
@@ -117,6 +123,8 @@ def aggregate_round(topology: str, client_grads: Sequence[np.ndarray], *,
         track_codec_error=track_codec_error,
         faults=faults, participation_k=participation_k,
         deadline_s=deadline_s, quorum=quorum,
+        staleness_policy=staleness_policy, stale_buffer=stale_buffer,
+        hedge_factor=hedge_factor,
         n_shards=n_shards, partition=partition, tensor_sizes=tensor_sizes,
         **kw)
 

@@ -517,6 +517,24 @@ def _fold_finish(launch_s: float, avail_s: Sequence[float],
     return t
 
 
+def expected_fold_finish_s(launch_s: float, avail_s: Sequence[float],
+                           in_bytes: Sequence[int], out_bytes: int,
+                           limits: LambdaLimits, cold: bool = True,
+                           readahead_k: int = 1,
+                           wire_bytes: Sequence[int] | None = None,
+                           decode_s: float = 0.0) -> float:
+    """Public entry to the window-driven fold-finish model: the expected
+    fault-free completion time of one store-reading aggregator given its
+    launch, input availability frontier and read-ahead window — exactly
+    the arithmetic behind :func:`pipelined_round_cost`'s event-sim
+    parity. The round driver's speculative hedging replays it per
+    invocation to decide whether the primary's actual finish (retries,
+    backoff, cold restarts) lags far enough to launch a hedge replica."""
+    return _fold_finish(launch_s, avail_s, in_bytes, out_bytes, limits,
+                        cold, readahead_k=readahead_k,
+                        wire_bytes=wire_bytes, decode_s=decode_s)
+
+
 def _fold_finish_colocated(launch_s: float, avail_s: Sequence[float],
                            in_bytes: Sequence[int], out_bytes: int,
                            limits: LambdaLimits, cold: bool,
@@ -547,61 +565,11 @@ def _resolve_readahead(readahead_k: int | None) -> int:
     return get_readahead(readahead_k)
 
 
-def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
-                         limits: LambdaLimits = LambdaLimits(),
-                         upload: UploadModel | None = None,
-                         rnd: int = 0, cold: bool = True,
-                         shard_bytes: Sequence[int] | None = None,
-                         colocated: bool = False,
-                         readahead_k: int | None = None,
-                         codec: Codec = None) -> RoundCost:
-    """Modeled round under the **pipelined** schedule.
-
-    Clients locally train, then upload with per-client jitter
-    (``upload``); each aggregator launches when the first contribution in
-    its ``readahead_k`` window lands and stream-folds in strict index
-    order while prefetching up to ``k`` contributions ahead of the fold
-    frontier (:class:`ReadAheadWindow` — ``k=1``, the default, is the
-    legacy in-index-order schedule); tree levels chain the same way.
-    ``wall_clock_s`` is the makespan from round start to the last
-    aggregator's output write — reads hide under uploads, which is where
-    the win over :func:`round_cost`'s phase barriers comes from. Stall
-    time is billed (the function runs while it waits), and the billed
-    allocation grows with the prefetch buffer (``(k+1)``·input once k
-    outruns the 3× formula). ``colocated`` (LIFL only) models the
-    shared-memory fast path: level ≥2 hops have zero transfer time (and,
-    having nothing to prefetch, keep first-input launch gating and the
-    3× allocation). Registry topologies dispatch through their
-    ``cost_pipelined_plan`` hook. The 1 ms billing granularity is
-    ignored here (<0.1 % on round-scale durations); the discrete-event
-    runtime reproduces ``wall_clock_s`` exactly for a no-fault round.
-
-    ``codec`` (name / instance / None → env ``REPRO_AGG_CODEC``) applies
-    the wire format to the client→aggregator hop: uploads and level-1
-    GETs move ``codec.wire_bytes``, level-1 folds pay ``decode_cost_s``
-    per contribution, and the level-1 billed allocation buffers encoded
-    payloads — all through the same :class:`ReadAheadWindow` /
-    :func:`wire_alloc_mb` definitions the event sim runs, so parity to
-    float epsilon holds per codec (smaller GETs legitimately shift
-    window launch and fetch times; both sides shift identically).
-    """
-    if colocated and topology != "lifl":
-        raise ValueError("colocated is the LIFL shared-memory fast path")
-    ra = _resolve_readahead(readahead_k)
-    cdc = get_codec(codec)
-    upload = upload or UploadModel()
-    starts, mults = upload.plan(n, rnd)
-    starts = starts + upload.compute_plan(n, rnd)   # train, then upload
-    ops = s3_ops(topology, n, m) if not colocated else None
-    # feasibility must see the readahead buffers: the simulated runtime
-    # OOMs mid-round on a config the 3x formula alone would green-light
-    ok = feasible(topology, grad_bytes, m, limits,
-                  readahead_k=min(ra, collect_fanin(topology, n, m)),
-                  codec=cdc)
-
-    finishes: list[float] = []
-    gb_s_parts: list[float] = []         # per-aggregator billed GB-s
-    mem_mbs: list[float] = []
+def _make_run_fold(limits: LambdaLimits, cold: bool, ra: int,
+                   finishes: list, gb_s_parts: list, mem_mbs: list):
+    """The pipelined per-fold timing/billing closure, shared verbatim by
+    :func:`pipelined_round_cost` and the quorum/deadline walls so every
+    schedule prices one fold with identical arithmetic."""
 
     def run_fold(avail, in_b, out_b, shared=False, write_out=True,
                  wire_b=None, decode_s=0.0, weighted=False):
@@ -629,6 +597,21 @@ def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
         gb_s_parts.append(mem / 1024.0 * (end - launch))
         return end
 
+    return run_fold
+
+
+def _pipelined_fold_plan(topology: str, grad_bytes: int, n: int, m: int,
+                         limits: LambdaLimits, upload: "UploadModel",
+                         starts, mults, run_fold,
+                         shard_bytes: Sequence[int] | None,
+                         colocated: bool, cdc: WireCodec) -> None:
+    """Drive ``run_fold`` through one topology's pipelined fold DAG.
+
+    ``starts``/``mults`` are *position-indexed* over the ``n`` folded
+    clients — the full cohort for :func:`pipelined_round_cost`, or the
+    post-cut survivors (in fold order) for the quorum/deadline walls,
+    which is exactly how the round driver rebuilds its program over the
+    kept membership."""
     if topology == "gradssharding":
         sb = list(shard_bytes) if shard_bytes is not None \
             else uniform_shard_bytes(grad_bytes, m)
@@ -686,6 +669,68 @@ def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
         hook = _registered(topology).cost_pipelined_plan
         hook(grad_bytes, n, m, limits, upload, starts, mults, run_fold,
              shard_bytes=shard_bytes, **_codec_kwargs(hook, cdc))
+
+
+def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
+                         limits: LambdaLimits = LambdaLimits(),
+                         upload: UploadModel | None = None,
+                         rnd: int = 0, cold: bool = True,
+                         shard_bytes: Sequence[int] | None = None,
+                         colocated: bool = False,
+                         readahead_k: int | None = None,
+                         codec: Codec = None) -> RoundCost:
+    """Modeled round under the **pipelined** schedule.
+
+    Clients locally train, then upload with per-client jitter
+    (``upload``); each aggregator launches when the first contribution in
+    its ``readahead_k`` window lands and stream-folds in strict index
+    order while prefetching up to ``k`` contributions ahead of the fold
+    frontier (:class:`ReadAheadWindow` — ``k=1``, the default, is the
+    legacy in-index-order schedule); tree levels chain the same way.
+    ``wall_clock_s`` is the makespan from round start to the last
+    aggregator's output write — reads hide under uploads, which is where
+    the win over :func:`round_cost`'s phase barriers comes from. Stall
+    time is billed (the function runs while it waits), and the billed
+    allocation grows with the prefetch buffer (``(k+1)``·input once k
+    outruns the 3× formula). ``colocated`` (LIFL only) models the
+    shared-memory fast path: level ≥2 hops have zero transfer time (and,
+    having nothing to prefetch, keep first-input launch gating and the
+    3× allocation). Registry topologies dispatch through their
+    ``cost_pipelined_plan`` hook. The 1 ms billing granularity is
+    ignored here (<0.1 % on round-scale durations); the discrete-event
+    runtime reproduces ``wall_clock_s`` exactly for a no-fault round.
+
+    ``codec`` (name / instance / None → env ``REPRO_AGG_CODEC``) applies
+    the wire format to the client→aggregator hop: uploads and level-1
+    GETs move ``codec.wire_bytes``, level-1 folds pay ``decode_cost_s``
+    per contribution, and the level-1 billed allocation buffers encoded
+    payloads — all through the same :class:`ReadAheadWindow` /
+    :func:`wire_alloc_mb` definitions the event sim runs, so parity to
+    float epsilon holds per codec (smaller GETs legitimately shift
+    window launch and fetch times; both sides shift identically).
+    """
+    if colocated and topology != "lifl":
+        raise ValueError("colocated is the LIFL shared-memory fast path")
+    ra = _resolve_readahead(readahead_k)
+    cdc = get_codec(codec)
+    upload = upload or UploadModel()
+    starts, mults = upload.plan(n, rnd)
+    starts = starts + upload.compute_plan(n, rnd)   # train, then upload
+    ops = s3_ops(topology, n, m) if not colocated else None
+    # feasibility must see the readahead buffers: the simulated runtime
+    # OOMs mid-round on a config the 3x formula alone would green-light
+    ok = feasible(topology, grad_bytes, m, limits,
+                  readahead_k=min(ra, collect_fanin(topology, n, m)),
+                  codec=cdc)
+
+    finishes: list[float] = []
+    gb_s_parts: list[float] = []         # per-aggregator billed GB-s
+    mem_mbs: list[float] = []
+    run_fold = _make_run_fold(limits, cold, ra, finishes, gb_s_parts,
+                              mem_mbs)
+    _pipelined_fold_plan(topology, grad_bytes, n, m, limits, upload,
+                         starts, mults, run_fold, shard_bytes, colocated,
+                         cdc)
     if ops is None:
         l1, l2 = lifl_levels(n)
         # colocated: N client PUTs + l1 level-1 partials + the global; GETs
@@ -698,6 +743,213 @@ def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
     s3_cost = ops.puts * limits.s3_put_price + ops.gets * limits.s3_get_price
     return RoundCost(topology, n, m, grad_bytes, wall, gb_s, lam_cost,
                      s3_cost, ops, max(mem_mbs), len(mem_mbs), ok, ())
+
+
+def _scheduled_round_cost(topology: str, grad_bytes: int, n: int, m: int,
+                          limits: LambdaLimits, upload: "UploadModel | None",
+                          rnd: int, cold: bool,
+                          shard_bytes: Sequence[int] | None,
+                          colocated: bool, readahead_k: int | None,
+                          codec: Codec, *, sched: str,
+                          quorum: int | None, deadline_s: float | None,
+                          faults=None,
+                          participation_k: int | None = None) -> RoundCost:
+    """Shared core of :func:`quorum_round_cost` / :func:`deadline_round_cost`.
+
+    Replays the round driver's membership pipeline analytically —
+    participation sampling, seeded dropout, stalls, then the
+    deadline/quorum cut on the *probed* arrival times — and prices the
+    surviving fold with the pipelined arithmetic over the kept members.
+    The cut uses the driver's exact per-key sequential upload sums (not
+    the cumsum shortcut), so a client at the boundary lands on the same
+    side in model and sim; the fold availabilities then reuse the
+    existing per-topology plans, which the event sim matches to float
+    epsilon. Deadline semantics clamp the wall to the deadline whenever
+    a straggler was cut (a cut round is only known complete at T);
+    quorum-without-deadline never clamps. The degenerate
+    ``quorum > post-deadline arrivals`` raises the same ``ValueError``
+    as the driver. Read-back and S3 op counts cover the delivered
+    membership (the model's per-round scope)."""
+    from repro.serverless.event_sim import arrival_order
+    from repro.serverless.faults import FaultModel
+    if colocated and topology != "lifl":
+        raise ValueError("colocated is the LIFL shared-memory fast path")
+    ra = _resolve_readahead(readahead_k)
+    cdc = get_codec(codec)
+    upload = upload or UploadModel()
+    starts, mults = upload.plan(n, rnd)
+    starts = starts + upload.compute_plan(n, rnd)   # train, then upload
+
+    # -- membership: participation sampling, dropout, stalls (driver replay)
+    if participation_k is not None and participation_k < n:
+        participants = list((faults or FaultModel())
+                            .participants(n, rnd, participation_k))
+    else:
+        participants = list(range(n))
+    order = participants
+    stall = None
+    if faults is not None:
+        drop = faults.dropout_plan(n, rnd)
+        order = [i for i in participants if not drop[i]]
+        st = faults.stall_plan(n, rnd)
+        if st.any():
+            stall = st
+    if not order:
+        raise RuntimeError(f"round {rnd}: no active participants")
+
+    # -- probed arrival times: the driver's exact sequential per-key sums
+    if topology in ("gradssharding", "sharded_tree"):
+        sb_cut = list(shard_bytes) if shard_bytes is not None \
+            else uniform_shard_bytes(grad_bytes, m)
+        key_sizes = [cdc.wire_bytes(b) for b in sb_cut]
+    else:
+        # single-PUT cohorts (lambda_fl / lifl / registry default): the
+        # whole wire payload lands as one key
+        key_sizes = [client_upload_bytes(topology, grad_bytes, m,
+                                         codec=cdc,
+                                         shard_bytes=shard_bytes)]
+    starts_eff = {}
+    ends = []
+    for i in order:
+        t = float(starts[i])
+        if stall is not None and stall[i]:
+            t += float(stall[i])
+        starts_eff[i] = t
+        for nb in key_sizes:
+            t += upload.upload_s(nb, float(mults[i]))
+        ends.append(t)
+
+    # -- deadline / quorum cut (deadline first, quorum within survivors)
+    if sched == "quorum" and quorum is not None and deadline_s is not None:
+        survivors = arrival_order(ends, deadline_s=deadline_s)
+        if len(survivors) < quorum:
+            raise ValueError(
+                f"round {rnd}: quorum={quorum} exceeds the "
+                f"{len(survivors)} arrival(s) left by the deadline "
+                f"({deadline_s:.3f} s); the deadline cuts first and "
+                f"the quorum gates within its survivors — lower the "
+                f"quorum or relax the deadline")
+    keep = arrival_order(ends, quorum=quorum if sched == "quorum" else None,
+                         deadline_s=deadline_s)
+    if not keep:
+        raise RuntimeError(
+            f"round {rnd}: no client upload completed by the deadline "
+            f"({deadline_s:.3f} s) — nothing to aggregate")
+    if sched != "quorum":
+        keep.sort()               # a deadline alone never reorders the fold
+    kept = [order[pos] for pos in keep]
+    kept_set = set(kept)
+    late = [i for i in order if i not in kept_set]
+
+    # -- fold over the kept membership, positional like the driver rebuild
+    n_del = len(kept)
+    starts_kept = np.asarray([starts_eff[i] for i in kept])
+    mults_kept = np.asarray([float(mults[i]) for i in kept])
+    ok = feasible(topology, grad_bytes, m, limits,
+                  readahead_k=min(ra, collect_fanin(topology, n_del, m)),
+                  codec=cdc)
+    finishes: list[float] = []
+    gb_s_parts: list[float] = []
+    mem_mbs: list[float] = []
+    run_fold = _make_run_fold(limits, cold, ra, finishes, gb_s_parts,
+                              mem_mbs)
+    _pipelined_fold_plan(topology, grad_bytes, n_del, m, limits, upload,
+                         starts_kept, mults_kept, run_fold, shard_bytes,
+                         colocated, cdc)
+    if colocated:
+        l1, _l2 = lifl_levels(n_del)
+        ops = S3Ops(puts=n_del + l1 + 1, gets_agg=n_del,
+                    gets_clients=n_del)
+    else:
+        ops = s3_ops(topology, n_del, m)
+
+    wall = max(finishes)
+    if late and deadline_s is not None:
+        # a cut round is only known complete at the deadline itself
+        wall = max(wall, float(deadline_s))
+    gb_s = sum(gb_s_parts)
+    lam_cost = gb_s * limits.gb_s_price
+    s3_cost = ops.puts * limits.s3_put_price + ops.gets * limits.s3_get_price
+    return RoundCost(topology, n, m, grad_bytes, wall, gb_s, lam_cost,
+                     s3_cost, ops, max(mem_mbs), len(mem_mbs), ok, ())
+
+
+def quorum_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
+                      limits: LambdaLimits = LambdaLimits(),
+                      upload: UploadModel | None = None,
+                      rnd: int = 0, cold: bool = True,
+                      shard_bytes: Sequence[int] | None = None,
+                      colocated: bool = False,
+                      readahead_k: int | None = None,
+                      codec: Codec = None, *,
+                      quorum: int | None,
+                      deadline_s: float | None = None,
+                      faults=None,
+                      participation_k: int | None = None) -> RoundCost:
+    """Modeled round under the **quorum** schedule: the expected q-th
+    arrival under the :class:`UploadModel` jitter gates the fold, which
+    then runs pipelined over the first ``quorum`` arrivals *in arrival
+    order* (FedBuff-style buffered cut). ``faults`` /
+    ``participation_k`` replay the driver's seeded membership (dropout,
+    stalls, participation sampling) so the analytic wall tracks the
+    event sim to float epsilon for ``failure_rate=0`` configs — retries
+    are priced separately (:func:`expected_retry_gb_s` et al.).
+    ``quorum=None`` folds every arrival in arrival order (the env-auto
+    full quorum). Combined with ``deadline_s``, the deadline cuts
+    first and the quorum gates within its survivors; a quorum the
+    post-deadline arrivals cannot satisfy raises ``ValueError`` exactly
+    like the round driver."""
+    return _scheduled_round_cost(topology, grad_bytes, n, m, limits,
+                                 upload, rnd, cold, shard_bytes, colocated,
+                                 readahead_k, codec, sched="quorum",
+                                 quorum=quorum, deadline_s=deadline_s,
+                                 faults=faults,
+                                 participation_k=participation_k)
+
+
+def deadline_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
+                        limits: LambdaLimits = LambdaLimits(),
+                        upload: UploadModel | None = None,
+                        rnd: int = 0, cold: bool = True,
+                        shard_bytes: Sequence[int] | None = None,
+                        colocated: bool = False,
+                        readahead_k: int | None = None,
+                        codec: Codec = None, *,
+                        deadline_s: float,
+                        faults=None,
+                        participation_k: int | None = None) -> RoundCost:
+    """Modeled **pipelined round with a hard deadline**: arrivals after
+    ``deadline_s`` are cut, the fold runs pipelined over the survivors
+    in index order, and — whenever a straggler was actually cut — the
+    wall clamps to the deadline (the round is only known complete at
+    T). Membership replay and sim parity as in
+    :func:`quorum_round_cost`."""
+    return _scheduled_round_cost(topology, grad_bytes, n, m, limits,
+                                 upload, rnd, cold, shard_bytes, colocated,
+                                 readahead_k, codec, sched="pipelined",
+                                 quorum=None, deadline_s=float(deadline_s),
+                                 faults=faults,
+                                 participation_k=participation_k)
+
+
+def expected_hedge_cost(memory_mb: float, fold_s: float,
+                        failure_rate: float,
+                        limits: LambdaLimits = LambdaLimits(),
+                        n_aggregators: int = 1) -> float:
+    """Expected extra billed GB-s from speculative hedging, per round.
+
+    A hedge replica launches when the primary overruns its fault-free
+    expected finish — under the seeded failure model that happens
+    (to first order) whenever the primary's first attempt dies, i.e.
+    with probability ``failure_rate`` per aggregator. The replica is a
+    fresh (cold) container that runs the fold to completion even when it
+    loses the race, so each launch bills
+    ``memory_mb/1024 * (cold_start_s + fold_s)`` GB-s on top of the
+    primary's own accounting (retries included — those are
+    :func:`expected_retry_gb_s`)."""
+    p = min(max(float(failure_rate), 0.0), 1.0)
+    dur = limits.cold_start_s + float(fold_s)
+    return n_aggregators * p * memory_mb / 1024.0 * dur
 
 
 def barrier_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,

@@ -57,17 +57,21 @@ class ShardedTreeTopology(Topology):
         # Phase 1 — per-shard leaf trees (λ-FL grouping, per shard);
         # leaves read encoded client shards, roots read raw partials
         groups = tree_groups(n, cm.lambda_fl_branching(n))
+        w = spec.weights
         leaves = tuple(
             InvocationSpec(
                 fn_name=f"r{rnd}-s{j}leaf{leaf}",
                 in_keys=tuple(k_client_shard(rnd, i, j) for i in members),
                 out_key=k_shard_partial(rnd, j, leaf),
                 alloc_bytes=shard_bytes[j],
+                weights=None if w is None
+                else tuple(w[i] for i in members),
                 wire_in_bytes=wire_bytes[j])
             for j in range(m)
             for leaf, members in enumerate(groups))
 
-        # Phase 2 — per-shard roots (group-size-weighted, like λ-FL's root)
+        # Phase 2 — per-shard roots (group-size-weighted, like λ-FL's
+        # root; staleness weights replace the plain group sizes)
         roots = tuple(
             InvocationSpec(
                 fn_name=f"r{rnd}-s{j}root",
@@ -75,7 +79,9 @@ class ShardedTreeTopology(Topology):
                               for leaf in range(len(groups))),
                 out_key=k_avg_shard(rnd, j),
                 alloc_bytes=shard_bytes[j],
-                weights=tuple(float(len(members)) for members in groups))
+                weights=tuple(float(len(members)) if w is None
+                              else float(sum(w[i] for i in members))
+                              for members in groups))
             for j in range(m))
 
         readback = tuple((k_avg_shard(rnd, j), shard_bytes[j])

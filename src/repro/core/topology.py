@@ -61,7 +61,7 @@ from repro.core.wire_codec import available_codecs  # noqa: F401  (re-export)
 from repro.core.wire_codec import register_codec    # noqa: F401  (re-export)
 from repro.serverless.event_sim import ReadAheadWindow, Timeline, \
     arrival_order
-from repro.serverless.faults import FaultModel
+from repro.serverless.faults import FaultModel, StaleBuffer, StalenessPolicy
 from repro.serverless.runtime import FaultPlan, InvocationRecord, \
     LambdaRuntime
 from repro.store import ObjectStore
@@ -124,7 +124,10 @@ def validate_fault_knobs(schedule: str, *,
                          deadline_s: float | None = None,
                          quorum: int | None = None,
                          faults: "FaultModel | None" = None,
-                         n_clients: int | None = None) -> None:
+                         n_clients: int | None = None,
+                         staleness_policy=None,
+                         hedge_factor: float | None = None,
+                         allow_auto_quorum: bool = False) -> None:
     """Up-front validation of the fault-tolerance knob combinations.
 
     Called eagerly by :class:`repro.api.FederatedSession` (without a
@@ -140,7 +143,29 @@ def validate_fault_knobs(schedule: str, *,
       * ``quorum`` — requires ``schedule="quorum"`` (a count-gated fold
         frontier is meaningless under a barrier), int >= 1, and bounded
         by the participant count when known; conversely
-        ``schedule="quorum"`` requires an explicit ``quorum``;
+        ``schedule="quorum"`` requires an explicit ``quorum`` — except
+        when the schedule came from the env (``allow_auto_quorum``, set
+        by the resolving caller): ``REPRO_AGG_SCHEDULE=quorum`` without
+        an explicit ``quorum=`` runs the *full*-quorum semi-async fold
+        (every arrival folds, in arrival order);
+      * ``deadline_s`` **+** ``quorum`` — the documented precedence is
+        **deadline cuts first, the quorum gates within its survivors**
+        (:func:`repro.serverless.event_sim.arrival_order` filters the
+        deadline before truncating to the first q). The degenerate case
+        — fewer post-deadline arrivals than the quorum — is a per-round
+        ``ValueError`` raised by the driver and by
+        :func:`repro.core.cost_model.quorum_round_cost`, since it
+        depends on the seeded arrival times;
+      * ``staleness_policy`` — a
+        :class:`~repro.serverless.faults.StalenessPolicy` (weights a
+        dropped/late client's round-r gradient when it re-enters a later
+        fold) or ``None``;
+      * ``hedge_factor`` — launches a speculative replica of an
+        aggregator whose actual finish lags its expected finish by this
+        factor; must be > 1.0 (at exactly 1.0 float jitter on the
+        expected-finish parity would hedge fault-free rounds) and
+        requires a non-barrier schedule (a barrier phase has no frontier
+        to lag behind);
       * ``faults`` — a :class:`~repro.serverless.faults.FaultModel`
         (rates already validated by its constructor) or ``None``.
     """
@@ -158,7 +183,7 @@ def validate_fault_knobs(schedule: str, *,
             f"deadline_s must be > 0 (a round must be able to deliver "
             f"at least one contribution), got {deadline_s!r}")
     if schedule == "quorum":
-        if quorum is None:
+        if quorum is None and not allow_auto_quorum:
             raise ValueError(
                 "schedule='quorum' requires an explicit quorum= (the "
                 "contribution count that fires the fold)")
@@ -175,6 +200,22 @@ def validate_fault_knobs(schedule: str, *,
         if cap is not None and quorum > cap:
             raise ValueError(
                 f"quorum={quorum} exceeds the participant count ({cap})")
+    if staleness_policy is not None \
+            and not hasattr(staleness_policy, "weight"):
+        raise TypeError(
+            f"staleness_policy must be a repro.serverless.faults"
+            f".StalenessPolicy (got {type(staleness_policy).__name__})")
+    if hedge_factor is not None:
+        if not hedge_factor > 1.0:
+            raise ValueError(
+                f"hedge_factor must be > 1.0 (the factor by which an "
+                f"aggregator's actual finish must lag its expected finish "
+                f"before a hedge launches), got {hedge_factor!r}")
+        if schedule == "barrier":
+            raise ValueError(
+                "hedge_factor requires a non-barrier schedule (pipelined "
+                "or quorum): a barrier phase has no per-invocation "
+                "frontier for a replica to race")
     if faults is not None and not hasattr(faults, "dropout_plan"):
         raise TypeError(
             f"faults must be a repro.serverless.faults.FaultModel (got "
@@ -251,6 +292,17 @@ class AggregationResult:
     late: tuple = ()
     delivered_fraction: float = 1.0
     retries: int = 0
+    # semi-async re-entry: ``(client, staleness)`` pairs whose buffered
+    # round-(rnd - staleness) gradients re-entered this round's fold
+    # (weighted by the session's StalenessPolicy), plus the sorted
+    # ``(staleness, count)`` histogram. Fresh-only rounds read () / ().
+    stale_folded: tuple = ()
+    staleness_histogram: tuple = ()
+    # speculative hedging: replicas launched against lagging aggregators
+    # this round, and how many finished before their primary (losers are
+    # still billed — their records carry speculative=True)
+    hedges: int = 0
+    hedge_wins: int = 0
     # the platform limits this round was simulated (and is priced) under —
     # keeps per-round dollar figures consistent with the session's totals
     # when SessionConfig.limits overrides the defaults
@@ -343,6 +395,13 @@ class RoundSpec:
     thread it through :func:`sharded_client_uploads` /
     :func:`full_grad_uploads` so client PUTs carry encoded payloads and
     the upload schedule carries wire bytes.
+
+    ``weights`` — per-position fold weights parallel to ``client_grads``
+    (the driver appends staleness-weighted re-entries after the fresh
+    members), or ``None`` for the plain unweighted mean. Topologies must
+    thread them into every fold so the average becomes
+    ``sum(w_i * g_i) / sum(w_i)``; ``None`` keeps the legacy unweighted
+    f32 folds bit-for-bit.
     """
 
     rnd: int
@@ -351,6 +410,7 @@ class RoundSpec:
     limits: LambdaLimits
     options: Mapping[str, Any] = field(default_factory=dict)
     codec: WireCodec = field(default_factory=get_codec)
+    weights: tuple | None = None
 
     def opt(self, name: str, default=None):
         return self.options.get(name, default)
@@ -678,6 +738,9 @@ def run_round(topology: str | Topology,
               participation_k: int | None = None,
               deadline_s: float | None = None,
               quorum: int | None = None,
+              staleness_policy: StalenessPolicy | None = None,
+              stale_buffer: StaleBuffer | None = None,
+              hedge_factor: float | None = None,
               **options) -> AggregationResult:
     """Execute one aggregation round of any registered topology.
 
@@ -720,6 +783,30 @@ def run_round(topology: str | Topology,
         **in arrival order** (deterministic ``(time, index)``
         tie-breaking from the seeded upload plan) — a documented
         departure from the barrier/pipelined bit-identity contract.
+        Combined with ``deadline_s`` the precedence is **deadline cuts
+        first, quorum gates within the survivors**; fewer post-deadline
+        arrivals than the quorum is a ``ValueError``. An env-resolved
+        quorum schedule without an explicit ``quorum=`` folds *every*
+        arrival in arrival order (the full quorum).
+      * ``staleness_policy`` + ``stale_buffer`` — semi-async re-entry: a
+        dropped/late client's gradient lands in the session's
+        :class:`~repro.serverless.faults.StaleBuffer` with its
+        deterministic re-entry time, and a later round whose cut it
+        precedes folds it with the policy's staleness weight appended
+        after the fresh members (the engines' weighted f64 folds divide
+        by ``n_fresh + sum(w_stale)``). The quorum counts *fresh*
+        arrivals only — stale entries ride along, they never fire the
+        fold. Rounds that fold no stale entries stay bit-for-bit the
+        zero-policy path.
+      * ``hedge_factor`` — speculative hedging (non-barrier schedules):
+        after each store-reading aggregator completes, its actual finish
+        is compared against ``launch + factor * (expected fault-free
+        finish − launch)`` (the :func:`~repro.core.cost_model
+        .expected_fold_finish_s` replay of its read-ahead frontier); a
+        lagging primary gets a hedge replica on the same keyspace under
+        ``<fn>~hedge`` (own warm slot, own failure stream), the earlier
+        finisher wins via the availability map's first-write-wins
+        publish, and the loser stays billed.
 
     In every case the program is built over the surviving subset, so the
     average divides by the number of *arrivals*, never the cohort size,
@@ -741,7 +828,11 @@ def run_round(topology: str | Topology,
     n = len(client_grads)
     validate_fault_knobs(sched, participation_k=participation_k,
                          deadline_s=deadline_s, quorum=quorum,
-                         faults=faults, n_clients=n)
+                         faults=faults, n_clients=n,
+                         staleness_policy=staleness_policy,
+                         hedge_factor=hedge_factor,
+                         allow_auto_quorum=schedule is None
+                         or schedule == "auto")
     limits = runtime.limits
     p0, g0 = store.stats.puts, store.stats.gets
     rec_start = len(runtime.records)
@@ -770,26 +861,59 @@ def run_round(topology: str | Topology,
             f" (dropout_rate={faults.dropout_rate}, seed={faults.seed})")
         raise RuntimeError(f"round {rnd}: no active participants{detail}")
 
-    def build(members):
+    def build(members, stale=()):
         """Program + pure upload schedule over one membership (cohort
-        indices). Nothing here touches runtime or store state, so the
-        fault-tolerant path can probe arrival times before committing."""
-        sub = [client_grads[i] for i in members]
-        spec = RoundSpec(rnd=rnd, n=len(members),
+        indices), plus any staleness-weighted re-entries appended after
+        the fresh members (their PUTs complete at the buffered re-entry
+        times, not this round's upload schedule). Nothing here touches
+        runtime or store state, so the fault-tolerant path can probe
+        arrival times before committing."""
+        sub = [client_grads[i] for i in members] \
+            + [e.grad for e, _w in stale]
+        weights = None if not stale else tuple(
+            [1.0] * len(members) + [w for _e, w in stale])
+        spec = RoundSpec(rnd=rnd, n=len(sub),
                          grad_bytes=int(np.asarray(sub[0]).nbytes),
-                         limits=limits, options=options, codec=cdc)
+                         limits=limits, options=options, codec=cdc,
+                         weights=weights)
         prog = topo.program(sub, spec, backend)
         up, put_times = _upload_schedule(
-            upload, members, n, rnd, base, client_ready_s, prog.uploads,
-            stalls)
+            upload, members, n, rnd, base, client_ready_s,
+            prog.uploads[:len(members)], stalls)
+        for pos in range(len(members), len(sub)):
+            e, _w = stale[pos - len(members)]
+            put_times.append([(key, e.ready_s)
+                              for key, _nb in prog.uploads[pos]])
         return sub, prog, up, put_times
 
     sub, prog, up, put_times = build(order)
+
+    # stale re-entry bookkeeping needs the *pre-cut* probe: a late
+    # client's re-entry time is its probed upload completion, and a
+    # dropped client's upload shape (key count / byte sizes) is the same
+    # as any member's
+    stale_active = staleness_policy is not None and stale_buffer is not None
+    if stale_active:
+        probe_end = {i: up.end_s[pos] for pos, i in enumerate(order)}
+        probe_key_bytes = tuple(prog.uploads[0])
 
     # -- deadline / quorum cut on the probed arrival times -------------------
     late: tuple = ()
     deadline_abs = None if deadline_s is None else base + float(deadline_s)
     if deadline_abs is not None or sched == "quorum":
+        if sched == "quorum" and quorum is not None \
+                and deadline_abs is not None:
+            # precedence: the deadline cuts first, the quorum gates
+            # within its survivors — a quorum the post-deadline arrivals
+            # cannot satisfy is a config error, not a silent smaller fold
+            survivors = arrival_order(up.end_s, deadline_s=deadline_abs)
+            if len(survivors) < quorum:
+                raise ValueError(
+                    f"round {rnd}: quorum={quorum} exceeds the "
+                    f"{len(survivors)} arrival(s) left by the deadline "
+                    f"({deadline_s:.3f} s); the deadline cuts first and "
+                    f"the quorum gates within its survivors — lower the "
+                    f"quorum or relax the deadline")
         keep = arrival_order(up.end_s, quorum=quorum,
                              deadline_s=deadline_abs)
         if not keep:
@@ -809,6 +933,18 @@ def run_round(topology: str | Topology,
             order = kept
             sub, prog, up, put_times = build(order)
 
+    # -- stale re-entry: fold buffered gradients available by the cut --------
+    # the cut is this round's deterministic completion frontier: the
+    # deadline when one is set, else the (post-cut) fresh upload span —
+    # which under schedule="quorum" is exactly the q-th fresh arrival.
+    # Stale entries never gate the quorum; they ride along, weighted.
+    stale_sel: list = []
+    if stale_active:
+        cut_s = deadline_abs if deadline_abs is not None else up.span_end_s
+        stale_sel = stale_buffer.take_ready(cut_s, rnd, staleness_policy)
+        if stale_sel:
+            sub, prog, up, put_times = build(order, stale_sel)
+
     # -- client uploads: values land immediately, availability is modeled ----
     for key, value in prog.client_puts:
         store.put(key, value)
@@ -817,7 +953,12 @@ def run_round(topology: str | Topology,
     # -- aggregation phases ---------------------------------------------------
     shared: dict = {}
     handles = []
+    hedges = hedge_wins = 0
+    hedging = hedge_factor is not None and not barrier
     prev_end = max(base, up.span_end_s)
+    if stale_sel:
+        # a barrier waits for every folded input, stale re-entries included
+        prev_end = max(prev_end, max(e.ready_s for e, _w in stale_sel))
     if barrier and late and deadline_abs is not None:
         # stragglers were cut: the barrier only learns membership at T
         prev_end = max(prev_end, deadline_abs)
@@ -844,10 +985,39 @@ def run_round(topology: str | Topology,
                 avail = [runtime.avail.time_of(key, base)
                          for key in inv.in_keys[:inv_k]]
                 launch = max(base, ReadAheadWindow.launch_s(avail, inv_k))
+                hedge_this = hedging and not inv.colocated_in
+                if hedge_this:
+                    was_warm = runtime.is_warm(inv.fn_name)
                 ph.invoke_reliable(
                     body, fn_name=inv.fn_name, memory_mb=mem,
                     straggler_threshold_s=straggler_threshold_s,
                     launch_s=launch, wait_avail=True, out_key=inv.out_key)
+                if hedge_this:
+                    # speculative hedging: replay the aggregator's fault-
+                    # free expected finish off its read-ahead frontier
+                    # (the exact cost-model parity arithmetic); a primary
+                    # whose retry chain overran the hedge threshold races
+                    # a replica on the same keyspace — first finisher
+                    # wins, the loser stays billed
+                    rec = ph.winners[-1]
+                    exp = cm.expected_fold_finish_s(
+                        launch,
+                        [runtime.avail.time_of(key, base)
+                         for key in inv.in_keys],
+                        [inv.alloc_bytes] * len(inv.in_keys),
+                        inv.alloc_bytes, limits, cold=not was_warm,
+                        readahead_k=inv_k,
+                        wire_bytes=None if inv.wire_in_bytes is None
+                        else [inv.wire_in_bytes] * len(inv.in_keys),
+                        decode_s=cdc.decode_cost_s(inv.alloc_bytes)
+                        if inv.wire_in_bytes is not None else 0.0)
+                    thresh = launch + float(hedge_factor) * (exp - launch)
+                    if rec.end_s > thresh:
+                        hedges += 1
+                        hedge_wins += int(ph.hedge_last(
+                            body, fn_name=inv.fn_name + "~hedge",
+                            memory_mb=mem, launch_s=thresh,
+                            out_key=inv.out_key))
         prev_end = runtime.finish_phase(ph, barrier=barrier)
         handles.append(ph)
     agg_end = prev_end
@@ -888,6 +1058,35 @@ def run_round(topology: str | Topology,
     round_end = max(agg_end, max(client_done, default=agg_end))
     runtime.advance_to(round_end)
 
+    # -- stale admission: this round's casualties re-enter later rounds ------
+    if stale_active:
+        # late clients: the upload actually completed — at its probed
+        # (pre-cut) time — the round just moved on without it
+        for i in late:
+            stale_buffer.add(i, rnd, probe_end[i], client_grads[i])
+        if dropped:
+            # dropped clients: the device died mid-round and retries its
+            # upload after coming back — probed completion (same seeded
+            # membership-independent draws) plus the policy's fixed
+            # re-entry delay
+            dm = list(dropped)
+            up_d, _ = _upload_schedule(
+                upload, dm, n, rnd, base, client_ready_s,
+                [probe_key_bytes] * len(dm), stalls)
+            for pos, i in enumerate(dm):
+                stale_buffer.add(
+                    i, rnd,
+                    up_d.end_s[pos] + staleness_policy.reentry_delay_s,
+                    client_grads[i])
+
+    stale_folded = tuple((e.client, rnd - e.origin_rnd)
+                         for e, _w in stale_sel)
+    hist: dict = {}
+    for _c, s in stale_folded:
+        hist[s] = hist.get(s, 0) + 1
+    fold_weights = None if not stale_sel else tuple(
+        [1.0] * len(order) + [w for _e, w in stale_sel])
+
     recs = runtime.records[rec_start:]
     return AggregationResult(
         topology=prog.topology, avg_flat=avg,
@@ -897,7 +1096,7 @@ def run_round(topology: str | Topology,
         peak_memory_mb=max(r.peak_memory_mb for r in recs),
         engine=backend.name, schedule=sched, readahead_k=readahead,
         codec=cdc.name,
-        codec_error=_codec_error(cdc, avg, sub)
+        codec_error=_codec_error(cdc, avg, sub, fold_weights)
         if track_codec_error else float("nan"),
         round_start_s=base, round_end_s=round_end,
         client_done_s=client_done,
@@ -905,24 +1104,37 @@ def run_round(topology: str | Topology,
         dropped=dropped, late=late,
         delivered_fraction=len(order) / len(participants),
         retries=sum(1 for r in recs if r.failed and not r.speculative),
+        stale_folded=stale_folded,
+        staleness_histogram=tuple(sorted(hist.items())),
+        hedges=hedges, hedge_wins=hedge_wins,
         limits=limits)
 
 
 def _codec_error(codec: WireCodec, avg: np.ndarray,
-                 client_grads: Sequence[np.ndarray]) -> float:
+                 client_grads: Sequence[np.ndarray],
+                 weights: Sequence[float] | None = None) -> float:
     """Max-abs deviation of the round's average from the uncompressed
     streaming-mean reference — the per-round accuracy cost of a lossy
     wire codec, deterministic across engines, schedules and arrival
     permutations (encode/decode are pure functions of the inputs).
     Identity is 0.0 by definition (bit-identity holds by construction);
     for tree topologies the reference's f32 left-fold differs from the
-    weighted f64 fold by ~1 ulp, which lossy-codec errors dwarf."""
+    weighted f64 fold by ~1 ulp, which lossy-codec errors dwarf. A
+    staleness-weighted round compares against the matching weighted
+    mean (``weights`` parallel to ``client_grads``)."""
     if codec.lossless or avg.size == 0:
         return 0.0
-    ref = np.asarray(client_grads[0], np.float32).copy()
-    for g in client_grads[1:]:
-        ref += np.asarray(g, np.float32)
-    ref /= np.float32(len(client_grads))
+    if weights is None:
+        ref = np.asarray(client_grads[0], np.float32).copy()
+        for g in client_grads[1:]:
+            ref += np.asarray(g, np.float32)
+        ref /= np.float32(len(client_grads))
+    else:
+        ref = np.asarray(client_grads[0], np.float32) \
+            * np.float32(weights[0])
+        for g, w in zip(client_grads[1:], weights[1:]):
+            ref += np.asarray(g, np.float32) * np.float32(w)
+        ref /= np.float32(sum(weights))
     return float(np.max(np.abs(avg - ref)))
 
 
@@ -992,6 +1204,7 @@ class GradsShardingTopology(Topology):
                 in_keys=tuple(k_client_shard(rnd, i, j) for i in range(n)),
                 out_key=k_avg_shard(rnd, j),
                 alloc_bytes=shard_bytes[j],
+                weights=spec.weights,
                 wire_in_bytes=wire_bytes[j])
             for j in range(m))
         readback = tuple((k_avg_shard(rnd, j), shard_bytes[j])
@@ -1050,12 +1263,15 @@ class LambdaFLTopology(Topology):
             client_grads, rnd, codec=spec.codec)
         k = cm.lambda_fl_branching(n)
         groups = tree_groups(n, k)
+        w = spec.weights
         leaves = tuple(
             InvocationSpec(
                 fn_name=f"r{rnd}-leaf{leaf}",
                 in_keys=tuple(k_client_grad(rnd, i) for i in members),
                 out_key=k_partial(rnd, 1, leaf),
                 alloc_bytes=grad_bytes,
+                weights=None if w is None
+                else tuple(w[i] for i in members),
                 wire_in_bytes=wire_grad)
             for leaf, members in enumerate(groups))
         root = InvocationSpec(
@@ -1064,7 +1280,9 @@ class LambdaFLTopology(Topology):
                           for leaf in range(len(groups))),
             out_key=k_global(rnd),
             alloc_bytes=grad_bytes,
-            weights=tuple(float(len(members)) for members in groups),
+            weights=tuple(float(len(members)) if w is None
+                          else float(sum(w[i] for i in members))
+                          for members in groups),
             global_out=True)
         return RoundProgram(
             topology="lambda_fl", client_puts=puts, uploads=uploads,
@@ -1103,7 +1321,10 @@ class LIFLTopology(Topology):
         b = cm.lifl_branching(n)
         phases = []
         level_keys = [k_client_grad(rnd, i) for i in range(n)]
-        level_weights = [1.0] * n
+        # every LIFL level is already weight-carrying, so staleness
+        # weights simply seed the level-1 weights instead of all-ones
+        level_weights = list(spec.weights) if spec.weights is not None \
+            else [1.0] * n
         n_levels = 3
         for level in range(1, n_levels + 1):
             groups = tree_groups(len(level_keys), b) if level < n_levels \

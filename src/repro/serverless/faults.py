@@ -34,6 +34,19 @@ invocation, and validation keeps ``max_failures`` below the runtime's
 retry budget — a seeded faulty round always completes (the simulator
 asserts graceful degradation, not crash loops).
 
+**Stale re-entry determinism contract.** A dropped/late client's round-r
+gradient persists in a per-session :class:`StaleBuffer` and re-enters a
+later round's fold weighted by a :class:`StalenessPolicy`. Everything
+about re-entry is a pure function of ``(seed, round)``: a late client's
+re-entry time is its probed upload completion (drawn from the same
+membership-independent ``[seed, rnd, STREAM]`` cohort streams above), a
+dropped client's is that probed completion plus the policy's fixed
+``reentry_delay_s``, and eligibility is decided against the round's
+deterministic cut (deadline, q-th fresh arrival, or fresh upload span).
+No new random stream is introduced, so stale re-entry replays
+identically across engines and schedules, and a round that folds no
+stale entries is bit-for-bit the zero-policy path.
+
 The model duck-types :class:`repro.serverless.runtime.FaultPlan`
 (``failure``/``slowdown``/``retry_backoff_s``), so it plugs straight into
 ``LambdaRuntime(faults=...)``; the round driver binds it there itself
@@ -133,6 +146,116 @@ class FaultModel:
     def is_empty(self) -> bool:
         return (self.dropout_rate <= 0.0 and self.stall_rate <= 0.0
                 and self.failure_rate <= 0.0 and self.retry_backoff_s <= 0.0)
+
+
+_STALENESS_KINDS = ("constant", "polynomial", "cutoff")
+
+
+@dataclass(frozen=True)
+class StalenessPolicy:
+    """How much a stale gradient counts when it re-enters a later fold.
+
+    ``weight(s)`` maps a staleness ``s = fold_round - origin_round``
+    (always >= 1) to a fold weight; fresh contributions always weigh 1.0.
+
+      * ``constant`` — stale counts like fresh (weight 1.0);
+      * ``polynomial`` — ``1 / (1 + s) ** alpha``, the FedBuff-style
+        polynomial staleness discount;
+      * ``cutoff`` — weight 1.0 up to ``max_staleness``, discarded after.
+
+    ``max_staleness`` composes with any kind (entries older than S are
+    dropped from the buffer); ``cutoff`` requires it. ``reentry_delay_s``
+    is the fixed extra delay before a *dropped* client's gradient becomes
+    available again (its device retries the upload after coming back);
+    late clients re-enter at their probed upload completion unchanged.
+    Deterministic: ``weight`` draws no randomness.
+    """
+
+    kind: str = "polynomial"
+    alpha: float = 0.5
+    max_staleness: int | None = None
+    reentry_delay_s: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.kind not in _STALENESS_KINDS:
+            raise ValueError(f"StalenessPolicy.kind must be one of "
+                             f"{_STALENESS_KINDS}, got {self.kind!r}")
+        if self.alpha < 0.0:
+            raise ValueError("StalenessPolicy.alpha must be >= 0")
+        if self.reentry_delay_s < 0.0:
+            raise ValueError("StalenessPolicy.reentry_delay_s must be >= 0")
+        if self.max_staleness is not None and self.max_staleness < 1:
+            raise ValueError("StalenessPolicy.max_staleness must be >= 1")
+        if self.kind == "cutoff" and self.max_staleness is None:
+            raise ValueError("StalenessPolicy(kind='cutoff') requires "
+                             "max_staleness")
+
+    def weight(self, staleness: int) -> float:
+        """Fold weight of a gradient ``staleness`` rounds old (0.0 = drop)."""
+        if staleness < 1:
+            raise ValueError(f"staleness must be >= 1, got {staleness}")
+        if self.max_staleness is not None and staleness > self.max_staleness:
+            return 0.0
+        if self.kind == "polynomial":
+            return (1.0 + float(staleness)) ** -self.alpha
+        return 1.0
+
+
+@dataclass(frozen=True)
+class StaleEntry:
+    """One buffered stale contribution: who, from which round, available
+    when (absolute session time), and the gradient itself (held by
+    reference — callers must not mutate round gradients after the fact)."""
+
+    client: int
+    origin_rnd: int
+    ready_s: float
+    grad: object    # np.ndarray; object-typed to keep the dataclass frozen
+
+
+class StaleBuffer:
+    """Per-session FIFO of dropped/late clients' gradients awaiting re-entry.
+
+    The round driver ``add``s entries when a client is cut (deterministic
+    insertion order: late clients in cohort-index order, then dropped
+    clients in cohort-index order, per round) and ``take_ready``s the
+    eligible ones at the next round's cut. Entries whose policy weight
+    has decayed to zero (``cutoff`` past ``max_staleness``) are pruned —
+    staleness only grows, so they could never fold later.
+    """
+
+    def __init__(self) -> None:
+        self._entries: list[StaleEntry] = []
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def entries(self) -> tuple:
+        return tuple(self._entries)
+
+    def add(self, client: int, origin_rnd: int, ready_s: float,
+            grad) -> None:
+        self._entries.append(
+            StaleEntry(int(client), int(origin_rnd), float(ready_s), grad))
+
+    def take_ready(self, cut_s: float, rnd: int,
+                   policy: StalenessPolicy) -> list:
+        """Pop entries available by ``cut_s`` with nonzero weight at round
+        ``rnd``; returns ``[(entry, weight), ...]`` in buffer order and
+        prunes expired entries."""
+        taken, kept = [], []
+        for e in self._entries:
+            w = policy.weight(rnd - e.origin_rnd) if rnd > e.origin_rnd \
+                else 1.0
+            if w <= 0.0:
+                continue            # expired for good — prune
+            if e.ready_s <= cut_s and rnd > e.origin_rnd:
+                taken.append((e, w))
+            else:
+                kept.append(e)
+        self._entries = kept
+        return taken
 
 
 def fault_model_from_env(env: str = "REPRO_AGG_FAULTS",

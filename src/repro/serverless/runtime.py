@@ -294,6 +294,33 @@ class PhaseHandle:
                             rec.end_s, priority=1)
         return result, rec
 
+    def hedge_last(self, fn, *, fn_name: str, memory_mb: float,
+                   launch_s: float, out_key: str | None = None,
+                   timeout_s: float | None = None) -> bool:
+        """Launch a speculative hedge replica racing the phase's last
+        reliable invocation: a single best-effort attempt under its own
+        function name (own warm-pool slot, own failure stream), flagged
+        ``speculative`` so it never counts as a retry. The earlier
+        finisher becomes the invocation's winner — ties keep the primary
+        (the event sim's deterministic tie-break) — and the loser stays
+        billed. A winning hedge republishes ``out_key`` at its earlier
+        completion (the availability map keeps the minimum, so
+        first-finisher-wins composes with the primary's publish).
+        Returns True iff the hedge won."""
+        primary = self.winners[-1]
+        _result, rec = self._rt.invoke(
+            fn, fn_name=fn_name, memory_mb=memory_mb, timeout_s=timeout_s,
+            attempt=0, speculative=True, start_s=launch_s, wait_avail=True)
+        if rec.failed or rec.end_s >= primary.end_s:
+            return False
+        self.winners[-1] = rec
+        self.end_s = max((r.end_s for r in self.winners),
+                         default=self.start_s)
+        if out_key is not None:
+            self._rt.sim.at(rec.end_s, self._rt.avail.publish, out_key,
+                            rec.end_s, priority=1)
+        return True
+
     @property
     def wall_s(self) -> float:
         return max((r.duration_s for r in self.winners), default=0.0)
@@ -353,6 +380,12 @@ class LambdaRuntime:
         concurrency; the paper's Table IV excludes cold starts this way."""
         for name in fn_names:
             self._check_warm(fn_family(name))
+
+    def is_warm(self, fn_name: str) -> bool:
+        """Read-only warm-pool probe (no LRU touch, no eviction) — lets
+        the round driver predict whether an invocation will cold-start
+        without perturbing the pool it is predicting."""
+        return fn_family(fn_name) in self._warm
 
     def _check_warm(self, family: str) -> bool:
         """True if the family has a warm container; touches LRU order and

@@ -1,0 +1,553 @@
+"""Straggler re-entry, staleness-weighted folds, speculative hedging, and
+the analytical quorum/deadline walls.
+
+The contracts under test:
+
+  * **stale re-entry** — a dropped/late client's round-r upload persists
+    in the session's :class:`StaleBuffer` and folds into a later round
+    weighted by the :class:`StalenessPolicy`; the result average equals
+    the *weighted* survivor mean (fresh weight 1.0), bit-identically
+    across engines, and replays deterministically from ``(seed, round)``.
+  * **zero-policy no-op** — a configured policy that never folds a stale
+    entry (and a hedge factor that never fires) leaves the round
+    bit-for-bit on the legacy path.
+  * **quorum + deadline precedence** — the deadline cuts first, the
+    quorum gates within its survivors; a quorum the post-deadline
+    arrivals cannot satisfy raises ``ValueError`` (driver and analytic
+    model alike).
+  * **speculative hedging** — a primary whose retry chain overruns
+    ``hedge_factor`` x its fault-free expected finish races a replica;
+    first finisher wins deterministically, the loser stays billed, the
+    fold average never changes.
+  * **analytical walls** — ``quorum_round_cost`` / ``deadline_round_cost``
+    match the event sim to float epsilon across topology x codec x
+    readahead_k (the barrier/pipelined parity standard).
+  * **compaction-proof accounting** — cumulative fault counters survive
+    ``keep_records=False`` across engine x schedule.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # bare env: deterministic fallback
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
+
+from repro.api import FederatedSession, SessionConfig
+from repro.core import cost_model as cm
+from repro.core.topology import validate_fault_knobs
+from repro.serverless.faults import (FaultModel, StaleBuffer, StaleEntry,
+                                     StalenessPolicy)
+
+ENGINES = ("streaming", "batched", "incremental")
+TOPOLOGIES = ("gradssharding", "lambda_fl", "lifl", "sharded_tree")
+
+UPLOAD = cm.UploadModel(mbps=16.0, jitter_s=3.0, rate_jitter=0.5, seed=11)
+# membership faults only — failure_rate=0 keeps the analytic walls exact
+MEMBER_FAULTS = FaultModel(dropout_rate=0.2, stall_rate=0.2, stall_s=4.0,
+                           seed=9)
+# invocation failures only — what makes primaries lag and hedges fire
+FAIL_FAULTS = FaultModel(failure_rate=0.4, retry_backoff_s=0.5, seed=9)
+POLY = StalenessPolicy(kind="polynomial", alpha=0.5)
+
+N, ELEMS = 12, 512
+
+
+def _grads(n=N, elems=ELEMS, seed=1234):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal(elems).astype(np.float32) for _ in range(n)]
+
+
+def _session(**over):
+    cfg = dict(topology="gradssharding", n_shards=4, schedule="pipelined",
+               upload=UPLOAD, readahead_k=1, codec="identity")
+    cfg.update(over)
+    return FederatedSession(SessionConfig(**cfg))
+
+
+def _weighted_ref(grads, result, policy):
+    members = [grads[i] for i in result.arrivals]
+    w = [1.0] * len(members) \
+        + [policy.weight(s) for _c, s in result.stale_folded]
+    g = members + [grads[c] for c, _s in result.stale_folded]
+    return np.average(np.stack(g), axis=0, weights=w)
+
+
+# ---------------------------------------------------------------------------
+# StalenessPolicy / StaleBuffer units
+# ---------------------------------------------------------------------------
+
+class TestStalenessPolicy:
+    def test_kinds(self):
+        assert StalenessPolicy("constant").weight(5) == 1.0
+        assert StalenessPolicy("polynomial", alpha=1.0).weight(1) \
+            == pytest.approx(0.5)
+        assert StalenessPolicy("polynomial", alpha=0.0).weight(9) == 1.0
+        cut = StalenessPolicy("cutoff", max_staleness=2)
+        assert cut.weight(2) == 1.0 and cut.weight(3) == 0.0
+
+    def test_max_staleness_composes_with_any_kind(self):
+        p = StalenessPolicy("polynomial", alpha=0.5, max_staleness=3)
+        assert p.weight(3) > 0.0 and p.weight(4) == 0.0
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="kind"):
+            StalenessPolicy("linear")
+        with pytest.raises(ValueError, match="alpha"):
+            StalenessPolicy(alpha=-0.1)
+        with pytest.raises(ValueError, match="max_staleness"):
+            StalenessPolicy(max_staleness=0)
+        with pytest.raises(ValueError, match="cutoff"):
+            StalenessPolicy("cutoff")
+        with pytest.raises(ValueError, match="reentry_delay_s"):
+            StalenessPolicy(reentry_delay_s=-1.0)
+        with pytest.raises(ValueError, match="staleness"):
+            POLY.weight(0)
+
+    def test_buffer_take_ready(self):
+        buf = StaleBuffer()
+        g = np.zeros(4, np.float32)
+        buf.add(3, 0, 5.0, g)          # ready by the cut
+        buf.add(4, 0, 50.0, g)         # not yet ready — stays buffered
+        taken = buf.take_ready(10.0, 1, POLY)
+        assert [(e.client, w) for e, w in taken] \
+            == [(3, pytest.approx(POLY.weight(1)))]
+        assert len(buf) == 1 and buf.entries[0].client == 4
+
+    def test_buffer_never_folds_into_origin_round(self):
+        buf = StaleBuffer()
+        buf.add(3, 2, 0.0, np.zeros(4, np.float32))
+        assert buf.take_ready(100.0, 2, POLY) == []   # same round: s=0
+        assert len(buf) == 1
+        assert len(buf.take_ready(100.0, 3, POLY)) == 1
+
+    def test_buffer_prunes_expired(self):
+        buf = StaleBuffer()
+        buf.add(3, 0, 0.0, np.zeros(4, np.float32))
+        cut = StalenessPolicy("cutoff", max_staleness=2)
+        assert buf.take_ready(0.0, 5, cut) == []      # s=5 > max: pruned
+        assert len(buf) == 0
+
+    def test_entry_is_frozen(self):
+        e = StaleEntry(1, 0, 2.0, None)
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            e.client = 2
+
+
+# ---------------------------------------------------------------------------
+# Knob validation
+# ---------------------------------------------------------------------------
+
+class TestRobustnessKnobValidation:
+    def test_staleness_policy_type(self):
+        with pytest.raises(TypeError, match="StalenessPolicy"):
+            validate_fault_knobs("pipelined", staleness_policy="polynomial")
+        validate_fault_knobs("pipelined", staleness_policy=POLY)
+
+    def test_hedge_factor_bounds(self):
+        with pytest.raises(ValueError, match="hedge_factor"):
+            validate_fault_knobs("pipelined", hedge_factor=1.0)
+        with pytest.raises(ValueError, match="barrier"):
+            validate_fault_knobs("barrier", hedge_factor=1.5)
+        validate_fault_knobs("quorum", quorum=4, hedge_factor=1.5)
+
+    def test_session_validates_eagerly(self):
+        with pytest.raises(ValueError, match="hedge_factor"):
+            _session(hedge_factor=0.9)
+        with pytest.raises(TypeError, match="StalenessPolicy"):
+            _session(staleness_policy=object())
+
+    def test_env_auto_full_quorum(self, monkeypatch):
+        # REPRO_AGG_SCHEDULE=quorum without an explicit quorum= runs the
+        # full-quorum semi-async fold (all arrivals, arrival order) ...
+        monkeypatch.setenv("REPRO_AGG_SCHEDULE", "quorum")
+        grads = _grads()
+        r = _session(schedule=None).round(grads)
+        assert r.schedule == "quorum"
+        assert sorted(r.arrivals) == list(range(N))
+        assert list(r.arrivals) != sorted(r.arrivals)   # UPLOAD jitter bites
+        np.testing.assert_allclose(
+            r.avg_flat,
+            np.mean(np.stack(grads), axis=0).astype(np.float32),
+            rtol=1e-4, atol=1e-6)   # arrival order reorders the f32 fold
+
+    def test_explicit_quorum_schedule_still_requires_quorum(self):
+        # ... but spelling schedule="quorum" in code still demands the knob
+        with pytest.raises(ValueError, match="quorum"):
+            _session(schedule="quorum")
+
+
+# ---------------------------------------------------------------------------
+# Stale re-entry
+# ---------------------------------------------------------------------------
+
+class TestStaleReentry:
+    def _run(self, rounds=3, **over):
+        grads = _grads()
+        cfg = dict(deadline_s=6.0, staleness_policy=POLY,
+                   faults=MEMBER_FAULTS)
+        cfg.update(over)
+        s = _session(**cfg)
+        return grads, s, [s.round(grads) for _ in range(rounds)]
+
+    def test_straggler_grad_lands_in_later_round(self):
+        grads, s, rs = self._run()
+        assert any(r.late or r.dropped for r in rs)
+        folded = [cs for r in rs for cs in r.stale_folded]
+        assert folded, "seeded casualties must re-enter"
+        casualties = {i for r in rs for i in (*r.late, *r.dropped)}
+        assert {c for c, _s in folded} <= casualties
+        assert all(s >= 1 for _c, s in folded)
+
+    def test_weighted_survivor_mean_all_engines(self):
+        bits = set()
+        for eng in ENGINES:
+            grads, s, rs = self._run(engine=eng)
+            with_stale = [r for r in rs if r.stale_folded]
+            assert with_stale
+            for r in with_stale:
+                np.testing.assert_allclose(
+                    r.avg_flat, _weighted_ref(grads, r, POLY),
+                    rtol=1e-5, atol=1e-6)
+            bits.add(tuple(r.avg_flat.tobytes() for r in rs))
+        assert len(bits) == 1          # engines bit-identical, stale included
+
+    def test_deterministic_replay(self):
+        _g, _s, a = self._run()
+        _g, _s, b = self._run()
+        for ra, rb in zip(a, b):
+            assert ra.stale_folded == rb.stale_folded
+            assert ra.staleness_histogram == rb.staleness_histogram
+            assert np.array_equal(ra.avg_flat, rb.avg_flat)
+            assert ra.wall_clock_s == rb.wall_clock_s
+
+    def test_histogram_matches_stale_folded(self):
+        _g, _s, rs = self._run()
+        for r in rs:
+            hist = {}
+            for _c, sn in r.stale_folded:
+                hist[sn] = hist.get(sn, 0) + 1
+            assert r.staleness_histogram == tuple(sorted(hist.items()))
+
+    def test_cutoff_policy_discards_old_entries(self):
+        pol = StalenessPolicy("cutoff", max_staleness=1,
+                              reentry_delay_s=50.0)
+        grads, s, rs = self._run(rounds=4, staleness_policy=pol)
+        # dropped clients re-enter 50 s late: staleness > 1 by then, so
+        # the cutoff prunes them; only s=1 (late-client) folds survive
+        assert all(sn <= 1 for r in rs for _c, sn in r.stale_folded)
+
+    def test_stale_entry_folds_at_most_once(self):
+        # a buffered (client, origin-round) entry is consumed by the fold
+        # that takes it — it can never re-fold in a later round (the
+        # client itself may participate fresh again; that's a distinct
+        # contribution)
+        _g, _s, rs = self._run(rounds=5)
+        origins = [(c, rnd - s) for rnd, r in enumerate(rs)
+                   for c, s in r.stale_folded]
+        assert len(origins) == len(set(origins))
+
+    def test_quorum_counts_fresh_arrivals_only(self):
+        grads, s, rs = self._run(schedule="quorum", quorum=5,
+                                 deadline_s=None)
+        assert any(r.stale_folded for r in rs)
+        for r in rs:
+            assert len(r.arrivals) == 5        # quorum gates fresh uploads
+
+    def test_policy_without_casualties_is_bit_identical(self):
+        grads = _grads()
+        ref = _session().round(grads)
+        r = _session(staleness_policy=POLY).round(grads)
+        assert np.array_equal(ref.avg_flat, r.avg_flat)
+        assert ref.wall_clock_s == r.wall_clock_s
+        assert ref.puts == r.puts and ref.gets == r.gets
+        assert r.stale_folded == () and r.staleness_histogram == ()
+
+    def test_functional_alias_threads_buffer(self):
+        from repro.core.aggregation import aggregate_round
+        from repro.serverless.runtime import LambdaRuntime
+        from repro.store import ObjectStore
+        grads = _grads()
+        buf, store, rt = StaleBuffer(), ObjectStore(), LambdaRuntime()
+        kw = dict(store=store, runtime=rt, upload=UPLOAD,
+                  faults=MEMBER_FAULTS, deadline_s=6.0,
+                  staleness_policy=POLY, stale_buffer=buf, n_shards=4)
+        r0 = aggregate_round("gradssharding", grads, rnd=0, **kw)
+        assert len(buf) == len(r0.late) + len(r0.dropped)
+        r1 = aggregate_round("gradssharding", grads, rnd=1, **kw)
+        assert r1.stale_folded       # round-0 casualties land in round 1
+
+
+# ---------------------------------------------------------------------------
+# Quorum + deadline precedence
+# ---------------------------------------------------------------------------
+
+class TestQuorumDeadlinePrecedence:
+    def test_deadline_cuts_first_quorum_gates_within(self):
+        grads = _grads()
+        dl = _session(deadline_s=6.0, faults=MEMBER_FAULTS).round(grads)
+        assert dl.late                     # the deadline actually cuts
+        q = len(dl.arrivals) - 1
+        both = _session(schedule="quorum", quorum=q, deadline_s=6.0,
+                        faults=MEMBER_FAULTS).round(grads)
+        assert len(both.arrivals) == q
+        assert set(both.arrivals) <= set(dl.arrivals)
+        assert set(both.late) >= set(dl.late)
+
+    def test_degenerate_quorum_raises_with_pointer(self):
+        grads = _grads()
+        dl = _session(deadline_s=6.0, faults=MEMBER_FAULTS).round(grads)
+        q = len(dl.arrivals) + 1           # unsatisfiable after the cut
+        with pytest.raises(ValueError, match="deadline cuts first"):
+            _session(schedule="quorum", quorum=q, deadline_s=6.0,
+                     faults=MEMBER_FAULTS).round(grads)
+
+    def test_order_independent_of_knob_spelling(self):
+        # the precedence is semantic, not argument-order: both configs
+        # construct identical rounds
+        grads = _grads()
+        a = _session(schedule="quorum", quorum=6, deadline_s=6.0,
+                     faults=MEMBER_FAULTS).round(grads)
+        b = FederatedSession(SessionConfig(
+            deadline_s=6.0, quorum=6, schedule="quorum",
+            topology="gradssharding", n_shards=4, upload=UPLOAD,
+            readahead_k=1, codec="identity",
+            faults=MEMBER_FAULTS)).round(grads)
+        assert a.arrivals == b.arrivals
+        assert np.array_equal(a.avg_flat, b.avg_flat)
+
+    def test_satisfiable_quorum_with_loose_deadline_is_plain_quorum(self):
+        grads = _grads()
+        a = _session(schedule="quorum", quorum=5).round(grads)
+        b = _session(schedule="quorum", quorum=5,
+                     deadline_s=1e6).round(grads)
+        assert a.arrivals == b.arrivals
+        assert np.array_equal(a.avg_flat, b.avg_flat)
+
+    def test_analytic_model_same_degenerate_error(self):
+        grads = _grads()
+        gb = int(np.asarray(grads[0]).nbytes)
+        dl = _session(deadline_s=6.0, faults=MEMBER_FAULTS).round(grads)
+        q = len(dl.arrivals) + 1
+        with pytest.raises(ValueError, match="deadline cuts first"):
+            cm.quorum_round_cost("gradssharding", gb, N, 4, upload=UPLOAD,
+                                 quorum=q, deadline_s=6.0,
+                                 faults=MEMBER_FAULTS)
+
+
+# ---------------------------------------------------------------------------
+# Speculative hedging
+# ---------------------------------------------------------------------------
+
+class TestHedging:
+    def _pair(self, rounds=4, sched="pipelined", **over):
+        grads = _grads()
+        kw = dict(faults=FAIL_FAULTS, schedule=sched)
+        if sched == "quorum":
+            kw["quorum"] = 8
+        kw.update(over)
+        hedged = _session(hedge_factor=1.2, **kw)
+        plain = _session(**kw)
+        hr = [hedged.round(grads) for _ in range(rounds)]
+        pr = [plain.round(grads) for _ in range(rounds)]
+        return grads, hedged, plain, hr, pr
+
+    @pytest.mark.parametrize("sched", ("pipelined", "quorum"))
+    def test_hedges_fire_and_never_change_the_average(self, sched):
+        _g, hs, ps, hr, pr = self._pair(sched=sched)
+        assert sum(r.hedges for r in hr) > 0      # seed 9 injects failures
+        for rh, rp in zip(hr, pr):
+            assert np.array_equal(rh.avg_flat, rp.avg_flat)
+            assert rh.retries == rp.retries       # hedges aren't retries
+            assert rh.arrivals == rp.arrivals
+
+    def test_winning_hedge_cuts_the_wall_loser_still_billed(self):
+        _g, hs, ps, hr, pr = self._pair()
+        wins = [(rh, rp) for rh, rp in zip(hr, pr) if rh.hedge_wins > 0]
+        assert wins, "seed 9 must produce at least one winning hedge"
+        for rh, rp in wins:
+            assert rh.wall_clock_s < rp.wall_clock_s
+        for rh, rp in zip(hr, pr):
+            assert rh.wall_clock_s <= rp.wall_clock_s + 1e-12
+        # every launched hedge is billed, wins and losses alike
+        assert hs.lambda_cost() > ps.lambda_cost()
+        spec = [x for r in hr for x in r.records if x.speculative]
+        assert len(spec) == sum(r.hedges for r in hr)
+        assert all(x.fn_name.endswith("~hedge") for x in spec)
+        assert all(x.billed_gb_s > 0.0 for x in spec)
+
+    def test_deterministic_replay(self):
+        _g, _hs, _ps, a, _ = self._pair()
+        _g, _hs, _ps, b, _ = self._pair()
+        for ra, rb in zip(a, b):
+            assert (ra.hedges, ra.hedge_wins) == (rb.hedges, rb.hedge_wins)
+            assert ra.wall_clock_s == rb.wall_clock_s
+            assert np.array_equal(ra.avg_flat, rb.avg_flat)
+
+    def test_hedge_has_own_warm_pool_family(self):
+        # the replica runs under fn~hedge — its own warm slot: the first
+        # hedge of a family is cold, and hedging never evicts the
+        # primary family's warm container (billing of the primaries in
+        # a hedged vs unhedged session stays identical)
+        _g, hs, ps, hr, pr = self._pair()
+        prim = lambda rs: [(x.fn_name, x.cold_start, x.billed_gb_s)
+                           for r in rs for x in r.records
+                           if not x.speculative]
+        assert prim(hr) == prim(pr)
+        from repro.serverless.runtime import fn_family
+        first_hedge = {}
+        for r in hr:
+            for x in r.records:
+                fam = fn_family(x.fn_name)
+                if x.speculative and fam not in first_hedge:
+                    first_hedge[fam] = x
+        assert first_hedge and all(x.cold_start
+                                   for x in first_hedge.values())
+
+    def test_fault_free_round_never_hedges(self):
+        grads = _grads()
+        ref = _session().round(grads)
+        r = _session(hedge_factor=1.000001).round(grads)
+        assert r.hedges == 0 and r.hedge_wins == 0
+        assert np.array_equal(ref.avg_flat, r.avg_flat)
+        assert ref.wall_clock_s == r.wall_clock_s
+
+    def test_expected_hedge_cost_analytics(self):
+        lim = cm.LambdaLimits()
+        assert cm.expected_hedge_cost(1024, 2.0, 0.0, lim) == 0.0
+        c1 = cm.expected_hedge_cost(1024, 2.0, 0.2, lim)
+        c2 = cm.expected_hedge_cost(1024, 2.0, 0.4, lim)
+        assert 0.0 < c1 < c2
+        assert cm.expected_hedge_cost(2048, 2.0, 0.2, lim) \
+            == pytest.approx(2 * c1)
+        assert cm.expected_hedge_cost(1024, 2.0, 0.2, lim, n_aggregators=4) \
+            == pytest.approx(4 * c1)
+
+
+# ---------------------------------------------------------------------------
+# Analytical quorum/deadline walls vs the event sim
+# ---------------------------------------------------------------------------
+
+class TestScheduledWallParity:
+    GB = ELEMS * 4
+
+    def _m(self, topology):
+        return 4 if topology in ("gradssharding", "sharded_tree") else 1
+
+    @pytest.mark.parametrize("topology", TOPOLOGIES)
+    @pytest.mark.parametrize("codec", ("identity", "fp16"))
+    @pytest.mark.parametrize("readahead_k", (1, 4))
+    def test_quorum_wall(self, topology, codec, readahead_k):
+        grads = _grads()
+        m = self._m(topology)
+        r = _session(topology=topology, n_shards=m, schedule="quorum",
+                     quorum=7, codec=codec, readahead_k=readahead_k,
+                     faults=MEMBER_FAULTS).round(grads)
+        c = cm.quorum_round_cost(topology, self.GB, N, m, upload=UPLOAD,
+                                 codec=codec, readahead_k=readahead_k,
+                                 quorum=7, faults=MEMBER_FAULTS)
+        assert r.wall_clock_s == pytest.approx(c.wall_clock_s, rel=1e-9)
+        assert sum(x.billed_gb_s for x in r.records) \
+            == pytest.approx(c.lambda_gb_s, rel=2e-2)   # 1 ms granularity
+
+    @pytest.mark.parametrize("topology", TOPOLOGIES)
+    @pytest.mark.parametrize("codec", ("identity", "fp16"))
+    @pytest.mark.parametrize("readahead_k", (1, 4))
+    def test_deadline_wall(self, topology, codec, readahead_k):
+        grads = _grads()
+        m = self._m(topology)
+        r = _session(topology=topology, n_shards=m, schedule="pipelined",
+                     deadline_s=6.0, codec=codec, readahead_k=readahead_k,
+                     faults=MEMBER_FAULTS).round(grads)
+        assert r.late                       # the deadline actually cuts
+        c = cm.deadline_round_cost(topology, self.GB, N, m, upload=UPLOAD,
+                                   codec=codec, readahead_k=readahead_k,
+                                   deadline_s=6.0, faults=MEMBER_FAULTS)
+        assert r.wall_clock_s == pytest.approx(c.wall_clock_s, rel=1e-9)
+
+    def test_quorum_composes_with_participation_and_deadline(self):
+        grads = _grads()
+        r = _session(schedule="quorum", quorum=4, participation_k=10,
+                     deadline_s=8.0, faults=MEMBER_FAULTS).round(grads)
+        c = cm.quorum_round_cost("gradssharding", self.GB, N, 4,
+                                 upload=UPLOAD, quorum=4,
+                                 participation_k=10, deadline_s=8.0,
+                                 faults=MEMBER_FAULTS)
+        assert r.wall_clock_s == pytest.approx(c.wall_clock_s, rel=1e-9)
+
+    def test_full_quorum_no_faults_matches_pipelined_model(self):
+        # quorum=None (env-auto) with no membership faults folds everyone
+        # in arrival order — the wall still matches the sim
+        grads = _grads()
+        c = cm.quorum_round_cost("gradssharding", self.GB, N, 4,
+                                 upload=UPLOAD, quorum=N)
+        r = _session(schedule="quorum", quorum=N).round(grads)
+        assert r.wall_clock_s == pytest.approx(c.wall_clock_s, rel=1e-9)
+
+    def test_deadline_wall_clamps_to_deadline(self):
+        # every fold can finish before T, but a cut round is only known
+        # complete at T itself — both sides clamp
+        grads = _grads()
+        r = _session(deadline_s=6.0, faults=MEMBER_FAULTS).round(grads)
+        c = cm.deadline_round_cost("gradssharding", self.GB, N, 4,
+                                   upload=UPLOAD, deadline_s=6.0,
+                                   faults=MEMBER_FAULTS)
+        assert r.late and c.wall_clock_s >= 6.0
+
+    def test_model_validates_like_the_driver(self):
+        with pytest.raises(RuntimeError, match="deadline"):
+            cm.deadline_round_cost("gradssharding", self.GB, N, 4,
+                                   upload=UPLOAD, deadline_s=1e-9)
+        with pytest.raises(RuntimeError, match="participants"):
+            cm.quorum_round_cost(
+                "gradssharding", self.GB, 4, 2, upload=UPLOAD, quorum=2,
+                faults=FaultModel(dropout_rate=1.0, seed=1))
+
+
+# ---------------------------------------------------------------------------
+# Cumulative fault accounting survives keep_records=False
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(engine=st.sampled_from(ENGINES),
+       schedule=st.sampled_from(("barrier", "pipelined", "quorum")),
+       seed=st.integers(0, 2**16))
+def test_property_fault_totals_survive_compaction(engine, schedule, seed):
+    grads = _grads(seed=seed)
+    fm = FaultModel(dropout_rate=0.2, stall_rate=0.2, stall_s=4.0,
+                    failure_rate=0.3, retry_backoff_s=0.5, seed=seed)
+    kw = dict(engine=engine, schedule=schedule, faults=fm,
+              staleness_policy=POLY, deadline_s=None
+              if schedule == "quorum" else 6.0)
+    if schedule == "quorum":
+        kw["quorum"] = 6
+    if schedule != "barrier":
+        kw["hedge_factor"] = 1.2
+    try:
+        compact = _session(keep_records=False, **kw)
+        results = [compact.round(grads) for _ in range(3)]
+    except RuntimeError:
+        assert fm.dropout_plan(N, 0).all() or fm.dropout_plan(N, 1).all() \
+            or fm.dropout_plan(N, 2).all()
+        return
+    full = _session(keep_records=True, **kw)
+    ref = [full.round(grads) for _ in range(3)]
+    # compaction must not change the rounds themselves ...
+    for rc, rf in zip(results, ref):
+        assert np.array_equal(rc.avg_flat, rf.avg_flat)
+    # ... and the cumulative counters must equal the per-round sums
+    expect = {
+        "retries": sum(r.retries for r in ref),
+        "dropped": sum(len(r.dropped) for r in ref),
+        "late": sum(len(r.late) for r in ref),
+        "stale_folded": sum(len(r.stale_folded) for r in ref),
+        "hedges": sum(r.hedges for r in ref),
+        "hedge_wins": sum(r.hedge_wins for r in ref),
+    }
+    assert compact.fault_totals == expect == full.fault_totals
+    assert compact.summary()["fault_totals"] == expect
+    # the records themselves were compacted away
+    assert len(compact.runtime.records) == 0
