@@ -1,0 +1,172 @@
+"""Cohort-scale sweep: N in {10^3..10^6} x {gradssharding, lambda_fl,
+geo_tiered} through the O(active) population engine.
+
+The paper's headline claim is that GradsSharding's per-function memory is
+O(|theta|/M) *independent of client count*. This sweep exercises that
+independence directly: each cell runs one full modeled round over a lazy
+:class:`~repro.serverless.population.ClientPopulation` — every aggregator
+invocation simulated (cold starts, stream folds, billing), client state
+O(active) — and reports the modeled wall, $/round, per-client cost, the
+host time the model itself took, and the *live sim state* peak
+(tracemalloc) next to the process RSS high-water mark. The closing
+crossover table answers the motivating question: which architecture is
+cheapest at each cohort scale?
+
+The runtime timeout wall is lifted (``max_timeout_s``) so the degenerate
+N=10^6 single-phase GradsSharding fan-in can be *priced* instead of
+raising ``LambdaTimeout`` — the feasibility walls themselves are
+analyzed in ``cost_model.feasible_shards`` and the rq benchmarks.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.scale_bench            # full sweep
+  PYTHONPATH=src python -m benchmarks.scale_bench --smoke    # N <= 10^4
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import resource
+import time
+import tracemalloc
+
+from benchmarks.common import emit_timing, header, table
+from repro.core.cost_model import UploadModel
+from repro.serverless.population import ClientPopulation, run_population_round
+from repro.serverless.runtime import DEFAULT_LIMITS, LambdaRuntime
+from repro.store import ObjectStore
+
+TOPOLOGIES = ("gradssharding", "lambda_fl", "geo_tiered")
+FULL_NS = (1_000, 10_000, 100_000, 1_000_000)
+SMOKE_NS = (1_000, 10_000)
+GRAD_ELEMS = 4_096
+UPLOAD = UploadModel(
+    mbps=16.0,
+    jitter_s=3.0,
+    rate_jitter=0.5,
+    compute_s=2.0,
+    compute_jitter=1.0,
+    seed=11,
+)
+# lift the Lambda timeout wall: price, don't refuse, the degenerate cells
+LIMITS = dataclasses.replace(DEFAULT_LIMITS, max_timeout_s=10_000_000)
+
+
+def run_cell(topology: str, n: int, grad_elems: int = GRAD_ELEMS) -> dict:
+    """One modeled round at cohort size ``n``; returns the reportables."""
+    pop = ClientPopulation(n, grad_elems=grad_elems, seed=1)
+    store = ObjectStore(log_ops=False)
+    runtime = LambdaRuntime(limits=LIMITS)
+    tracemalloc.start()
+    t0 = time.perf_counter()
+    r = run_population_round(
+        topology,
+        pop,
+        rnd=0,
+        store=store,
+        runtime=runtime,
+        upload=UPLOAD,
+        track_codec_error=False,
+    )
+    host_s = time.perf_counter() - t0
+    _, sim_peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    cost = r.total_cost()
+    return {
+        "topology": topology,
+        "n": n,
+        "wall_s": r.wall_clock_s,
+        "cost": cost,
+        "per_client_usd": cost / n,
+        "n_aggregators": len(r.records),
+        "puts": r.puts,
+        "gets": r.gets,
+        "host_s": host_s,
+        "sim_peak_mb": sim_peak / 1e6,
+        "rss_mb": rss_mb,
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="CI-sized subset (N <= 10^4)",
+    )
+    ap.add_argument("--grad-elems", type=int, default=GRAD_ELEMS)
+    args = ap.parse_args(argv)
+    ns = SMOKE_NS if args.smoke else FULL_NS
+
+    header()
+    cells = []
+    for n in ns:
+        for topology in TOPOLOGIES:
+            c = run_cell(topology, n, args.grad_elems)
+            cells.append(c)
+            emit_timing(
+                f"scale/{topology}/n{n}",
+                c["host_s"],
+                wall_s=c["wall_s"],
+                cost=c["cost"],
+                aggs=c["n_aggregators"],
+                sim_peak_mb=c["sim_peak_mb"],
+            )
+
+    table(
+        "Cohort-scale sweep (one modeled round, population engine)",
+        [
+            "N",
+            "topology",
+            "model wall (s)",
+            "$ / round",
+            "u$ / client",
+            "aggs",
+            "puts",
+            "gets",
+            "host (s)",
+            "sim peak MB",
+            "RSS MB",
+        ],
+        [
+            [
+                f"{c['n']:,}",
+                c["topology"],
+                f"{c['wall_s']:.1f}",
+                f"{c['cost']:.4f}",
+                f"{c['per_client_usd'] * 1e6:.2f}",
+                c["n_aggregators"],
+                c["puts"],
+                c["gets"],
+                f"{c['host_s']:.1f}",
+                f"{c['sim_peak_mb']:.1f}",
+                f"{c['rss_mb']:.0f}",
+            ]
+            for c in cells
+        ],
+    )
+
+    rows = []
+    for n in ns:
+        at_n = {c["topology"]: c for c in cells if c["n"] == n}
+        best = min(at_n.values(), key=lambda c: c["cost"])
+        fastest = min(at_n.values(), key=lambda c: c["wall_s"])
+        rows.append(
+            [
+                f"{n:,}",
+                best["topology"],
+                f"{best['cost']:.4f}",
+                fastest["topology"],
+                f"{fastest['wall_s']:.1f}",
+            ]
+        )
+    table(
+        "Crossover (cheapest / fastest architecture per cohort size)",
+        ["N", "cheapest", "$ / round", "fastest", "wall (s)"],
+        rows,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -120,6 +120,8 @@ def main() -> None:
     codec_axis(grads, hashes)
     fault_axis(grads)
     robustness_axis(grads)
+    geo_axis(grads)
+    population_axis()
 
 
 # seeded disturbance model of the fault rows: dropout + upload stalls +
@@ -316,6 +318,100 @@ def codec_axis(grads, raw_hashes) -> None:
     table("Codec axis (gradssharding, pipelined, k=2)",
           ["codec", "puts", "gets", "wire B", "GB-s", "wall (s)",
            "codec_error", "engine-det"], rows)
+
+
+def geo_axis(grads) -> None:
+    """The PR-8 hierarchical-topology gate (``geo_tiered``, N=8).
+
+    Edge → region → global with per-tier fan-in and link bandwidths.
+    Gates op counts, billed GB-s, walls and the averaged-gradient hash
+    across the engine × schedule grid (weighted deployment-grouped
+    folds are engine-level bit-identical, like ``lambda_fl``), plus
+    sim == cost-model pipelined wall parity through the topology's
+    per-tier cost hooks.
+    """
+    from repro.core.geo_tiered import GeoTieredTopology
+    from repro.core.topology import register_topology
+    # a *configured* instance registered under its own name: the cost_*
+    # hooks read instance attributes, so this is the documented route to
+    # analytical parity with non-default tier knobs
+    register_topology("geo_smoke", replace=True)(GeoTieredTopology(
+        edge_fanin=4, region_fanin=2, edge_mbps=40.0, region_mbps=120.0,
+        backbone_mbps=400.0))
+    rows = []
+    hashes: set = set()
+    sim_wall = None
+    for engine in ENGINES:
+        for schedule in SCHEDULES:
+            session = FederatedSession(
+                topology="geo_smoke", engine=engine, schedule=schedule,
+                upload=UPLOAD, readahead_k=1, codec="identity")
+            r = session.round(grads)
+            if schedule == "pipelined":
+                sim_wall = r.wall_clock_s
+            billed = sum(rec.billed_gb_s for rec in r.records)
+            tag = f"smoke/geo_tiered/{engine}/{schedule}"
+            record_invariant(f"{tag}/puts", r.puts)
+            record_invariant(f"{tag}/gets", r.gets)
+            record_invariant(f"{tag}/billed_gb_s", round(billed, 12))
+            record_invariant(f"{tag}/wall_s", round(r.wall_clock_s, 12))
+            record_invariant(f"{tag}/avg_sha256", _avg_hash(r))
+            hashes.add(_avg_hash(r))
+            rows.append(["geo_tiered", engine, schedule, r.puts, r.gets,
+                         f"{billed:.4f}", f"{r.wall_clock_s:.3f}",
+                         _avg_hash(r)[:8]])
+    record_invariant("smoke/geo_tiered/bit_identical", len(hashes) == 1)
+    model = cm.pipelined_round_cost(
+        "geo_smoke", GRAD_ELEMS * 4, N_CLIENTS, 1, upload=UPLOAD,
+        readahead_k=1, codec="identity")
+    record_invariant("smoke/geo_tiered/model_pipelined_wall_s",
+                     round(model.wall_clock_s, 12))
+    record_invariant(
+        "smoke/geo_tiered/sim_model_parity",
+        bool(abs(sim_wall - model.wall_clock_s) <= 1e-9 * abs(sim_wall)))
+    table("Geo-tiered axis (engine x schedule grid, fixed seed)",
+          ["topology", "engine", "schedule", "puts", "gets", "GB-s",
+           "wall (s)", "avg hash"], rows)
+
+
+def population_axis() -> None:
+    """The PR-8 cohort-engine gate: lazy ≡ eager, per topology.
+
+    Each row runs the same fixed-seed round twice — eagerly over
+    ``pop.materialize(rnd)`` and through the O(active) population
+    engine — and gates the population run's op counts, billed GB-s,
+    wall and hash, plus a ``matches_eager`` boolean asserting the two
+    drivers agree bit-for-bit on all of them.
+    """
+    from repro.serverless.population import (ClientPopulation,
+                                             population_topologies)
+    rows = []
+    for topology in population_topologies():
+        pop = ClientPopulation(N_CLIENTS, grad_elems=GRAD_ELEMS, seed=1234)
+        cfg = dict(topology=topology, n_shards=N_SHARDS,
+                   schedule="pipelined", upload=UPLOAD, readahead_k=2,
+                   codec="identity")
+        r_e = FederatedSession(**cfg).round(pop.materialize(0))
+        sess = FederatedSession(population=pop, **cfg)
+        r_p = sess.round()
+        billed = sum(rec.billed_gb_s for rec in r_p.records)
+        billed_e = sum(rec.billed_gb_s for rec in r_e.records)
+        same = (_avg_hash(r_p) == _avg_hash(r_e)
+                and r_p.puts == r_e.puts and r_p.gets == r_e.gets
+                and r_p.wall_clock_s == r_e.wall_clock_s
+                and billed == billed_e)
+        tag = f"smoke/population/{topology}"
+        record_invariant(f"{tag}/puts", r_p.puts)
+        record_invariant(f"{tag}/gets", r_p.gets)
+        record_invariant(f"{tag}/billed_gb_s", round(billed, 12))
+        record_invariant(f"{tag}/wall_s", round(r_p.wall_clock_s, 12))
+        record_invariant(f"{tag}/avg_sha256", _avg_hash(r_p))
+        record_invariant(f"{tag}/matches_eager", same)
+        rows.append([topology, r_p.puts, r_p.gets, f"{billed:.4f}",
+                     f"{r_p.wall_clock_s:.3f}", _avg_hash(r_p)[:8], same])
+    table("Population axis (lazy cohort engine == eager driver)",
+          ["topology", "puts", "gets", "GB-s", "wall (s)", "avg hash",
+           "matches"], rows)
 
 
 if __name__ == "__main__":

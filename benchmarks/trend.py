@@ -1,0 +1,150 @@
+"""Cross-commit bench trajectory: tabulate invariants over a sequence of
+smoke-JSON artifacts.
+
+CI's smoke-bench job uploads ``smoke.json`` (``benchmarks.common
+.write_json`` payloads: ``{"rows": [...], "invariants": {...}}``) as a
+build artifact on every commit. This tool turns a pile of those
+artifacts — downloaded locally, named however you like — into a
+per-metric trajectory so drift in modeled quantities (walls, billed
+GB-s, op counts) is visible *across commits*, not just against the
+single pinned baseline the gate checks.
+
+Artifacts are read in the order given (put oldest first; CI artifact
+names usually embed the run number or SHA, so a glob sorts correctly).
+Bare invariant dicts (e.g. ``expected_smoke.json`` itself) are accepted
+too. Non-numeric invariants (hashes, booleans) are tracked as
+change/no-change; numeric ones get a sparkline and a net % delta.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.trend artifacts/*.json
+  PYTHONPATH=src python -m benchmarks.trend --match wall_s a.json b.json
+  PYTHONPATH=src python -m benchmarks.trend --all --csv trend.csv *.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.common import table
+
+SPARKS = "▁▂▃▄▅▆▇█"
+
+
+def load_artifact(path: str) -> dict:
+    with open(path) as fh:
+        payload = json.load(fh)
+    if isinstance(payload, dict) and "invariants" in payload:
+        return payload["invariants"]
+    return payload
+
+
+def sparkline(values: list[float]) -> str:
+    lo, hi = min(values), max(values)
+    if hi == lo:
+        return SPARKS[0] * len(values)
+    span = hi - lo
+    return "".join(SPARKS[int((v - lo) / span * (len(SPARKS) - 1))] for v in values)
+
+
+def _fmt(v: float) -> str:
+    return f"{v:.6g}"
+
+
+def trend_rows(series: dict[str, list], *, changed_only: bool = True):
+    """Per-key trajectory rows: (key, first, last, net %, spark/status).
+
+    ``series`` maps key -> per-artifact values (None where absent).
+    Numeric keys get sparkline + net delta; others a changed/stable flag.
+    """
+    rows = []
+    for key in sorted(series):
+        vals = series[key]
+        present = [v for v in vals if v is not None]
+        if not present:
+            continue
+        numeric = all(
+            isinstance(v, (int, float)) and not isinstance(v, bool) for v in present
+        )
+        changed = any(v != present[0] for v in present)
+        if changed_only and not changed:
+            continue
+        if numeric:
+            first, last = present[0], present[-1]
+            pct = "n/a" if first == 0 else f"{(last - first) / abs(first) * 100:+.2f}%"
+            rows.append(
+                [
+                    key,
+                    _fmt(first),
+                    _fmt(last),
+                    pct,
+                    sparkline([float(v) for v in present]),
+                ]
+            )
+        else:
+            status = "CHANGED" if changed else "stable"
+            rows.append(
+                [
+                    key,
+                    str(present[0])[:16],
+                    str(present[-1])[:16],
+                    status,
+                    "·" * len(present),
+                ]
+            )
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "artifacts",
+        nargs="+",
+        help="smoke.json artifacts, oldest first",
+    )
+    ap.add_argument(
+        "--match",
+        default="",
+        help="only keys containing this substring",
+    )
+    ap.add_argument(
+        "--all",
+        action="store_true",
+        help="include keys that never changed",
+    )
+    ap.add_argument(
+        "--csv",
+        default=None,
+        help="also write the full numeric series as CSV",
+    )
+    args = ap.parse_args(argv)
+
+    snapshots = [load_artifact(p) for p in args.artifacts]
+    keys = sorted({k for snap in snapshots for k in snap if args.match in k})
+    series = {k: [snap.get(k) for snap in snapshots] for k in keys}
+
+    rows = trend_rows(series, changed_only=not args.all)
+    n = len(snapshots)
+    if rows:
+        table(
+            f"Invariant trajectory over {n} artifact(s)",
+            ["key", "first", "last", "net", "trend"],
+            rows,
+        )
+    else:
+        print(
+            f"{len(keys)} matching invariants, none changed across "
+            f"{n} artifact(s)."
+        )
+
+    if args.csv:
+        with open(args.csv, "w") as fh:
+            fh.write("key," + ",".join(args.artifacts) + "\n")
+            for k in keys:
+                cells = ["" if v is None else str(v) for v in series[k]]
+                fh.write(k + "," + ",".join(cells) + "\n")
+        print(f"wrote {len(keys)} series to {args.csv}")
+
+
+if __name__ == "__main__":
+    main()

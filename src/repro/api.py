@@ -40,6 +40,8 @@ from repro.core.topology import (AggregationResult, available_topologies,
                                  round_prefix, run_round,
                                  validate_fault_knobs)
 from repro.serverless.faults import FaultModel, StaleBuffer, StalenessPolicy
+from repro.serverless.population import (ClientPopulation,
+                                         run_population_round)
 from repro.serverless.runtime import FaultPlan, LambdaRuntime
 from repro.store import ObjectStore
 
@@ -117,6 +119,18 @@ class SessionConfig:
     limits: LambdaLimits | None = None
     warm_pool_size: int | None = None
     keep_records: bool = True
+    # per-op PUT/GET logs on the session's store. False keeps every
+    # aggregate counter (op counts, byte totals, billing) exact but skips
+    # the per-op put_log/get_log appends — required at million-client
+    # scale, where the op log itself would be the O(N·M) residency
+    log_ops: bool = True
+    # lazy synthetic cohort: rounds run through the O(active)
+    # population engine (repro.serverless.population) instead of eager
+    # per-client gradients — call ``session.round()`` with no
+    # ``client_grads``. Bit-identical to the eager driver over
+    # ``population.materialize(rnd)``; pair with ``log_ops=False`` (and
+    # ``keep_records=False`` for multi-round) at million-client scale
+    population: ClientPopulation | None = None
     topology_options: Mapping[str, Any] = field(default_factory=dict)
 
     def round_options(self) -> dict:
@@ -181,7 +195,8 @@ class FederatedSession:
             raise ValueError(
                 "cannot combine SessionConfig.faults (a seeded FaultModel) "
                 "with an injected FaultPlan; configure one fault source")
-        self.store = store if store is not None else ObjectStore()
+        self.store = store if store is not None \
+            else ObjectStore(log_ops=config.log_ops)
         if runtime is not None:
             # an injected runtime already fixed these; silently dropping
             # them would make a fault-injection or pricing study measure
@@ -217,11 +232,24 @@ class FederatedSession:
                               "hedge_wins": 0}
 
     # ------------------------------------------------------------------
-    def round(self, client_grads: Sequence[np.ndarray], *,
+    def round(self, client_grads: Sequence[np.ndarray] | None = None, *,
               rnd: int | None = None) -> AggregationResult:
-        """Run one aggregation round; rounds auto-number from 0."""
+        """Run one aggregation round; rounds auto-number from 0.
+
+        Population-backed sessions (``SessionConfig.population``) take no
+        ``client_grads`` — the lazy cohort generates its own."""
         cfg = self.config
         rnd = self.rounds_run if rnd is None else rnd
+        if cfg.population is not None:
+            if client_grads is not None:
+                raise ValueError(
+                    "a population-backed session generates its own client "
+                    "gradients; call round() without client_grads")
+            return self._population_round(rnd)
+        if client_grads is None:
+            raise ValueError(
+                "client_grads is required unless SessionConfig.population "
+                "is set")
         if self._client_ready is not None \
                 and len(self._client_ready) != len(client_grads):
             # per-round client sampling: carried read-back times index the
@@ -245,25 +273,57 @@ class FederatedSession:
         self._observe(result)
         if not cfg.keep_records:
             self._compact(rnd)
+            # the per-client read-back array is threaded into the next
+            # round via _client_ready; retaining a copy on every yielded
+            # result would grow O(N·rounds) in callers that keep results
+            result.client_done_s = ()
         self.rounds_run = max(self.rounds_run, rnd + 1)
         return result
 
-    def run(self, client_grad_fn: Callable[[int], Sequence[np.ndarray]],
-            rounds: int) -> Iterator[AggregationResult]:
+    def _population_round(self, rnd: int) -> AggregationResult:
+        """One round through the O(active) population engine —
+        same knob threading and session bookkeeping as the eager path."""
+        cfg = self.config
+        result = run_population_round(
+            self.topology, cfg.population, rnd=rnd, store=self.store,
+            runtime=self.runtime, engine=cfg.engine, schedule=cfg.schedule,
+            upload=cfg.resolved_upload(),
+            client_ready_s=self._client_ready,
+            straggler_threshold_s=cfg.straggler_threshold_s,
+            readahead_k=cfg.readahead_k, codec=cfg.codec,
+            track_codec_error=cfg.track_codec_error,
+            faults=cfg.faults, participation_k=cfg.participation_k,
+            deadline_s=cfg.deadline_s, quorum=cfg.quorum,
+            staleness_policy=cfg.staleness_policy,
+            stale_buffer=self.stale_buffer,
+            hedge_factor=cfg.hedge_factor,
+            **cfg.round_options())
+        self._observe(result)
+        if not cfg.keep_records:
+            self._compact(rnd)
+            result.client_done_s = ()
+        self.rounds_run = max(self.rounds_run, rnd + 1)
+        return result
+
+    def run(self, client_grad_fn: Callable[[int], Sequence[np.ndarray]]
+            | None = None, rounds: int = 1) -> Iterator[AggregationResult]:
         """Iterate ``rounds`` aggregation rounds; ``client_grad_fn(rnd)``
         supplies each round's client gradients (flat f32 vectors —
-        typically local-SGD deltas). Lazily yields each
-        :class:`AggregationResult` so 1k-round sweeps need not hold every
-        result (pair with ``keep_records=False`` for bounded memory)."""
+        typically local-SGD deltas; population-backed sessions pass
+        ``None``). Lazily yields each :class:`AggregationResult` so
+        1k-round sweeps need not hold every result (pair with
+        ``keep_records=False`` for bounded memory)."""
         for _ in range(rounds):
             rnd = self.rounds_run
-            yield self.round(client_grad_fn(rnd), rnd=rnd)
+            grads = None if client_grad_fn is None else client_grad_fn(rnd)
+            yield self.round(grads, rnd=rnd)
 
     # ------------------------------------------------------------------
     def _observe(self, result: AggregationResult) -> None:
         if self._session_start_s is None:
             self._session_start_s = result.round_start_s
-        self._client_ready = result.client_done_s or None
+        done = result.client_done_s
+        self._client_ready = done if len(done) else None
         self._session_end_s = max(self._session_end_s, result.round_end_s)
         self._round_walls_sum += result.wall_clock_s
         t = self._fault_totals

@@ -432,6 +432,41 @@ class UploadModel:
             return self.compute_s + rng.uniform(0.0, self.compute_jitter, n)
         return np.full(n, float(self.compute_s))
 
+    def plan_at(self, n: int, rnd: int, idx) -> tuple[np.ndarray, np.ndarray]:
+        """:meth:`plan` restricted to cohort indices ``idx`` — the lazy
+        population engine's entry: O(len(idx)) draws instead of O(n),
+        bit-identical to ``plan(n, rnd)`` sliced at ``idx`` (PCG64
+        ``advance`` jumps the gaps; see
+        :mod:`repro.serverless.streams`)."""
+        from repro.serverless.streams import gather_stream
+        idx = np.asarray(idx)
+        key = [self.seed, rnd]
+        if self.jitter_s > 0:
+            starts = gather_stream(
+                key, idx, lambda r, m: r.uniform(0.0, self.jitter_s, m))
+        else:
+            starts = np.zeros(len(idx))
+        if self.rate_jitter > 0:
+            # mults continue the same stream after the n start draws
+            mults = 1.0 + gather_stream(
+                key, idx, lambda r, m: r.uniform(0.0, self.rate_jitter, m),
+                skip=n if self.jitter_s > 0 else 0)
+        else:
+            mults = np.ones(len(idx))
+        return starts, mults
+
+    def compute_plan_at(self, n: int, rnd: int, idx) -> np.ndarray:
+        """:meth:`compute_plan` restricted to cohort indices ``idx``."""
+        from repro.serverless.streams import gather_stream
+        idx = np.asarray(idx)
+        if self.compute_s <= 0.0 and self.compute_jitter <= 0.0:
+            return np.zeros(len(idx))
+        if self.compute_jitter > 0.0:
+            return self.compute_s + gather_stream(
+                [self.seed, rnd, 1], idx,
+                lambda r, m: r.uniform(0.0, self.compute_jitter, m))
+        return np.full(len(idx), float(self.compute_s))
+
     def upload_s(self, nbytes: int, mult: float = 1.0) -> float:
         if self.mbps is None:
             return 0.0
@@ -572,20 +607,25 @@ def _make_run_fold(limits: LambdaLimits, cold: bool, ra: int,
     schedule prices one fold with identical arithmetic."""
 
     def run_fold(avail, in_b, out_b, shared=False, write_out=True,
-                 wire_b=None, decode_s=0.0, weighted=False):
+                 wire_b=None, decode_s=0.0, weighted=False,
+                 limits_override=None):
         # billed allocation mirrors the driver's _alloc_mb: the window
         # never buffers more than the fold's fan-in, and colocated hops
         # (nothing to prefetch) keep the 3x formula and legacy gating;
         # wire_b/decode_s mark a fold over codec-encoded contributions
         # (the client->aggregator hop; inter-aggregator hops stay raw)
-        # and weighted marks its f64 accumulator for the billing bound
+        # and weighted marks its f64 accumulator for the billing bound.
+        # limits_override substitutes per-tier link bandwidths (geo
+        # topologies) — rate fields only, so the memory formula (billed
+        # MB) intentionally still uses the platform limits
+        eff = limits if limits_override is None else limits_override
         if shared:
             launch = avail[0]
-            end = _fold_finish_colocated(launch, avail, in_b, out_b, limits,
+            end = _fold_finish_colocated(launch, avail, in_b, out_b, eff,
                                          cold, write_out)
         else:
             launch = ReadAheadWindow.launch_s(avail, ra)
-            end = _fold_finish(launch, avail, in_b, out_b, limits, cold,
+            end = _fold_finish(launch, avail, in_b, out_b, eff, cold,
                                readahead_k=ra, wire_bytes=wire_b,
                                decode_s=decode_s)
         mem = wire_alloc_mb(in_b[0], limits, 1 if shared else ra,

@@ -46,7 +46,7 @@ from __future__ import annotations
 
 import math
 import os
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Mapping, Sequence
 
 import numpy as np
@@ -278,6 +278,7 @@ class AggregationResult:
     round_start_s: float = 0.0
     round_end_s: float = 0.0
     client_done_s: tuple = ()            # per-client read-back completion
+    #   (float64 ndarray cohort-indexed; () once compacted away)
     # fault-tolerant rounds: the cohort indices invited this round, the
     # subset actually folded (in fold order — arrival order under
     # schedule="quorum", index order otherwise), seeded dropouts, clients
@@ -336,6 +337,23 @@ def _alloc_mb(in_bytes: int, limits: LambdaLimits,
                             wire_in_bytes, weighted)
 
 
+def tier_limits(limits: LambdaLimits, read_mbps: float | None = None,
+                write_mbps: float | None = None) -> LambdaLimits:
+    """Platform limits with a tier's link bandwidths substituted for the
+    S3 stream rates (caps, prices and the per-GET latency floor stay the
+    platform's). Shared by the round driver and the geo-tiered cost
+    hooks, so the simulator and the analytical model price a tier's
+    transfers from one definition."""
+    if read_mbps is None and write_mbps is None:
+        return limits
+    return replace(
+        limits,
+        s3_read_mbps=limits.s3_read_mbps if read_mbps is None
+        else float(read_mbps),
+        s3_write_mbps=limits.s3_write_mbps if write_mbps is None
+        else float(write_mbps))
+
+
 # ---------------------------------------------------------------------------
 # Declarative round programs
 # ---------------------------------------------------------------------------
@@ -357,6 +375,12 @@ class InvocationSpec:
     client contributions (the client→aggregator hop); ``None`` means raw
     f32 inputs (inter-aggregator partials, or the identity codec) and
     keeps the legacy billing formula bit-for-bit.
+
+    ``read_mbps``/``write_mbps`` override the platform's S3 stream rates
+    for this one invocation — hierarchical geo topologies model each
+    tier's link bandwidth this way (the driver hands the runtime a
+    rate-replaced :class:`LambdaLimits`; caps, prices and latency floors
+    stay the platform's). ``None`` keeps the platform rate.
     """
 
     fn_name: str
@@ -368,6 +392,8 @@ class InvocationSpec:
     shared_copy: bool = False
     global_out: bool = False
     wire_in_bytes: int | None = None
+    read_mbps: float | None = None
+    write_mbps: float | None = None
 
 
 @dataclass(frozen=True)
@@ -647,21 +673,25 @@ def _readback_times(sched: str, runtime: LambdaRuntime,
     jittered downlink rate. Pipelined: each client independently reads the
     outputs in key order *as they become available*. Downloads are
     instantaneous when the model has no ``download_mbps``, collapsing both
-    cases to ``agg_end_s`` (the legacy semantics)."""
+    cases to ``agg_end_s`` (the legacy semantics). Vectorized over the
+    members (one ``maximum``/``add`` pair per output key instead of a
+    per-client Python :class:`Timeline`); ``max(t, a) + rate * mult`` per
+    element is bit-for-bit the scalar fold."""
     n = len(up.end_s)
     upload = upload or UploadModel()
-    done = []
-    for i in range(n):
-        # barrier: every output exists at round end, client downloads them
-        # back to back. pipelined: client is busy until its own upload
-        # ends, then reads each output the moment it is published.
-        tl = Timeline(agg_end_s if sched == "barrier" else up.end_s[i])
-        for key, nb in out_keys_bytes:
-            if sched != "barrier":
-                tl.wait_until(runtime.avail.time_of(key, agg_end_s))
-            tl.advance(upload.download_s(nb, float(up.mults[i])))
-        done.append(tl.t)
-    return tuple(done)
+    # barrier: every output exists at round end, clients download back to
+    # back. pipelined: a client is busy until its own upload ends, then
+    # reads each output the moment it is published.
+    if sched == "barrier":
+        t = np.full(n, float(agg_end_s))
+    else:
+        t = np.asarray(up.end_s, np.float64).copy()
+    for key, nb in out_keys_bytes:
+        if sched != "barrier":
+            np.maximum(t, runtime.avail.time_of(key, agg_end_s), out=t)
+        if upload.download_mbps is not None:
+            t += (nb / (upload.download_mbps * 1e6)) * up.mults
+    return t
 
 
 def _round_base(runtime: LambdaRuntime,
@@ -974,10 +1004,12 @@ def run_round(topology: str | Topology,
                             fanin=len(inv.in_keys),
                             wire_in_bytes=inv.wire_in_bytes,
                             weighted=inv.weights is not None)
+            inv_limits = tier_limits(limits, inv.read_mbps, inv.write_mbps)
             if barrier:
                 ph.invoke_reliable(
                     body, fn_name=inv.fn_name, memory_mb=mem,
-                    straggler_threshold_s=straggler_threshold_s)
+                    straggler_threshold_s=straggler_threshold_s,
+                    limits=None if inv_limits is limits else inv_limits)
             else:
                 # launch on the first available input inside the window
                 # [frontier, frontier + k) — k=1 is the legacy "first
@@ -991,7 +1023,8 @@ def run_round(topology: str | Topology,
                 ph.invoke_reliable(
                     body, fn_name=inv.fn_name, memory_mb=mem,
                     straggler_threshold_s=straggler_threshold_s,
-                    launch_s=launch, wait_avail=True, out_key=inv.out_key)
+                    launch_s=launch, wait_avail=True, out_key=inv.out_key,
+                    limits=None if inv_limits is limits else inv_limits)
                 if hedge_this:
                     # speculative hedging: replay the aggregator's fault-
                     # free expected finish off its read-ahead frontier
@@ -1005,7 +1038,7 @@ def run_round(topology: str | Topology,
                         [runtime.avail.time_of(key, base)
                          for key in inv.in_keys],
                         [inv.alloc_bytes] * len(inv.in_keys),
-                        inv.alloc_bytes, limits, cold=not was_warm,
+                        inv.alloc_bytes, inv_limits, cold=not was_warm,
                         readahead_k=inv_k,
                         wire_bytes=None if inv.wire_in_bytes is None
                         else [inv.wire_in_bytes] * len(inv.in_keys),
@@ -1017,7 +1050,9 @@ def run_round(topology: str | Topology,
                         hedge_wins += int(ph.hedge_last(
                             body, fn_name=inv.fn_name + "~hedge",
                             memory_mb=mem, launch_s=thresh,
-                            out_key=inv.out_key))
+                            out_key=inv.out_key,
+                            limits=None if inv_limits is limits
+                            else inv_limits))
         prev_end = runtime.finish_phase(ph, barrier=barrier)
         handles.append(ph)
     agg_end = prev_end
@@ -1051,11 +1086,10 @@ def run_round(topology: str | Topology,
         # the next round from there); delivered members keep their
         # modeled download timelines. member_done is fold-position
         # indexed, so remap to cohort indices for the session threading.
-        done = [agg_end] * n
-        for pos, i in enumerate(order):
-            done[i] = member_done[pos]
-        client_done = tuple(done)
-    round_end = max(agg_end, max(client_done, default=agg_end))
+        client_done = np.full(n, float(agg_end))
+        client_done[np.asarray(order, dtype=np.intp)] = member_done
+    round_end = max(agg_end, float(client_done.max())
+                    if len(client_done) else agg_end)
     runtime.advance_to(round_end)
 
     # -- stale admission: this round's casualties re-enter later rounds ------
@@ -1382,3 +1416,4 @@ class LIFLTopology(Topology):
 # importing it here makes ``sharded_tree`` available wherever the registry
 # is (the import must follow the registry definitions).
 import repro.core.sharded_tree  # noqa: E402,F401  (registration side effect)
+import repro.core.geo_tiered  # noqa: E402,F401  (registration side effect)

@@ -212,7 +212,8 @@ class FederatedPipeline:
         """Fold one round's result into the session timeline."""
         if self.session_start_s is None:
             self.session_start_s = result.round_start_s
-        self.client_ready = result.client_done_s or None
+        done = result.client_done_s
+        self.client_ready = done if len(done) else None
         self.session_end_s = max(self.session_end_s, result.round_end_s)
         self.round_walls.append(result.wall_clock_s)
 

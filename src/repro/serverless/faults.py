@@ -127,6 +127,36 @@ class FaultModel:
         rng = np.random.default_rng([self.seed, rnd, _S_STALL])
         return np.where(rng.random(n) < self.stall_rate, self.stall_s, 0.0)
 
+    # -- lazy cohort-slice variants (the population engine's entries:
+    # O(len(idx)) draws, bit-identical to the full plan sliced at idx) ----
+    def participants_arr(self, n: int, rnd: int, k: int) -> np.ndarray:
+        """:meth:`participants` as an int64 array — million-client
+        cohorts skip the O(N) Python tuple (same draws, same order)."""
+        if not 1 <= k <= n:
+            raise ValueError(f"participation_k must be in [1, {n}], got {k}")
+        if k == n:
+            return np.arange(n, dtype=np.int64)
+        rng = np.random.default_rng([self.seed, rnd, _S_PARTICIPATION])
+        return np.sort(rng.choice(n, size=k, replace=False)).astype(np.int64)
+
+    def dropout_at(self, n: int, rnd: int, idx) -> np.ndarray:
+        """:meth:`dropout_plan` flags at cohort indices ``idx``."""
+        from repro.serverless.streams import gather_stream
+        if self.dropout_rate <= 0.0:
+            return np.zeros(len(idx), dtype=bool)
+        u = gather_stream([self.seed, rnd, _S_DROPOUT], idx,
+                          lambda r, m: r.random(m))
+        return u < self.dropout_rate
+
+    def stall_at(self, n: int, rnd: int, idx) -> np.ndarray:
+        """:meth:`stall_plan` delays at cohort indices ``idx``."""
+        from repro.serverless.streams import gather_stream
+        if self.stall_rate <= 0.0 or self.stall_s <= 0.0:
+            return np.zeros(len(idx))
+        u = gather_stream([self.seed, rnd, _S_STALL], idx,
+                          lambda r, m: r.random(m))
+        return np.where(u < self.stall_rate, self.stall_s, 0.0)
+
     # -- FaultPlan interface (consumed by LambdaRuntime) ---------------------
     def failure(self, fn_name: str, attempt: int) -> bool:
         """Whether this (invocation, attempt) dies at launch. Keyed by the

@@ -150,13 +150,17 @@ class LambdaContext:
     def __init__(self, runtime: "LambdaRuntime", memory_mb: float,
                  timeout_s: float, fn_name: str, attempt: int,
                  start_s: float = 0.0,
-                 avail: AvailabilityMap | None = None):
+                 avail: AvailabilityMap | None = None,
+                 limits: LambdaLimits | None = None):
         self._rt = runtime
         self.memory_mb = memory_mb
         self.timeout_s = timeout_s
         self.fn_name = fn_name
         self.attempt = attempt
-        self.limits = runtime.limits
+        # per-invocation limits override: hierarchical topologies replace
+        # the S3 transfer rates with the tier's link bandwidth (platform
+        # caps and prices stay the runtime's)
+        self.limits = runtime.limits if limits is None else limits
         self.read_bytes = 0
         self.write_bytes = 0
         self.compute_bytes = 0
@@ -207,6 +211,17 @@ class LambdaContext:
             self.stall_s += stall
             self._advance(stall)
 
+    def stall_until(self, time_s: float) -> None:
+        """Array-driven twin of :meth:`wait_key`: stall until an absolute
+        availability time computed by the caller rather than published in
+        the map (the population engine's client contributions are never
+        store keys). Same arithmetic — ``stall = t - now_s`` — so a
+        virtualized fold replays the eager body's stalls bit-for-bit."""
+        stall = float(time_s) - self.now_s
+        if stall > 0.0:
+            self.stall_s += stall
+            self._advance(stall)
+
     # -- store I/O (billed time) ---------------------------------------------
     def get(self, store: ObjectStore, key: str):
         self.wait_key(key)
@@ -222,6 +237,23 @@ class LambdaContext:
         self.free(nb)
         return value
 
+    def read_modeled(self, nbytes: int) -> None:
+        """Account one GET of ``nbytes`` without a store object.
+
+        The population engine models N client contributions that are never
+        materialized as store keys; their reads are still billed traffic.
+        Time split, ``read_bytes`` and the transient deserialization copy
+        are identical to :meth:`get` — the store-side op/byte counters are
+        settled in bulk by the driver via ``ObjectStore.account_io``."""
+        nb = int(nbytes)
+        self.read_bytes += nb
+        t = self.limits.s3_get_latency_s + nb / (self.limits.s3_read_mbps
+                                                 * 1e6)
+        self.read_s += t
+        self.alloc(nb)
+        self._advance(t)
+        self.free(nb)
+
     def put(self, store: ObjectStore, key: str, value, *,
             if_none_match: bool = False) -> bool:
         nb = value.nbytes if hasattr(value, "nbytes") else len(value)
@@ -230,6 +262,19 @@ class LambdaContext:
         self.write_s += t
         self._advance(t)
         return store.put(key, value, if_none_match=if_none_match)
+
+    def write_modeled(self, nbytes: int) -> None:
+        """Account one PUT of ``nbytes`` without a store object — the
+        modeled twin of :meth:`put` (same time split and ``write_bytes``).
+        The population engine uses it for virtualized intermediate
+        partials that no later phase dereferences; the store-side op/byte
+        counters are settled by the caller via ``ObjectStore.account_io``
+        (mirroring the conditional PUT's first-write-wins accounting)."""
+        nb = int(nbytes)
+        self.write_bytes += nb
+        t = nb / (self.limits.s3_write_mbps * 1e6)
+        self.write_s += t
+        self._advance(t)
 
     def compute(self, nbytes: int) -> None:
         """Model arithmetic over nbytes of data (element-wise accumulate)."""
@@ -296,7 +341,8 @@ class PhaseHandle:
 
     def hedge_last(self, fn, *, fn_name: str, memory_mb: float,
                    launch_s: float, out_key: str | None = None,
-                   timeout_s: float | None = None) -> bool:
+                   timeout_s: float | None = None,
+                   limits: LambdaLimits | None = None) -> bool:
         """Launch a speculative hedge replica racing the phase's last
         reliable invocation: a single best-effort attempt under its own
         function name (own warm-pool slot, own failure stream), flagged
@@ -310,7 +356,8 @@ class PhaseHandle:
         primary = self.winners[-1]
         _result, rec = self._rt.invoke(
             fn, fn_name=fn_name, memory_mb=memory_mb, timeout_s=timeout_s,
-            attempt=0, speculative=True, start_s=launch_s, wait_avail=True)
+            attempt=0, speculative=True, start_s=launch_s, wait_avail=True,
+            limits=limits)
         if rec.failed or rec.end_s >= primary.end_s:
             return False
         self.winners[-1] = rec
@@ -402,21 +449,27 @@ class LambdaRuntime:
     def invoke(self, fn: Callable[[LambdaContext], Any], *, fn_name: str,
                memory_mb: float, timeout_s: float | None = None,
                attempt: int = 0, speculative: bool = False,
-               start_s: float | None = None, wait_avail: bool = False):
+               start_s: float | None = None, wait_avail: bool = False,
+               limits: LambdaLimits | None = None):
         """Run one invocation; returns (result, record). Raises on OOM (a
-        permanent config error) but records injected faults for retry."""
-        if memory_mb > self.limits.max_memory_mb:
+        permanent config error) but records injected faults for retry.
+        ``limits`` overrides the runtime's platform model for this one
+        invocation (tiered topologies vary the link bandwidths per tier;
+        caps/prices are expected to match the runtime's)."""
+        eff = self.limits if limits is None else limits
+        if memory_mb > eff.max_memory_mb:
             raise LambdaOOM(
                 f"{fn_name}: requested {memory_mb:.0f} MB > platform max "
-                f"{self.limits.max_memory_mb} MB")
-        timeout_s = timeout_s or self.limits.max_timeout_s
+                f"{eff.max_memory_mb} MB")
+        timeout_s = timeout_s or eff.max_timeout_s
         start = self.now if start_s is None else float(start_s)
         ctx = LambdaContext(self, memory_mb, timeout_s, fn_name, attempt,
                             start_s=start,
-                            avail=self.avail if wait_avail else None)
+                            avail=self.avail if wait_avail else None,
+                            limits=eff)
         cold = not self._check_warm(fn_family(fn_name))
         if cold:
-            ctx.time_s += self.limits.cold_start_s
+            ctx.time_s += eff.cold_start_s
 
         failed = False
         result = None
@@ -447,7 +500,7 @@ class LambdaRuntime:
                 billed_gb_s=memory_mb / 1024.0 * billed, cold_start=cold,
                 read_bytes=ctx.read_bytes, write_bytes=ctx.write_bytes,
                 compute_bytes=ctx.compute_bytes,
-                peak_memory_mb=self.limits.runtime_overhead_mb
+                peak_memory_mb=eff.runtime_overhead_mb
                 + ctx.peak_bytes / MB,
                 attempt=attempt, failed=failed, speculative=speculative,
                 read_s=ctx.read_s, write_s=ctx.write_s,
@@ -471,7 +524,8 @@ class LambdaRuntime:
                         timeout_s: float | None = None, max_attempts: int = 3,
                         straggler_threshold_s: float | None = None,
                         start_s: float | None = None,
-                        wait_avail: bool = False):
+                        wait_avail: bool = False,
+                        limits: LambdaLimits | None = None):
         """Invoke with retry-on-failure and optional speculative duplicate.
 
         Retries are safe because aggregators write with first-write-wins
@@ -491,7 +545,8 @@ class LambdaRuntime:
             result, rec = self.invoke(fn, fn_name=fn_name,
                                       memory_mb=memory_mb,
                                       timeout_s=timeout_s, attempt=attempt,
-                                      start_s=start, wait_avail=wait_avail)
+                                      start_s=start, wait_avail=wait_avail,
+                                      limits=limits)
             last = rec
             if not rec.failed:
                 if (straggler_threshold_s is not None
@@ -500,7 +555,7 @@ class LambdaRuntime:
                         fn, fn_name=fn_name, memory_mb=memory_mb,
                         timeout_s=timeout_s, attempt=attempt + 100,
                         speculative=True, start_s=start,
-                        wait_avail=wait_avail)
+                        wait_avail=wait_avail, limits=limits)
                     if not dup_rec.failed and \
                             dup_rec.duration_s < rec.duration_s:
                         return dup, dup_rec

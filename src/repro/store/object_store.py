@@ -47,12 +47,18 @@ def _nbytes(value) -> int:
 
 class ObjectStore:
     """In-memory object store with S3 semantics (flat keyspace, atomic
-    whole-object PUT/GET, list-by-prefix, eventual-consistency-free)."""
+    whole-object PUT/GET, list-by-prefix, eventual-consistency-free).
 
-    def __init__(self) -> None:
+    ``log_ops=False`` keeps every aggregate counter (op counts, byte
+    totals) exact but skips the per-op ``put_log``/``get_log`` appends —
+    the mode million-client rounds need so a round's op log does not
+    itself grow O(N·M) even when the session keeps records."""
+
+    def __init__(self, *, log_ops: bool = True) -> None:
         self._objects: dict[str, np.ndarray | bytes] = {}
         self._lock = threading.Lock()
         self.stats = StoreStats()
+        self.log_ops = bool(log_ops)
 
     # -- data plane ---------------------------------------------------------
     def put(self, key: str, value, *, if_none_match: bool = False) -> bool:
@@ -67,7 +73,8 @@ class ObjectStore:
             self.stats.puts += 1
             nb = _nbytes(value)
             self.stats.bytes_written += nb
-            self.stats.put_log.append((key, nb))
+            if self.log_ops:
+                self.stats.put_log.append((key, nb))
             return True
 
     def get(self, key: str):
@@ -78,7 +85,8 @@ class ObjectStore:
             self.stats.gets += 1
             nb = _nbytes(value)
             self.stats.bytes_read += nb
-            self.stats.get_log.append((key, nb))
+            if self.log_ops:
+                self.stats.get_log.append((key, nb))
             return value
 
     def account_gets(self, key: str, count: int) -> int:
@@ -100,6 +108,22 @@ class ObjectStore:
             self.stats.gets += count
             self.stats.bytes_read += count * nb
             return nb
+
+    def account_io(self, *, puts: int = 0, gets: int = 0,
+                   bytes_written: int = 0, bytes_read: int = 0) -> None:
+        """Keyless bulk op accounting for lazily simulated traffic.
+
+        The population engine models N client uploads without ever
+        materializing N store objects; the ops and bytes are still real
+        billed traffic and must land in ``stats`` exactly. One lock
+        acquisition, aggregate counters only (never the op logs)."""
+        if min(puts, gets, bytes_written, bytes_read) < 0:
+            raise ValueError("account_io counts must be >= 0")
+        with self._lock:
+            self.stats.puts += int(puts)
+            self.stats.gets += int(gets)
+            self.stats.bytes_written += int(bytes_written)
+            self.stats.bytes_read += int(bytes_read)
 
     # -- simulation plane (not billed, no stats) ------------------------------
     def peek(self, key: str):

@@ -1,0 +1,130 @@
+"""``geo_tiered``: hierarchical edge → region → global aggregation.
+
+The contracts under test:
+
+  * **correctness** — the three-tier weighted fold returns the exact
+    cohort mean (up to f32 rounding) for any N, fan-in combination and
+    engine; bits agree across engines and schedules (group-weighted
+    folds are deployment-shaped, membership-level state).
+  * **analytical parity** — the registered instance's ``cost_*`` hooks
+    reproduce the event sim's wall/billing to float epsilon, for both
+    the default deployment and a custom-configured registered instance,
+    under barrier and pipelined schedules and with a lossy codec.
+  * **tier link rates** — per-tier bandwidths ride the invocation specs:
+    slowing the edge link stretches the round; tier knobs pass per-round
+    via ``topology_options`` too.
+  * **composability** — faults/deadline/quorum knobs work unchanged.
+"""
+import numpy as np
+import pytest
+
+from repro.api import FederatedSession, SessionConfig
+from repro.core import cost_model as cm
+from repro.core.cost_model import UploadModel
+from repro.core.geo_tiered import GeoTieredTopology
+from repro.core.topology import register_topology, run_round
+from repro.serverless.faults import FaultModel
+from repro.serverless.runtime import LambdaRuntime
+from repro.store import ObjectStore
+
+ENGINES = ("streaming", "batched", "incremental")
+UPLOAD = UploadModel(mbps=16.0, jitter_s=3.0, rate_jitter=0.5, seed=11)
+N, G = 13, 513
+
+
+def _grads(n=N, seed=77):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal(G).astype(np.float32) for _ in range(n)]
+
+
+def _round(grads, engine=None, schedule=None, upload=UPLOAD, topo="geo_tiered",
+           **kw):
+    return run_round(topo, grads, rnd=0, store=ObjectStore(),
+                     runtime=LambdaRuntime(), engine=engine,
+                     schedule=schedule, upload=upload, **kw)
+
+
+def test_exact_mean_and_engine_schedule_determinism():
+    grads = _grads()
+    ref = np.mean(np.stack(grads).astype(np.float64), axis=0)
+    hashes = set()
+    for engine in ENGINES:
+        for schedule in ("barrier", "pipelined"):
+            r = _round(grads, engine=engine, schedule=schedule,
+                       edge_fanin=4, region_fanin=2)
+            np.testing.assert_allclose(r.avg_flat, ref, rtol=1e-5,
+                                       atol=1e-6)
+            hashes.add(r.avg_flat.tobytes())
+            assert len(r.phases_s) == 3
+    assert len(hashes) == 1
+
+
+@pytest.mark.parametrize("n", [1, 2, 5, 32, 33, 64, 65])
+def test_tree_shapes_cover_edge_cases(n):
+    grads = _grads(n)
+    r = _round(grads)            # default fan-ins 32/16
+    ref = np.mean(np.stack(grads).astype(np.float64), axis=0)
+    np.testing.assert_allclose(r.avg_flat, ref, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("schedule", ["barrier", "pipelined"])
+@pytest.mark.parametrize("codec", ["identity", "fp16"])
+def test_sim_matches_cost_model(schedule, codec):
+    # default registered instance: hooks read its attributes
+    grads = _grads()
+    r = _round(grads, schedule=schedule, codec=codec)
+    if schedule == "barrier":
+        model = cm.barrier_round_cost("geo_tiered", G * 4, N, 1,
+                                    upload=UPLOAD, codec=codec)
+    else:
+        model = cm.pipelined_round_cost("geo_tiered", G * 4, N, 1,
+                                        upload=UPLOAD, readahead_k=1,
+                                        codec=codec)
+    assert r.wall_clock_s == pytest.approx(model.wall_clock_s, rel=1e-9)
+
+
+def test_sim_matches_cost_model_custom_instance():
+    # the documented route to analytical parity with non-default tier
+    # knobs: register a configured instance under its own name
+    register_topology("geo_test_custom", replace=True)(GeoTieredTopology(
+        edge_fanin=3, region_fanin=2, edge_mbps=24.0, region_mbps=96.0,
+        backbone_mbps=320.0))
+    grads = _grads()
+    for schedule, model_fn in (
+            ("barrier", lambda: cm.barrier_round_cost(
+                "geo_test_custom", G * 4, N, 1, upload=UPLOAD)),
+            ("pipelined", lambda: cm.pipelined_round_cost(
+                "geo_test_custom", G * 4, N, 1, upload=UPLOAD,
+                readahead_k=1))):
+        r = _round(grads, schedule=schedule, topo="geo_test_custom")
+        assert r.wall_clock_s == pytest.approx(model_fn().wall_clock_s,
+                                               rel=1e-9)
+
+
+def test_tier_bandwidths_move_time_not_bits():
+    grads = _grads()
+    fast = _round(grads, schedule="pipelined", edge_fanin=4)
+    slow = _round(grads, schedule="pipelined", edge_fanin=4, edge_mbps=4.0)
+    assert slow.wall_clock_s > fast.wall_clock_s
+    assert slow.avg_flat.tobytes() == fast.avg_flat.tobytes()
+
+
+def test_option_validation():
+    with pytest.raises(TypeError, match="unexpected option"):
+        _round(_grads(), nonsense_knob=3)
+    with pytest.raises(ValueError, match="fan-ins"):
+        GeoTieredTopology(edge_fanin=1)
+
+
+def test_fault_knobs_compose():
+    fm = FaultModel(seed=4, dropout_rate=0.2, failure_rate=0.3)
+    session = FederatedSession(SessionConfig(
+        topology="geo_tiered", upload=UPLOAD, faults=fm,
+        participation_k=10, deadline_s=6.0,
+        topology_options={"edge_fanin": 3}))
+    r = session.round(_grads())
+    assert 0.0 < r.delivered_fraction <= 1.0
+    survivors = list(r.arrivals)
+    ref = np.mean(np.stack([_grads()[i] for i in survivors])
+                  .astype(np.float64), axis=0)
+    np.testing.assert_allclose(r.avg_flat, ref, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,301 @@
+"""Million-client cohort engine: lazy schedules + virtualized folds.
+
+The contracts under test:
+
+  * **lazy stream gathering** — ``gather_stream`` returns exactly
+    ``draw(default_rng(key), N)[idx]`` (bit-identical) for arbitrary
+    unique index subsets in any order, including the ``skip`` offset used
+    when several vectors are drawn from one stream; the lazy
+    ``plan_at``/``compute_plan_at``/``participants_arr``/``dropout_at``/
+    ``stall_at`` entries slice their eager twins exactly.
+  * **lazy ≡ eager** — ``run_population_round`` reproduces
+    :func:`repro.core.topology.run_round` over ``pop.materialize(rnd)``
+    bit-for-bit on every observable: ``avg_flat`` bytes, walls, phase
+    times, op/byte counts, billed GB-s, every invocation record field,
+    per-client read-back times, membership arrays, codec error — across
+    topologies × schedules × codecs × faults × quorum/deadline knobs.
+  * **O(active) residency** — a round over a 10^5-client cohort with a
+    small participating subset peaks far below the eager driver's
+    O(N·|grad|) floor (tracemalloc-measured).
+  * **honest refusals** — staleness re-entry, hedging, LIFL's colocated
+    path and unregistered topologies raise ``NotImplementedError``
+    rather than silently diverging.
+"""
+import dataclasses
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.api import FederatedSession, SessionConfig
+from repro.core.cost_model import UploadModel
+from repro.core.topology import run_round
+from repro.serverless.faults import FaultModel, StalenessPolicy
+from repro.serverless.population import (ClientPopulation,
+                                         population_topologies,
+                                         run_population_round)
+from repro.serverless.runtime import LambdaRuntime
+from repro.serverless.streams import gather_stream
+from repro.store import ObjectStore
+
+TOPOLOGIES = ("gradssharding", "lambda_fl", "lifl", "geo_tiered")
+
+UPLOAD = UploadModel(mbps=12.0, jitter_s=0.4, rate_jitter=0.3,
+                     compute_s=0.2, compute_jitter=0.1, seed=5)
+FAULTS = FaultModel(seed=11, dropout_rate=0.15, stall_rate=0.2, stall_s=1.5,
+                    failure_rate=0.25)
+
+
+# ---------------------------------------------------------------------------
+# gather_stream: lazy slices of seeded vectorized draws
+# ---------------------------------------------------------------------------
+
+def _full(key, n, draw=lambda r, m: r.random(m)):
+    return draw(np.random.default_rng(key), n)
+
+
+@pytest.mark.parametrize("idx", [
+    [0], [999], [0, 1, 2], [5, 17, 18, 19, 500],
+    list(range(1000)), list(range(0, 1000, 7)), [998, 999],
+])
+def test_gather_stream_matches_full_draw(idx):
+    key = [3, 7]
+    full = _full(key, 1000)
+    got = gather_stream(key, idx, lambda r, m: r.random(m))
+    assert got.tobytes() == full[np.asarray(idx)].tobytes()
+
+
+def test_gather_stream_unsorted_and_uniform():
+    key = [9, 1]
+    rng = np.random.default_rng(0)
+    idx = rng.permutation(500)[:73]
+    full = _full(key, 500, lambda r, m: r.uniform(0.0, 3.0, m))
+    got = gather_stream(key, idx, lambda r, m: r.uniform(0.0, 3.0, m))
+    assert got.tobytes() == full[idx].tobytes()
+
+
+def test_gather_stream_skip_offset():
+    # UploadModel.plan draws starts then mults from ONE stream: the mults
+    # slice must skip the n starts draws exactly
+    key = [4, 2]
+    rng = np.random.default_rng(key)
+    rng.uniform(0.0, 1.0, 200)                       # starts
+    mults = rng.uniform(0.0, 0.5, 200)               # then mults
+    got = gather_stream(key, [3, 77, 150],
+                        lambda r, m: r.uniform(0.0, 0.5, m), skip=200)
+    assert got.tobytes() == mults[[3, 77, 150]].tobytes()
+
+
+def test_gather_stream_rejects_bad_idx():
+    with pytest.raises(ValueError):
+        gather_stream([1], [3, 3], lambda r, m: r.random(m))
+    with pytest.raises(ValueError):
+        gather_stream([1], [-1, 2], lambda r, m: r.random(m))
+    assert len(gather_stream([1], [], lambda r, m: r.random(m))) == 0
+
+
+def test_lazy_model_entries_slice_eager_twins():
+    up = UPLOAD
+    n, rnd = 300, 4
+    idx = np.array([0, 7, 8, 9, 150, 299])
+    s_full, m_full = up.plan(n, rnd)
+    c_full = up.compute_plan(n, rnd)
+    s_lazy, m_lazy = up.plan_at(n, rnd, idx)
+    assert s_lazy.tobytes() == np.asarray(s_full)[idx].tobytes()
+    assert m_lazy.tobytes() == np.asarray(m_full)[idx].tobytes()
+    assert up.compute_plan_at(n, rnd, idx).tobytes() == \
+        np.asarray(c_full)[idx].tobytes()
+    fm = FAULTS
+    assert np.array_equal(fm.participants_arr(n, rnd, n), np.arange(n))
+    assert tuple(fm.participants_arr(n, rnd, 40).tolist()) == \
+        fm.participants(n, rnd, 40)
+    assert fm.dropout_at(n, rnd, idx).tobytes() == \
+        fm.dropout_plan(n, rnd)[idx].tobytes()
+    assert fm.stall_at(n, rnd, idx).tobytes() == \
+        fm.stall_plan(n, rnd)[idx].tobytes()
+
+
+# ---------------------------------------------------------------------------
+# ClientPopulation
+# ---------------------------------------------------------------------------
+
+def test_population_deterministic_and_sliceable():
+    pop = ClientPopulation(50, grad_elems=33, seed=2)
+    full = pop.grads(3, np.arange(50))
+    assert pop.grads(3, [5, 17]).tobytes() == full[[5, 17]].tobytes()
+    assert np.concatenate(
+        list(pop.iter_grads(3, np.arange(50), chunk=7))).tobytes() \
+        == full.tobytes()
+    mats = pop.materialize(3)
+    assert len(mats) == 50 and mats[11].tobytes() == full[11].tobytes()
+    # different rounds share per-client scale but move the direction
+    assert pop.grads(4, [5]).tobytes() != pop.grads(3, [5]).tobytes()
+    with pytest.raises(ValueError):
+        ClientPopulation(0)
+    with pytest.raises(ValueError):
+        ClientPopulation(5, grad_elems=0)
+
+
+# ---------------------------------------------------------------------------
+# lazy ≡ eager bit-identity
+# ---------------------------------------------------------------------------
+
+def _compare(topo, n=23, rnd=3, elems=257, seed=7, **kw):
+    pop = ClientPopulation(n, grad_elems=elems, seed=seed)
+    st_e, rt_e = ObjectStore(), LambdaRuntime()
+    r_e = run_round(topo, pop.materialize(rnd), rnd=rnd, store=st_e,
+                    runtime=rt_e, **kw)
+    st_p, rt_p = ObjectStore(), LambdaRuntime()
+    r_p = run_population_round(topo, pop, rnd=rnd, store=st_p,
+                               runtime=rt_p, **kw)
+    assert r_p.avg_flat.tobytes() == r_e.avg_flat.tobytes()
+    assert r_p.wall_clock_s == r_e.wall_clock_s
+    assert tuple(r_p.phases_s) == tuple(r_e.phases_s)
+    assert (r_p.puts, r_p.gets) == (r_e.puts, r_e.gets)
+    assert (st_p.stats.bytes_written, st_p.stats.bytes_read) == \
+        (st_e.stats.bytes_written, st_e.stats.bytes_read)
+    assert sum(r.billed_gb_s for r in rt_p.records) == \
+        sum(r.billed_gb_s for r in rt_e.records)
+    assert np.asarray(r_p.client_done_s).tobytes() == \
+        np.asarray(r_e.client_done_s).tobytes()
+    assert tuple(r_p.participants) == tuple(r_e.participants)
+    assert tuple(r_p.arrivals) == tuple(r_e.arrivals)
+    assert tuple(r_p.dropped) == tuple(r_e.dropped)
+    assert tuple(r_p.late) == tuple(r_e.late)
+    assert len(r_p.records) == len(r_e.records)
+    for a, b in zip(r_e.records, r_p.records):
+        assert dataclasses.astuple(a) == dataclasses.astuple(b), a.fn_name
+    assert r_p.codec_error == r_e.codec_error
+    assert r_p.retries == r_e.retries
+    assert r_p.round_end_s == r_e.round_end_s
+    assert (r_p.memory_mb, r_p.peak_memory_mb) == \
+        (r_e.memory_mb, r_e.peak_memory_mb)
+    return r_p
+
+
+@pytest.mark.parametrize("topology", TOPOLOGIES)
+@pytest.mark.parametrize("schedule", [None, "barrier", "pipelined"])
+def test_population_matches_eager(topology, schedule):
+    _compare(topology, schedule=schedule, upload=UPLOAD)
+
+
+@pytest.mark.parametrize("topology", TOPOLOGIES)
+def test_population_matches_eager_under_faults(topology):
+    _compare(topology, schedule="pipelined", upload=UPLOAD, faults=FAULTS,
+             participation_k=18, straggler_threshold_s=0.5)
+    _compare(topology, schedule="quorum", quorum=10, upload=UPLOAD,
+             faults=FAULTS, participation_k=18)
+
+
+@pytest.mark.parametrize("codec", ["identity", "fp16", "qsgd8", "topk"])
+def test_population_matches_eager_codecs(codec):
+    _compare("gradssharding", codec=codec, upload=UPLOAD)
+    _compare("geo_tiered", codec=codec, upload=UPLOAD, schedule="barrier")
+
+
+@pytest.mark.parametrize("topology", TOPOLOGIES)
+def test_population_matches_eager_deadline_quorum(topology):
+    _compare(topology, upload=UPLOAD, deadline_s=1.0)
+    _compare(topology, upload=UPLOAD, schedule="quorum", quorum=8,
+             deadline_s=2.0)
+
+
+def test_population_matches_eager_edges_and_options():
+    for topo in TOPOLOGIES:
+        _compare(topo, n=1, upload=UPLOAD)
+        _compare(topo, n=2, upload=UPLOAD)
+        _compare(topo, upload=None)                  # no upload model
+        _compare(topo, upload=UPLOAD, readahead_k=4)
+        _compare(topo, upload=UPLOAD,
+                 client_ready_s=list(np.linspace(0.0, 3.0, 23)))
+    _compare("gradssharding", upload=UPLOAD, n_shards=7)
+    _compare("gradssharding", upload=UPLOAD, partition="balanced",
+             n_shards=3, tensor_sizes=(64, 129, 64))
+    _compare("geo_tiered", upload=UPLOAD, edge_fanin=3, region_fanin=2,
+             edge_mbps=20.0, backbone_mbps=300.0)
+
+
+def test_population_session_multi_round_matches_eager():
+    pop = ClientPopulation(31, grad_elems=129, seed=3)
+    cfg = dict(topology="geo_tiered", schedule="pipelined", upload=UPLOAD,
+               faults=FAULTS, participation_k=24, codec="fp16")
+    se = FederatedSession(SessionConfig(**cfg))
+    sp = FederatedSession(SessionConfig(population=pop, **cfg))
+    for rnd in range(4):
+        r_e = se.round(pop.materialize(rnd))
+        r_p = sp.round()
+        assert r_p.avg_flat.tobytes() == r_e.avg_flat.tobytes()
+        assert r_p.wall_clock_s == r_e.wall_clock_s
+        assert np.asarray(r_p.client_done_s).tobytes() == \
+            np.asarray(r_e.client_done_s).tobytes()
+    assert sp.summary() == se.summary()
+
+
+def test_population_session_compaction_and_log_ops():
+    pop = ClientPopulation(200, grad_elems=64, seed=3)
+    kw = dict(topology="lambda_fl", upload=UPLOAD, track_codec_error=False)
+    ref = FederatedSession(SessionConfig(population=pop, **kw))
+    lean = FederatedSession(SessionConfig(population=pop, log_ops=False,
+                                          keep_records=False, **kw))
+    for _ in range(3):
+        r_ref = ref.round()
+        r_lean = lean.round()
+        assert r_lean.avg_flat.tobytes() == r_ref.avg_flat.tobytes()
+    s_ref, s_lean = ref.summary(), lean.summary()
+    for key in ("total_cost", "puts", "gets", "session_wall_s"):
+        assert s_lean[key] == s_ref[key]
+    assert lean.store.stats.put_log == []            # logs skipped
+    assert lean.runtime.records == []                # compacted
+    assert len(ref.store.stats.put_log) > 0
+
+
+# ---------------------------------------------------------------------------
+# refusals and registry
+# ---------------------------------------------------------------------------
+
+def test_population_refuses_unsupported_knobs():
+    pop = ClientPopulation(8, grad_elems=32)
+    kw = dict(rnd=0, store=ObjectStore(), runtime=LambdaRuntime())
+    with pytest.raises(NotImplementedError, match="staleness"):
+        run_population_round("lambda_fl", pop,
+                             staleness_policy=StalenessPolicy(), **kw)
+    with pytest.raises(NotImplementedError, match="hedg"):
+        run_population_round("lambda_fl", pop, schedule="pipelined",
+                             hedge_factor=1.5, **kw)
+    with pytest.raises(NotImplementedError, match="colocated"):
+        run_population_round("lifl", pop, colocated=True, **kw)
+    with pytest.raises(NotImplementedError, match="population entry"):
+        run_population_round("sharded_tree", pop, **kw)
+    with pytest.raises(ValueError, match="client_grads"):
+        FederatedSession(SessionConfig(population=pop)).round(
+            [np.zeros(32, np.float32)])
+    with pytest.raises(ValueError, match="client_grads"):
+        FederatedSession(SessionConfig()).round()
+    assert set(TOPOLOGIES) <= set(population_topologies())
+
+
+# ---------------------------------------------------------------------------
+# O(active) residency
+# ---------------------------------------------------------------------------
+
+def test_population_round_is_o_active_memory():
+    # 10^5-client cohort, 512 sampled participants, 4096-elem gradients:
+    # the eager driver's client gradients alone would be
+    # N * 4096 * 4 B = 1.6 GB; the population engine must stay orders of
+    # magnitude below that (transients: O(K) schedule columns + one
+    # CHUNK_ROWS x grad batch + O(N) bits for the membership draw).
+    n = 100_000
+    pop = ClientPopulation(n, grad_elems=4096, seed=1)
+    store = ObjectStore(log_ops=False)
+    runtime = LambdaRuntime()
+    tracemalloc.start()
+    r = run_population_round(
+        "geo_tiered", pop, rnd=0, store=store, runtime=runtime,
+        upload=UPLOAD, faults=FAULTS, participation_k=512,
+        track_codec_error=False)
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert peak < 64 * 1024 * 1024, f"peak {peak / 1e6:.1f} MB"
+    assert len(r.arrivals) <= 512 and r.wall_clock_s > 0.0
+    # the cohort-sized result arrays are the only O(N) state
+    assert len(r.client_done_s) == n
