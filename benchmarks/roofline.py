@@ -10,15 +10,26 @@ Definitions (per-device quantities from the compiled SPMD module):
   roofline_fraction = (MODEL_FLOPS/chips / peak) / max(term)
       — the fraction of the binding resource's time spent on useful model
       FLOPs; this is the §Perf score.
+
+A second, host-side section (PR 9) sweeps the :class:`ParallelFoldPool`
+worker count over a synthetic batched-DAG fold: measured fold throughput
+and speedup-vs-workers=1 go out as (non-gated) CSV rows — timings are
+host-dependent — while the deterministic facts (the worker grid, the
+bit-identity of every worker count's result, the reference result hash)
+are recorded as smoke-gated invariants in ``expected_smoke.json``.
 """
 from __future__ import annotations
 
 import glob
+import hashlib
 import json
 import os
 import sys
+import time
 
-from benchmarks.common import emit, table
+import numpy as np
+
+from benchmarks.common import emit, emit_timing, record_invariant, table
 from repro.config import TPU_V5E
 
 
@@ -69,6 +80,90 @@ def _print_dir(out_dir: str, title: str) -> None:
                   "HBM GB/dev"], trows)
 
 
+# ---------------------------------------------------------------------------
+# Host fold throughput: ParallelFoldPool worker sweep (PR 9)
+# ---------------------------------------------------------------------------
+
+FOLD_WORKER_GRID = (1, 2, 4, 8)
+
+
+def _fold_once(n_inputs: int, size: int, workers: int, seed: int = 17):
+    """Evaluate one unweighted batched-DAG node of ``n_inputs`` × ``size``
+    elements on a ``workers``-wide pool (threshold dropped so the sweep
+    exercises real multi-span splits at bench sizes). Returns
+    (seconds, result)."""
+    from repro.core import agg_engine
+    from repro.core.agg_engine import LazyAverage
+    from repro.core.fold_pool import ParallelFoldPool
+
+    rng = np.random.default_rng(seed)
+    ins = [rng.standard_normal(size).astype(np.float32)
+           for _ in range(n_inputs)]
+    pool = ParallelFoldPool(workers, min_parallel_elems=1)
+    node = LazyAverage(ins, None)
+    t0 = time.perf_counter()
+    agg_engine._evaluate_nodes([node], pool=pool)
+    secs = time.perf_counter() - t0
+    pool.close()
+    return secs, node.out
+
+
+def host_fold_main(smoke: bool = False) -> None:
+    """Fold-throughput scaling across the worker grid.
+
+    Emits measured GB/s + speedup CSV rows (host-dependent, not gated)
+    and records the deterministic invariants — worker grid, cross-count
+    bit-identity, reference hash — for the CI smoke gate. The scaling
+    target (>= 0.7x linear up to the host's real core count) is reported
+    per worker count; oversubscribed counts (> cores) are expected flat.
+    """
+    from repro.core.fold_pool import CHUNK_ELEMS, host_cores
+
+    n_inputs = 6 if smoke else 10
+    size = (4 if smoke else 16) * CHUNK_ELEMS
+    reps = 2 if smoke else 3
+    cores = host_cores()
+
+    ref_out, results = None, []
+    identical = True
+    for workers in FOLD_WORKER_GRID:
+        best_s = float("inf")
+        for _ in range(reps):
+            secs, out = _fold_once(n_inputs, size, workers)
+            best_s = min(best_s, secs)
+        if ref_out is None:
+            ref_out = out
+        elif not np.array_equal(out, ref_out):
+            identical = False
+        results.append((workers, best_s))
+
+    base_s = results[0][1]
+    rows = []
+    for workers, secs in results:
+        gbps = n_inputs * size * 4 / secs / 1e9
+        speedup = base_s / secs
+        eff = min(workers, cores)          # linear ceiling on this host
+        frac = speedup / eff
+        emit_timing(f"roofline/host_fold/workers={workers}", secs,
+                    gbps=gbps, speedup=speedup, linear_frac=frac,
+                    ok=frac >= 0.7)
+        rows.append([workers, f"{secs*1e3:.1f}", f"{gbps:.2f}",
+                     f"{speedup:.2f}", f"{eff}x", f"{frac:.2f}"])
+    table(f"Host fold throughput — {n_inputs} inputs × {size} elems, "
+          f"{cores} core(s)",
+          ["workers", "ms", "GB/s", "speedup", "linear", "frac"], rows)
+
+    # deterministic facts only: the CI gate must not see host timings
+    record_invariant("roofline/host_fold/workers_grid",
+                     ",".join(str(w) for w in FOLD_WORKER_GRID))
+    record_invariant("roofline/host_fold/bit_identical", identical)
+    record_invariant(
+        "roofline/host_fold/avg_hash",
+        hashlib.sha256(np.ascontiguousarray(ref_out).tobytes())
+        .hexdigest()[:16])
+    assert identical, "fold result drifted across worker counts"
+
+
 def main(out_dir: str = "dryrun_results") -> None:
     _print_dir(out_dir, "Roofline terms per (mesh × arch × shape) — "
                         "ms per step [paper-technique baseline]")
@@ -77,6 +172,7 @@ def main(out_dir: str = "dryrun_results") -> None:
                    "Roofline terms — beyond-paper optimized "
                    "(grouped GQA decode + causal block skip + local MoE "
                    "dispatch)")
+    host_fold_main()
 
 
 def roofline_fraction_max(out_dirs=("dryrun_results",

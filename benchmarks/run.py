@@ -42,6 +42,8 @@ SMOKE_BENCHES = [
     ("rq3_cross_arch (smoke)", lambda: rq3_cross_arch.main(smoke=True)),
     ("event_pipeline (smoke)",
      lambda: event_pipeline_bench.main(["--smoke"])),
+    ("roofline host fold (smoke)",
+     lambda: roofline.host_fold_main(smoke=True)),
     ("smoke_invariants (CI gate input)", smoke_invariants.main),
 ]
 
@@ -50,7 +52,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI subset: 1-config rq3 + event_pipeline + "
-                         "smoke invariants")
+                         "host-fold roofline + smoke invariants")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write rows + invariants as a JSON artifact "
                          "(fed to benchmarks.check_invariants in CI)")

@@ -8,7 +8,7 @@ cost and latency, never the learning result: GradsSharding is bit-identical
 to full-vector FedAvg, and sharded_tree is bit-identical to λ-FL.
 
 Run:  PYTHONPATH=src python examples/quickstart.py \
-          [--schedule pipelined --readahead-k 4]
+          [--schedule pipelined --readahead-k 4 --workers 4]
 """
 import argparse
 
@@ -36,6 +36,11 @@ def main(argv=None):
                     help="on-the-wire contribution format (default: "
                          "REPRO_AGG_CODEC / identity); lossy codecs are "
                          "deterministic and report codec_error")
+    ap.add_argument("--workers", default=None,
+                    help="host fold-pool width: an int or 'auto' "
+                         "(default: REPRO_AGG_WORKERS / all host cores). "
+                         "Folds shard across cores by element span, so "
+                         "the result bits never depend on this")
     args = ap.parse_args(argv)
 
     upload = None
@@ -51,7 +56,8 @@ def main(argv=None):
     for topology in ("gradssharding", "lambda_fl", "lifl", "sharded_tree"):
         session = FederatedSession(SessionConfig(
             topology=topology, n_shards=M, schedule=args.schedule,
-            readahead_k=args.readahead_k, upload=upload, codec=args.codec))
+            readahead_k=args.readahead_k, upload=upload, codec=args.codec,
+            workers=args.workers))
         results[topology] = r = session.round(grads)
         print(f"{topology:14s}: wall {r.wall_clock_s:6.2f}s "
               f"({len(r.phases_s)} phase(s)), ops {r.puts}P+{r.gets}G, "

@@ -33,11 +33,14 @@ from typing import Any, Callable, Iterator, Mapping, Sequence
 
 import numpy as np
 
+from repro import knobs
 from repro.config import LambdaLimits
+from repro.core.agg_engine import DEFAULT_ENGINE, ENGINES
 from repro.core.cost_model import UploadModel
+from repro.core.fold_pool import get_workers
 from repro.core.topology import (AggregationResult, available_topologies,
-                                 get_codec, get_schedule, get_topology,
-                                 round_prefix, run_round,
+                                 get_codec, get_readahead, get_schedule,
+                                 get_topology, round_prefix, run_round,
                                  validate_fault_knobs)
 from repro.serverless.faults import FaultModel, StaleBuffer, StalenessPolicy
 from repro.serverless.population import (ClientPopulation,
@@ -131,7 +134,54 @@ class SessionConfig:
     # ``population.materialize(rnd)``; pair with ``log_ops=False`` (and
     # ``keep_records=False`` for multi-round) at million-client scale
     population: ClientPopulation | None = None
+    # host fold-pool width behind the batched DAG evaluation, the Pallas
+    # interpret launches and the population engine's chunked replays:
+    # int >= 1, "auto"/None (env REPRO_AGG_WORKERS, else every host
+    # core). Work is split along the element axis only, so avg_flat is
+    # bit-identical at every worker count
+    workers: int | str | None = None
+    # device count for engine="host_mesh" (shard_map over a 1-D CPU
+    # mesh); requires the process to have been started with XLA_FLAGS=
+    # --xla_force_host_platform_device_count=N. None = every visible
+    # CPU device. Setting it with any other engine is an error
+    host_mesh: int | None = None
     topology_options: Mapping[str, Any] = field(default_factory=dict)
+
+    @classmethod
+    def from_env(cls, **overrides) -> "SessionConfig":
+        """A config with every ``REPRO_AGG_*`` knob resolved *now*.
+
+        Snapshots the engine / schedule / readahead / codec / faults /
+        workers environment knobs into explicit field values, so the
+        returned config is immune to later ``os.environ`` changes. Set
+        knobs are parsed and validated *eagerly* through their resolvers
+        (a bad ``REPRO_AGG_READAHEAD=zero`` raises here, not mid-round;
+        ``REPRO_AGG_WORKERS=auto`` pins the host's core count). Explicit
+        keyword overrides beat the environment, which beats the defaults
+        — the precedence contract of :mod:`repro.knobs`. Unset env knobs
+        stay ``None`` (resolver defaults) rather than being pinned.
+        """
+        from repro.serverless.faults import fault_model_from_env
+        env: dict[str, Any] = {}
+        if knobs.env_engine(None) is not None:
+            engine = knobs.env_engine(None)
+            if engine not in ENGINES:
+                raise ValueError(
+                    f"unknown aggregation engine {engine!r} in "
+                    f"{knobs.ENV_ENGINE} (expected one of {ENGINES})")
+            env["engine"] = engine
+        if knobs.env_schedule(None) is not None:
+            env["schedule"] = get_schedule(None)
+        if knobs.env_readahead(None) is not None:
+            env["readahead_k"] = get_readahead(None)
+        if knobs.env_codec(None) is not None:
+            env["codec"] = get_codec(None).name
+        if knobs.env_faults():
+            env["faults"] = fault_model_from_env()
+        if knobs.env_workers(None) is not None:
+            env["workers"] = get_workers(None)
+        env.update(overrides)
+        return cls(**env)
 
     def round_options(self) -> dict:
         """The topology-option dict one round receives."""
@@ -181,6 +231,14 @@ class FederatedSession:
         self.config = config
         self.topology = get_topology(config.topology)   # fail fast
         get_codec(config.codec)                         # fail fast too
+        get_workers(config.workers)                     # and on workers
+        if config.host_mesh is not None:
+            engine = config.engine if config.engine not in (None, "auto") \
+                else knobs.env_engine(DEFAULT_ENGINE)
+            if engine != "host_mesh":
+                raise ValueError(
+                    f"host_mesh={config.host_mesh} requires "
+                    f"engine='host_mesh', got engine={engine!r}")
         # fail fast on bad fault/participation/deadline/quorum combos
         # (cohort-size-dependent bounds re-check per round)
         validate_fault_knobs(get_schedule(config.schedule),
@@ -269,6 +327,7 @@ class FederatedSession:
             staleness_policy=cfg.staleness_policy,
             stale_buffer=self.stale_buffer,
             hedge_factor=cfg.hedge_factor,
+            workers=cfg.workers, host_mesh=cfg.host_mesh,
             **cfg.round_options())
         self._observe(result)
         if not cfg.keep_records:
@@ -297,6 +356,7 @@ class FederatedSession:
             staleness_policy=cfg.staleness_policy,
             stale_buffer=self.stale_buffer,
             hedge_factor=cfg.hedge_factor,
+            workers=cfg.workers, host_mesh=cfg.host_mesh,
             **cfg.round_options())
         self._observe(result)
         if not cfg.keep_records:

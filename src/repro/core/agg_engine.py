@@ -29,6 +29,18 @@ Three backends implement the same primitive-op protocol:
     full-size f64 temporaries per contribution. Chunking is element-wise,
     so the IEEE op sequence per element is exactly the streaming
     reference's — ``avg_flat`` stays bit-identical.
+  * ``"host_mesh"`` — the batched DAG with its unweighted folds dispatched
+    through ``shard_map`` over a 1-D mesh of host CPU devices
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=N``), each device
+    folding a contiguous element shard in the reference op order; the
+    final divide runs on the host, so bits are preserved.
+
+Host parallelism: the batched/host_mesh evaluators split disjoint
+element ranges across a :class:`~repro.core.fold_pool.ParallelFoldPool`
+sized by the ``workers`` knob (``SessionConfig.workers`` /
+``REPRO_AGG_WORKERS``, default = real cores). The partitioning is
+chunk-aligned and element-wise, so ``avg_flat`` is bit-identical at
+every worker count — parallelism moves wall-clock, never bits.
 
 Both backends drive the **same invocation body template**, so every
 accounting field (``puts``/``gets``, ``billed_gb_s``, ``peak_memory_mb``,
@@ -43,9 +55,9 @@ Caveat: the Pallas path shares the accumulation order but may differ by
 interpret mode (non-TPU hosts) it is far slower than the numpy evaluator —
 hence it is only auto-enabled on TPU backends.
 
-Selection: pass ``engine="streaming" | "batched" | "incremental"`` to
-``aggregate_round`` (or any topology function), or set ``REPRO_AGG_ENGINE``
-in the environment; the default is ``"batched"``. Engines compose freely
+Selection: pass ``engine="streaming" | "batched" | "incremental" |
+"host_mesh"`` to ``aggregate_round`` (or any topology function), or set
+``REPRO_AGG_ENGINE`` in the environment; the default is ``"batched"``. Engines compose freely
 with the round *schedule* knob (``schedule="barrier" | "pipelined"`` /
 ``REPRO_AGG_SCHEDULE``): accounting is value-agnostic, so every engine
 yields identical modeled platform numbers under either schedule.
@@ -76,35 +88,18 @@ across engines for a fixed survivor set and fold order.
 """
 from __future__ import annotations
 
-import os
-from concurrent.futures import ThreadPoolExecutor
 from typing import Sequence
 
 import numpy as np
 
+from repro import knobs
+from repro.core.fold_pool import PARALLEL_MIN_ELEMS  # noqa: F401  (re-export)
+from repro.core.fold_pool import CHUNK_ELEMS, ParallelFoldPool, get_pool
 from repro.core.sharding import PartitionPlan, ShardView, shard, shard_views
 from repro.core.wire_codec import (EncodedView, WirePayload, decode_eager,
                                    decode_lazy)
 from repro.serverless.event_sim import ReadAheadWindow
 from repro.store import ObjectStore
-
-# Fold-chunk size in elements: 256 K elements = 1 MB f32 / 2 MB f64, small
-# enough that the running accumulator stays cache-resident (measured ~1.6x
-# over full-size temporaries on 2-core hosts, more where DRAM is slower).
-CHUNK_ELEMS = 1 << 18
-# Below this many total elements the evaluator stays single-threaded (the
-# pool costs more than it saves on test-sized arrays).
-PARALLEL_MIN_ELEMS = 1 << 21
-_MAX_WORKERS = max(1, min(4, os.cpu_count() or 1))
-
-_pool: ThreadPoolExecutor | None = None
-
-
-def _get_pool() -> ThreadPoolExecutor:
-    global _pool
-    if _pool is None:
-        _pool = ThreadPoolExecutor(max_workers=_MAX_WORKERS)
-    return _pool
 
 
 # ---------------------------------------------------------------------------
@@ -258,20 +253,24 @@ def _node_chunk(nd: LazyAverage, s: int, e: int, scr: _Scratch) -> None:
 
 
 def _evaluate_nodes(nodes: Sequence[LazyAverage],
-                    chunk: int = CHUNK_ELEMS) -> None:
+                    chunk: int = CHUNK_ELEMS,
+                    pool: ParallelFoldPool | None = None) -> None:
     """Fill ``out`` for every pending node.
 
     Nodes are grouped by element count; within a group they are kept in
     creation (= phase/topological) order and evaluated chunk-by-chunk, all
     nodes per chunk, so a tree's level-2 fold reads its level-1 partials
     while those chunks are still cache-hot, and partials hit DRAM exactly
-    once (their final f32 write). Disjoint element ranges go to worker
-    threads; chunking is element-wise so the result is bit-identical
-    regardless of chunk size or thread count.
+    once (their final f32 write). Disjoint element ranges go to the
+    :class:`~repro.core.fold_pool.ParallelFoldPool`'s workers; chunking
+    is element-wise so the result is bit-identical regardless of chunk
+    size or worker count.
     """
     pending = [nd for nd in nodes if nd.out is None]
     if not pending:
         return
+    if pool is None:
+        pool = get_pool()
     groups: dict[int, list[LazyAverage]] = {}
     for nd in pending:
         nd.out = np.empty(nd.size, np.float32)
@@ -288,14 +287,7 @@ def _evaluate_nodes(nodes: Sequence[LazyAverage],
                 for nd in group:
                     _node_chunk(nd, s, e, scr)
 
-        if size >= PARALLEL_MIN_ELEMS and _MAX_WORKERS > 1:
-            span = -(-size // _MAX_WORKERS)
-            span += (-span) % chunk               # align splits to chunks
-            tasks = [(lo, min(lo + span, size))
-                     for lo in range(0, size, span)]
-            list(_get_pool().map(lambda t: run(*t), tasks))
-        else:
-            run(0, size)
+        pool.run_spans(run, size, chunk)
 
 
 # ---------------------------------------------------------------------------
@@ -574,8 +566,10 @@ class BatchedBackend(ExecutionBackend):
 
     name = "batched"
 
-    def __init__(self, use_pallas: bool | None = None):
+    def __init__(self, use_pallas: bool | None = None,
+                 workers: int | str | None = None):
         self._use_pallas = use_pallas
+        self._pool = get_pool(workers)
         self._nodes: list[LazyAverage] = []
         self._memo: dict = {}
 
@@ -614,9 +608,9 @@ class BatchedBackend(ExecutionBackend):
     def _pallas_enabled(self) -> bool:
         if self._use_pallas is not None:
             return self._use_pallas
-        env = os.environ.get("REPRO_AGG_PALLAS")
+        env = knobs.env_pallas()
         if env is not None:
-            return env not in ("", "0", "false", "False")
+            return env
         try:
             import jax
             return jax.default_backend() == "tpu"
@@ -639,14 +633,14 @@ class BatchedBackend(ExecutionBackend):
         for nds in by_n.values():
             stacks = [np.stack([np.asarray(_materialize(x), np.float32)
                                 for x in nd.inputs]) for nd in nds]
-            outs = kops.fedavg_multi(stacks)
+            outs = kops.fedavg_multi(stacks, workers=self._pool.workers)
             for nd, out in zip(nds, outs):
                 nd.out = np.asarray(out, np.float32)
 
     def end_round(self, store: ObjectStore) -> None:
         if self._pallas_enabled():
             self._evaluate_pallas()
-        _evaluate_nodes(self._nodes)
+        _evaluate_nodes(self._nodes, pool=self._pool)
         for key in store.list():
             v = store.peek(key)
             if not isinstance(v, (np.ndarray, bytes, bytearray)) \
@@ -658,30 +652,92 @@ class BatchedBackend(ExecutionBackend):
         self._memo = {}
 
 
+class HostMeshBackend(BatchedBackend):
+    """Multi-device CPU path: the batched DAG with ``shard_map`` folds.
+
+    Same deferred-DAG recording as :class:`BatchedBackend`; at round end,
+    unweighted nodes whose inputs are all concrete dispatch through
+    :func:`repro.core.device_agg.mesh_fold_sum` — a ``compat.shard_map``
+    left-fold over a 1-D mesh of host CPU devices
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=N``), each device
+    owning a contiguous element shard — then divide on the host with the
+    evaluator's exact f32 op. The on-device fold replays the streaming
+    reference's element-wise add chain in order, so the result stays
+    bit-identical to every other engine; weighted (f64) folds and nodes
+    with lazy ancestors fall back to the numpy chunked evaluator.
+
+    Selection: ``engine="host_mesh"`` (``SessionConfig.host_mesh`` sizes
+    the mesh; ``None`` uses every visible CPU device).
+    """
+
+    name = "host_mesh"
+
+    def __init__(self, workers: int | str | None = None,
+                 n_devices: int | None = None):
+        # the Pallas dispatch is superseded by the mesh dispatch here
+        super().__init__(use_pallas=False, workers=workers)
+        from repro.core import device_agg
+        self._mesh = device_agg.make_fold_mesh(n_devices)
+
+    def _evaluate_mesh(self) -> None:
+        from repro.core import device_agg
+
+        ready = [nd for nd in self._nodes
+                 if nd.out is None and nd.weights is None and nd.size > 0
+                 and not any(isinstance(x, LazyAverage) and x.out is None
+                             for x in nd.inputs)]
+        for nd in ready:
+            stack = np.stack([np.asarray(_materialize(x), np.float32)
+                              for x in nd.inputs])
+            total = device_agg.mesh_fold_sum(self._mesh, stack)
+            nd.out = np.empty(nd.size, np.float32)
+            # same single f32 divide as _node_chunk — bits preserved
+            np.divide(total, np.float32(float(len(nd.inputs))), out=nd.out)
+
+    def end_round(self, store: ObjectStore) -> None:
+        self._evaluate_mesh()
+        super().end_round(store)
+
+
 # ---------------------------------------------------------------------------
 # Selection
 # ---------------------------------------------------------------------------
 
 DEFAULT_ENGINE = "batched"
 
+ENGINES = ("streaming", "batched", "incremental", "host_mesh")
 
-def get_backend(engine: str | ExecutionBackend | None = None
-                ) -> ExecutionBackend:
+
+def get_backend(engine: str | ExecutionBackend | None = None, *,
+                workers: int | str | None = None,
+                host_mesh: int | None = None) -> ExecutionBackend:
     """Resolve the engine knob: an instance, a name, ``None``/"auto" (env
     ``REPRO_AGG_ENGINE``, else ``"batched"``).
 
-    Backends are stateful per round — this returns a fresh instance.
+    ``workers`` sizes the :class:`~repro.core.fold_pool.ParallelFoldPool`
+    behind the batched/host_mesh evaluators (``None`` defers to
+    ``REPRO_AGG_WORKERS``, else the host's real core count); the
+    streaming and incremental engines are arrival-driven and fold one
+    contribution at a time, so the knob is inert there. ``host_mesh``
+    sizes the ``host_mesh`` engine's CPU device mesh and is rejected for
+    any other engine. Backends are stateful per round — this returns a
+    fresh instance (pools are shared per worker count).
     """
     if isinstance(engine, ExecutionBackend):
         return engine
     if engine is None or engine == "auto":
-        engine = os.environ.get("REPRO_AGG_ENGINE", DEFAULT_ENGINE)
+        engine = knobs.env_engine(DEFAULT_ENGINE)
+    if host_mesh is not None and engine != "host_mesh":
+        raise ValueError(
+            f"host_mesh={host_mesh} requires engine='host_mesh', "
+            f"got engine={engine!r}")
     if engine == "streaming":
         return StreamingBackend()
     if engine == "batched":
-        return BatchedBackend()
+        return BatchedBackend(workers=workers)
     if engine == "incremental":
         return IncrementalBackend()
+    if engine == "host_mesh":
+        return HostMeshBackend(workers=workers, n_devices=host_mesh)
     raise ValueError(f"unknown aggregation engine {engine!r} "
-                     "(expected 'streaming', 'batched', 'incremental', "
-                     "or 'auto')")
+                     f"(expected one of {ENGINES} or 'auto')")

@@ -42,15 +42,15 @@ mean). Inter-aggregator partials and the averaged outputs stay raw f32 —
 only the client→aggregator hop (the dominant transfer-volume term) is
 compressed.
 
-This module keeps the legacy functional surface as thin delegating shims:
-``aggregate_round`` (the supported functional alias of
-``FederatedSession.round``) plus the deprecated per-topology round
-functions, with every historical name re-exported so existing imports
-keep working.
+This module keeps the supported functional surface: ``aggregate_round``
+(the functional alias of ``FederatedSession.round``), with every
+historical name re-exported so existing imports keep working. The
+deprecated per-topology shims (``gradssharding_round`` /
+``lambda_fl_round`` / ``lifl_round``) were removed — call
+:func:`~repro.core.topology.run_round` with the topology name instead.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Sequence
 
 import numpy as np
@@ -105,14 +105,17 @@ def aggregate_round(topology: str, client_grads: Sequence[np.ndarray], *,
                     staleness_policy=None,
                     stale_buffer=None,
                     hedge_factor: float | None = None,
+                    workers: int | str | None = None,
+                    host_mesh: int | None = None,
                     **kw) -> AggregationResult:
     """One aggregation round of any registered topology (functional form
     of :meth:`repro.api.FederatedSession.round`). The fault-tolerance
-    knobs (``faults``/``participation_k``/``deadline_s``/``quorum``) and
+    knobs (``faults``/``participation_k``/``deadline_s``/``quorum``),
     the robustness knobs (``staleness_policy`` + caller-owned
     ``stale_buffer`` for cross-round stale re-entry, ``hedge_factor``
-    for speculative aggregator hedging) mirror
-    :class:`repro.api.SessionConfig`; see
+    for speculative aggregator hedging) and the host-parallelism knobs
+    (``workers`` fold-pool width, ``host_mesh`` CPU device count for
+    ``engine="host_mesh"``) mirror :class:`repro.api.SessionConfig`; see
     :func:`repro.core.topology.run_round`."""
     return run_round(
         topology, client_grads, rnd=rnd, store=store, runtime=runtime,
@@ -125,62 +128,6 @@ def aggregate_round(topology: str, client_grads: Sequence[np.ndarray], *,
         deadline_s=deadline_s, quorum=quorum,
         staleness_policy=staleness_policy, stale_buffer=stale_buffer,
         hedge_factor=hedge_factor,
+        workers=workers, host_mesh=host_mesh,
         n_shards=n_shards, partition=partition, tensor_sizes=tensor_sizes,
         **kw)
-
-
-def _deprecated(name: str) -> None:
-    warnings.warn(
-        f"{name} is deprecated; use repro.api.FederatedSession or "
-        f"repro.core.topology.run_round (the shared round driver) instead",
-        DeprecationWarning, stacklevel=3)
-
-
-def gradssharding_round(client_grads: Sequence[np.ndarray], *, rnd: int,
-                        plan: PartitionPlan, store: ObjectStore,
-                        runtime: LambdaRuntime,
-                        straggler_threshold_s: float | None = None,
-                        engine: Engine = None,
-                        schedule: str | None = None,
-                        upload: UploadModel | None = None,
-                        client_ready_s: Sequence[float] | None = None
-                        ) -> AggregationResult:
-    """Deprecated shim: GradsSharding (paper §III-A3) via the driver."""
-    _deprecated("gradssharding_round")
-    return run_round(
-        "gradssharding", client_grads, rnd=rnd, store=store, runtime=runtime,
-        engine=engine, schedule=schedule, upload=upload,
-        client_ready_s=client_ready_s,
-        straggler_threshold_s=straggler_threshold_s, plan=plan)
-
-
-def lambda_fl_round(client_grads: Sequence[np.ndarray], *, rnd: int,
-                    store: ObjectStore, runtime: LambdaRuntime,
-                    engine: Engine = None,
-                    schedule: str | None = None,
-                    upload: UploadModel | None = None,
-                    client_ready_s: Sequence[float] | None = None
-                    ) -> AggregationResult:
-    """Deprecated shim: λ-FL two-level tree (paper §III-A1)."""
-    _deprecated("lambda_fl_round")
-    return run_round(
-        "lambda_fl", client_grads, rnd=rnd, store=store, runtime=runtime,
-        engine=engine, schedule=schedule, upload=upload,
-        client_ready_s=client_ready_s)
-
-
-def lifl_round(client_grads: Sequence[np.ndarray], *, rnd: int,
-               store: ObjectStore, runtime: LambdaRuntime,
-               colocated: bool = False,
-               engine: Engine = None,
-               schedule: str | None = None,
-               upload: UploadModel | None = None,
-               client_ready_s: Sequence[float] | None = None
-               ) -> AggregationResult:
-    """Deprecated shim: LIFL three-level hierarchy (paper §III-A2);
-    ``colocated=True`` models the shared-memory fast path."""
-    _deprecated("lifl_round")
-    return run_round(
-        "lifl", client_grads, rnd=rnd, store=store, runtime=runtime,
-        engine=engine, schedule=schedule, upload=upload,
-        client_ready_s=client_ready_s, colocated=colocated)

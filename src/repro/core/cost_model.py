@@ -102,27 +102,36 @@ def _registered(topology: str):
     return get_topology(topology)
 
 
-def _codec_kwargs(hook, codec: WireCodec) -> dict:
-    """Back-compat for topology cost hooks written before the wire-codec
-    axis: pass ``codec=`` only to hooks that accept it. A legacy plugin
-    (pre-codec ``cost_phase_plan``/``cost_pipelined_plan`` signature)
-    keeps working under the identity codec — where the knob changes
-    nothing — and gets a clear error instead of silently-raw pricing when
-    a compressing codec is requested."""
-    import inspect
+def _call_cost_hook(topo, hook_name: str, *args, **kwargs):
+    """Invoke a topology cost hook under the v2 protocol.
+
+    v2 (``Topology.cost_api_version == 2``) hooks take everything after
+    ``limits`` keyword-only with a required ``codec=`` — the cost model
+    always passes it, so a compressing codec can never be silently priced
+    at raw wire bytes (the v1 signature-sniffing failure mode). A plugin
+    declaring an older version, or whose hook signature rejects the v2
+    keywords, gets a pointed migration error under *every* codec rather
+    than working by accident under ``identity``."""
+    version = getattr(topo, "cost_api_version", 1)
+    if version < 2:
+        raise TypeError(
+            f"topology {topo.name!r} declares cost_api_version={version}; "
+            f"the cost model speaks v2: {hook_name}(grad_bytes, n, m, "
+            f"limits, *, ..., codec) with keyword-only codec=. Update the "
+            f"plugin's cost hooks (see repro.core.topology.Topology)")
+    hook = getattr(topo, hook_name)
     try:
-        params = inspect.signature(hook).parameters
-        accepts = "codec" in params or any(
-            p.kind == p.VAR_KEYWORD for p in params.values())
-    except (TypeError, ValueError):          # builtins/C callables: assume new
-        accepts = True
-    if accepts:
-        return {"codec": codec}
-    if codec.wire_bytes(4) != 4:             # a size-changing codec
-        raise NotImplementedError(
-            f"{hook.__qualname__} predates the wire-codec axis and cannot "
-            f"price codec {codec.name!r}; add a codec= keyword to the hook")
-    return {}
+        return hook(*args, **kwargs)
+    except TypeError as exc:
+        msg = str(exc)
+        if "codec" in msg or "keyword" in msg or "argument" in msg:
+            raise TypeError(
+                f"{type(topo).__name__}.{hook_name} does not match the v2 "
+                f"cost-hook protocol ({hook_name}(grad_bytes, n, m, limits, "
+                f"*, ..., codec) — everything after limits keyword-only, "
+                f"codec= required); update the plugin signature. "
+                f"Original error: {msg}") from None
+        raise
 
 
 def s3_ops(topology: str, n: int, m: int = 1) -> S3Ops:
@@ -706,9 +715,10 @@ def _pipelined_fold_plan(topology: str, grad_bytes: int, n: int, m: int,
         # registry topologies: the topology declares its pipelined fold
         # DAG through the cost_pipelined_plan hook; run_fold owns launch
         # gating (read-ahead window), stalls, timing and billing
-        hook = _registered(topology).cost_pipelined_plan
-        hook(grad_bytes, n, m, limits, upload, starts, mults, run_fold,
-             shard_bytes=shard_bytes, **_codec_kwargs(hook, cdc))
+        _call_cost_hook(_registered(topology), "cost_pipelined_plan",
+                        grad_bytes, n, m, limits, upload=upload,
+                        starts=starts, mults=mults, run_fold=run_fold,
+                        shard_bytes=shard_bytes, codec=cdc)
 
 
 def pipelined_round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
@@ -1086,8 +1096,8 @@ def round_cost(topology: str, grad_bytes: int, n: int, m: int = 1,
     else:
         # registry topologies: sequential (timing, count) phase groups;
         # invocations within a phase run concurrently, phases add
-        hook = _registered(topology).cost_phase_plan
-        plan = hook(grad_bytes, n, m, limits, **_codec_kwargs(hook, cdc))
+        plan = _call_cost_hook(_registered(topology), "cost_phase_plan",
+                               grad_bytes, n, m, limits, codec=cdc)
         timings, wall, gb_s, n_inv = [], 0.0, 0.0, 0
         for t, count in plan:
             timings.extend([t] * count)

@@ -23,6 +23,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
@@ -116,6 +117,75 @@ def reduce_scatter_mean_flat(mesh: Mesh, flat: jax.Array) -> jax.Array:
         return out / m
 
     return agg(flat)
+
+
+# ---------------------------------------------------------------------------
+# Host CPU meshes (the host_mesh engine's substrate)
+# ---------------------------------------------------------------------------
+
+def host_cpu_devices() -> list:
+    """Every visible host CPU device — more than one when the process was
+    started with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    return [d for d in jax.devices() if d.platform == "cpu"]
+
+
+def make_fold_mesh(n_devices: int | None = None) -> Mesh:
+    """A 1-D ``fold``-axis mesh over host CPU devices.
+
+    ``n_devices=None`` takes every visible CPU device; an explicit count
+    larger than what XLA exposes is an error with the fix spelled out
+    (the device count is fixed at process start, before jax imports).
+    """
+    devices = host_cpu_devices()
+    if not devices:
+        raise RuntimeError(
+            "no host CPU devices visible — the host_mesh engine needs the "
+            "CPU platform")
+    if n_devices is not None:
+        if n_devices < 1:
+            raise ValueError(f"host_mesh must be >= 1, got {n_devices}")
+        if n_devices > len(devices):
+            raise ValueError(
+                f"host_mesh={n_devices} exceeds the {len(devices)} visible "
+                f"CPU device(s); start the process with XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={n_devices} "
+                f"(before jax is imported)")
+        devices = devices[:n_devices]
+    return Mesh(np.asarray(devices), ("fold",))
+
+
+def mesh_fold_sum(mesh: Mesh, stack) -> "jax.Array":
+    """Element-sharded sequential left-fold sum of ``stack`` (N, L) -> (L,).
+
+    Each mesh device owns a contiguous slice of the element axis and adds
+    the N rows of its slice **in row order** — the exact f32 add chain of
+    the streaming reference (and of ``agg_engine._node_chunk``), so the
+    returned sum is bit-identical to the single-threaded numpy fold; the
+    caller performs the final divide host-side to keep the one-divide op
+    sequence.  L is padded to a device multiple and trimmed after.
+    """
+    stack = np.ascontiguousarray(np.asarray(stack, np.float32))
+    n, l = stack.shape
+    m = mesh.devices.size
+    padded, _pad = pad_to_multiple_cols(stack, m)
+
+    @partial(shard_map, mesh=mesh, in_specs=P(None, "fold"),
+             out_specs=P("fold"), check_vma=False)
+    def fold(block):
+        out = block[0]
+        for i in range(1, n):
+            out = out + block[i]
+        return out
+
+    return np.asarray(jax.jit(fold)(padded))[:l]
+
+
+def pad_to_multiple_cols(arr, m: int):
+    """Pad the last axis of (N, L) to a multiple of ``m``."""
+    pad = (-arr.shape[-1]) % m
+    if pad:
+        arr = jnp.pad(arr, ((0, 0), (0, pad)))
+    return arr, pad
 
 
 def all_gather_shards(mesh: Mesh, shards: jax.Array) -> jax.Array:

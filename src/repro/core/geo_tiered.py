@@ -163,7 +163,7 @@ class GeoTieredTopology(Topology):
         # the compressed-wire memory bound budgets the f64 accumulator
         return True
 
-    def cost_phase_plan(self, grad_bytes, n, m, limits, codec=None):
+    def cost_phase_plan(self, grad_bytes, n, m, limits, *, codec):
         cdc = get_codec(codec)
         edge_groups, region_groups = self._tiers(n)
         lim_e, lim_r, lim_g = self._tier_limits(limits)
@@ -179,8 +179,9 @@ class GeoTieredTopology(Topology):
             (cm.aggregator_timing(grad_bytes, len(region_groups),
                                   grad_bytes, lim_g), 1)]
 
-    def cost_pipelined_plan(self, grad_bytes, n, m, limits, upload, starts,
-                            mults, run_fold, shard_bytes=None, codec=None):
+    def cost_pipelined_plan(self, grad_bytes, n, m, limits, *, upload,
+                            starts, mults, run_fold, shard_bytes=None,
+                            codec):
         """Pipelined entry mirroring :meth:`program`: whole-gradient
         client uploads feed the edge folds, edge finishes chain into the
         region folds, regions into the root — each fold priced at its

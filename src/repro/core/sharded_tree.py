@@ -118,7 +118,7 @@ class ShardedTreeTopology(Topology):
         # (leaf fan-in >= root fan-in == leaf count)
         return cm.lambda_fl_branching(n)
 
-    def cost_phase_plan(self, grad_bytes, n, m, limits, codec=None):
+    def cost_phase_plan(self, grad_bytes, n, m, limits, *, codec):
         cdc = get_codec(codec)
         shard_b = self.cost_input_bytes(grad_bytes, m)
         k = cm.lambda_fl_branching(n)
@@ -136,8 +136,9 @@ class ShardedTreeTopology(Topology):
         return cm.sharded_wire_upload_bytes(grad_bytes, m, codec,
                                             shard_bytes)
 
-    def cost_pipelined_plan(self, grad_bytes, n, m, limits, upload, starts,
-                            mults, run_fold, shard_bytes=None, codec=None):
+    def cost_pipelined_plan(self, grad_bytes, n, m, limits, *, upload,
+                            starts, mults, run_fold, shard_bytes=None,
+                            codec):
         """Pipelined entry, mirroring :meth:`program`: clients upload their
         M shards sequentially (availability = start + cumulative-PUT prefix
         time, over *wire* sizes), each shard's leaf folds launch/stream off

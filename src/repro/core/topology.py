@@ -45,12 +45,12 @@ round functions remain as thin delegating shims.
 from __future__ import annotations
 
 import math
-import os
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Mapping, Sequence
 
 import numpy as np
 
+from repro import knobs
 from repro.config import DEFAULT_LIMITS, LambdaLimits
 from repro.core import cost_model as cm
 from repro.core.agg_engine import ExecutionBackend, get_backend
@@ -90,7 +90,7 @@ def get_schedule(schedule: str | None = None) -> str:
     (fold order follows the seeded arrival times, not client index).
     """
     if schedule is None or schedule == "auto":
-        schedule = os.environ.get("REPRO_AGG_SCHEDULE", DEFAULT_SCHEDULE)
+        schedule = knobs.env_schedule(DEFAULT_SCHEDULE)
     if schedule not in SCHEDULES:
         raise ValueError(f"unknown aggregation schedule {schedule!r} "
                          f"(expected one of {SCHEDULES} or 'auto')")
@@ -105,8 +105,7 @@ def get_readahead(readahead_k: int | str | None = None) -> int:
     ``None``/"auto" (env ``REPRO_AGG_READAHEAD``, else 1 — the legacy
     strictly-in-index-order fetch schedule)."""
     if readahead_k is None or readahead_k == "auto":
-        readahead_k = os.environ.get("REPRO_AGG_READAHEAD",
-                                     DEFAULT_READAHEAD)
+        readahead_k = knobs.env_readahead(DEFAULT_READAHEAD)
     try:
         k = int(readahead_k)
         if k != float(readahead_k):      # reject silent 1.5 -> 1 truncation
@@ -462,6 +461,14 @@ class Topology:
     name = "?"
     #: topology-specific option names beyond :data:`COMMON_OPTIONS`
     options_used: frozenset = frozenset()
+    #: cost-hook protocol version. v2 (this base): ``cost_phase_plan`` /
+    #: ``cost_pipelined_plan`` take everything after ``limits`` as
+    #: keyword-only arguments with an explicit required ``codec=``. The
+    #: cost model refuses hooks that declare an older version (or whose
+    #: signature rejects the v2 keywords) with a pointed error instead of
+    #: sniffing signatures — silently pricing raw wire bytes under a
+    #: compressing codec was the failure mode v1 invited.
+    cost_api_version = 2
 
     # -- simulator side -------------------------------------------------------
     def program(self, client_grads: Sequence[np.ndarray], spec: RoundSpec,
@@ -493,13 +500,15 @@ class Topology:
         return grad_bytes
 
     def cost_phase_plan(self, grad_bytes: int, n: int, m: int,
-                        limits: LambdaLimits,
-                        codec: "cm.Codec" = None) -> list:
+                        limits: LambdaLimits, *,
+                        codec: "cm.Codec") -> list:
         """Sequential phases as (PhaseTiming, invocation_count) pairs —
         drives the generic :func:`repro.core.cost_model.round_cost`
-        fallback for registered topologies. ``codec`` is the resolved
-        wire codec; phases reading client contributions should price
-        wire-size GETs plus per-contribution decode."""
+        fallback for registered topologies. ``codec`` (keyword-only,
+        always passed by the cost model — v2 protocol, see
+        :attr:`cost_api_version`) is the resolved wire codec; phases
+        reading client contributions should price wire-size GETs plus
+        per-contribution decode."""
         raise NotImplementedError(
             f"topology {self.name!r} declares no round-cost model")
 
@@ -540,14 +549,16 @@ class Topology:
         return (buffers + 1) * self.cost_input_bytes(grad_bytes, m)
 
     def cost_pipelined_plan(self, grad_bytes: int, n: int, m: int,
-                            limits: LambdaLimits, upload, starts, mults,
+                            limits: LambdaLimits, *, upload, starts, mults,
                             run_fold, shard_bytes=None,
-                            codec: "cm.Codec" = None) -> None:
+                            codec: "cm.Codec") -> None:
         """Drive :func:`repro.core.cost_model.pipelined_round_cost` for a
         registered topology: compute per-input availability times from the
         jittered client plan (``starts``/``mults``) and call ``run_fold
         (avail_s, in_bytes, out_bytes)`` once per aggregator (its return
         value is the fold's finish time, so tree levels can chain).
+        Everything after ``limits`` is keyword-only (v2 protocol, see
+        :attr:`cost_api_version`) and ``codec`` is always passed.
         ``run_fold`` owns launch gating (read-ahead window), cold starts,
         stalls, transfer/compute time and billing accumulation; folds over
         encoded client contributions pass ``wire_b``/``decode_s`` so
@@ -771,6 +782,8 @@ def run_round(topology: str | Topology,
               staleness_policy: StalenessPolicy | None = None,
               stale_buffer: StaleBuffer | None = None,
               hedge_factor: float | None = None,
+              workers: int | str | None = None,
+              host_mesh: int | None = None,
               **options) -> AggregationResult:
     """Execute one aggregation round of any registered topology.
 
@@ -842,11 +855,17 @@ def run_round(topology: str | Topology,
     average divides by the number of *arrivals*, never the cohort size,
     and tree weights reflect the delivered group sizes. With all knobs
     off this path is bit-for-bit the legacy fault-free round.
+
+    ``workers`` (env ``REPRO_AGG_WORKERS``) sizes the host fold pool
+    behind the batched/host_mesh engines; ``host_mesh`` sizes the
+    ``host_mesh`` engine's CPU device mesh. Both move wall-clock only —
+    ``avg_flat``, op counts and billing are invariant at every worker
+    count (the fold pool's determinism contract).
     """
     topo = topology if isinstance(topology, Topology) \
         else get_topology(topology)
     topo.validate_options(options)
-    backend = get_backend(engine)
+    backend = get_backend(engine, workers=workers, host_mesh=host_mesh)
     sched = get_schedule(schedule)
     barrier = sched == "barrier"
     # validate unconditionally (a bad knob must not pass silently just

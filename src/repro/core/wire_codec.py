@@ -46,10 +46,10 @@ only the identity codec additionally guarantees bit-identity to the
 from __future__ import annotations
 
 import math
-import os
 
 import numpy as np
 
+from repro import knobs
 from repro.config import AGG_COMPUTE_BPS
 
 LANES = 128
@@ -173,9 +173,9 @@ def _use_kernels() -> bool:
     """Dispatch the Pallas kernels on TPU hosts (or when forced via
     ``REPRO_AGG_PALLAS``); the numpy mirrors replay the same f32 op
     sequence and are far faster than interpret mode on CPUs."""
-    env = os.environ.get("REPRO_AGG_PALLAS")
+    env = knobs.env_pallas()
     if env is not None:
-        return env not in ("", "0", "false", "False")
+        return env
     try:
         import jax
         return jax.default_backend() == "tpu"
@@ -259,7 +259,7 @@ def get_codec(codec: str | WireCodec | None = None) -> WireCodec:
     if isinstance(codec, WireCodec):
         return codec
     if codec is None or codec == "auto":
-        codec = os.environ.get("REPRO_AGG_CODEC", DEFAULT_CODEC)
+        codec = knobs.env_codec(DEFAULT_CODEC)
     try:
         return _REGISTRY[codec]
     except KeyError:

@@ -59,27 +59,8 @@ def fedavg_shards(client_shards: jax.Array,
     return _fedavg_flat(client_shards, weights, block_rows, interpret)
 
 
-def fedavg_multi(shard_stacks, weights: jax.Array | None = None,
-                 block_rows: int = 32,
-                 interpret: bool | None = None) -> list:
-    """Batched multi-shard entry point: average M shard stacks in ONE kernel
-    launch instead of M.
-
-    ``shard_stacks`` is a sequence of (N, L_j) arrays — all M shards of the
-    same round, every stack holding the same N clients in the same order.
-    The stacks are concatenated along L into a single (N, ΣL_j) launch (one
-    grid, one pad) and the averaged vector is split back per shard. Because
-    FedAvg is element-wise, each slice is exactly ``fedavg_shards`` of the
-    corresponding stack.
-
-    Returns a list of (L_j,) f32 means, one per input stack.
-    """
-    stacks = [jnp.asarray(s) for s in shard_stacks]
-    if not stacks:
-        return []
-    n = stacks[0].shape[0]
-    assert all(s.shape[0] == n for s in stacks), \
-        "all shard stacks must hold the same N clients"
+def _fedavg_fused(stacks, weights, block_rows, interpret) -> list:
+    """Fuse a bucket of (N, L_j) stacks into one launch; split back."""
     lengths = [int(s.shape[1]) for s in stacks]
     fused = stacks[0] if len(stacks) == 1 \
         else jnp.concatenate(stacks, axis=1)
@@ -90,6 +71,50 @@ def fedavg_multi(shard_stacks, weights: jax.Array | None = None,
         out.append(avg[off:off + l])
         off += l
     return out
+
+
+def fedavg_multi(shard_stacks, weights: jax.Array | None = None,
+                 block_rows: int = 32,
+                 interpret: bool | None = None,
+                 workers: int | str | None = None) -> list:
+    """Batched multi-shard entry point: average M shard stacks in ONE kernel
+    launch instead of M.
+
+    ``shard_stacks`` is a sequence of (N, L_j) arrays — all M shards of the
+    same round, every stack holding the same N clients in the same order.
+    The stacks are concatenated along L into a single (N, ΣL_j) launch (one
+    grid, one pad) and the averaged vector is split back per shard. Because
+    FedAvg is element-wise, each slice is exactly ``fedavg_shards`` of the
+    corresponding stack.
+
+    ``workers`` > 1 splits the stack list into that many contiguous buckets
+    and fuses each bucket as its own launch on the host fold pool —
+    interpret mode only, where launches are host-bound; averaging is
+    element-wise, so the per-shard results are bit-identical to the
+    single-launch path at any worker count. On TPU the single fused launch
+    is kept regardless.
+
+    Returns a list of (L_j,) f32 means, one per input stack.
+    """
+    if interpret is None:
+        interpret = _use_interpret()
+    stacks = [jnp.asarray(s) for s in shard_stacks]
+    if not stacks:
+        return []
+    n = stacks[0].shape[0]
+    assert all(s.shape[0] == n for s in stacks), \
+        "all shard stacks must hold the same N clients"
+    from repro.core.fold_pool import get_pool
+    pool = get_pool(workers)
+    if not interpret or pool.workers <= 1 or len(stacks) <= 1:
+        return _fedavg_fused(stacks, weights, block_rows, interpret)
+    nb = min(pool.workers, len(stacks))
+    per = -(-len(stacks) // nb)
+    buckets = [stacks[i:i + per] for i in range(0, len(stacks), per)]
+    parts = pool.map(
+        lambda b: _fedavg_fused(b, weights, block_rows, interpret),
+        [(b,) for b in buckets])
+    return [v for part in parts for v in part]
 
 
 @partial(jax.jit, static_argnames=("block_rows", "interpret"))

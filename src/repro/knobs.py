@@ -1,0 +1,79 @@
+"""The one home of every ``REPRO_AGG_*`` environment knob.
+
+Every runtime knob the aggregation stack accepts can be pinned by an
+explicit argument or deferred to the environment; this module owns the
+environment side so the precedence contract is stated (and tested) once:
+
+    explicit argument  >  ``REPRO_AGG_*`` env var  >  built-in default
+
+Resolvers (``repro.core.agg_engine.get_backend``, ``repro.core.topology
+.get_schedule``/``get_readahead``, ``repro.core.wire_codec.get_codec``,
+``repro.core.fold_pool.get_workers``) call the ``env_*`` functions below
+instead of reading ``os.environ`` ad hoc, and
+:meth:`repro.api.SessionConfig.from_env` snapshots all of them into one
+fully-pinned config.  The knobs:
+
+===================== ======================================= ============
+env var               values                                  default
+===================== ======================================= ============
+``REPRO_AGG_ENGINE``    streaming | batched | incremental |     batched
+                        host_mesh
+``REPRO_AGG_SCHEDULE``  barrier | pipelined | quorum            barrier
+``REPRO_AGG_READAHEAD`` int >= 1 (pipelined prefetch window)    1
+``REPRO_AGG_CODEC``     identity | fp16 | qsgd8 | topk          identity
+``REPRO_AGG_FAULTS``    off | on | rate in [0, 1]               off
+``REPRO_AGG_WORKERS``   int >= 1 (fold-pool threads) | auto     real cores
+``REPRO_AGG_PALLAS``    0 | 1 (force the Pallas fold path)      auto (TPU)
+===================== ======================================= ============
+
+Validation stays with each knob's resolver — this module only answers
+"what does the environment say"; a bad value raises at resolve time with
+the resolver's usual error message.
+"""
+from __future__ import annotations
+
+import os
+
+ENV_ENGINE = "REPRO_AGG_ENGINE"
+ENV_SCHEDULE = "REPRO_AGG_SCHEDULE"
+ENV_READAHEAD = "REPRO_AGG_READAHEAD"
+ENV_CODEC = "REPRO_AGG_CODEC"
+ENV_FAULTS = "REPRO_AGG_FAULTS"
+ENV_WORKERS = "REPRO_AGG_WORKERS"
+ENV_PALLAS = "REPRO_AGG_PALLAS"
+
+ALL_KNOBS = (ENV_ENGINE, ENV_SCHEDULE, ENV_READAHEAD, ENV_CODEC,
+             ENV_FAULTS, ENV_WORKERS, ENV_PALLAS)
+
+
+def env_engine(default: str) -> str:
+    return os.environ.get(ENV_ENGINE, default)
+
+
+def env_schedule(default: str) -> str:
+    return os.environ.get(ENV_SCHEDULE, default)
+
+
+def env_readahead(default: int):
+    return os.environ.get(ENV_READAHEAD, default)
+
+
+def env_codec(default: str) -> str:
+    return os.environ.get(ENV_CODEC, default)
+
+
+def env_faults(default: str = "") -> str:
+    return os.environ.get(ENV_FAULTS, default)
+
+
+def env_workers(default=None):
+    return os.environ.get(ENV_WORKERS, default)
+
+
+def env_pallas() -> bool | None:
+    """Tri-state: ``None`` (unset — let the backend auto-detect), else
+    the env's truthiness."""
+    raw = os.environ.get(ENV_PALLAS)
+    if raw is None:
+        return None
+    return raw not in ("", "0", "false", "False")

@@ -60,6 +60,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro import knobs
+
 # per-round substream ids (UploadModel owns [seed, rnd] and [seed, rnd, 1])
 _S_PARTICIPATION = 11
 _S_DROPOUT = 12
@@ -297,9 +299,12 @@ def fault_model_from_env(env: str = "REPRO_AGG_FAULTS",
     ``r`` -> dropout/stall/failure all at rate ``r``. Sessions never read
     this env themselves — injected faults change walls and billing, so
     fault injection is strictly explicit (``SessionConfig.faults``); this
-    helper just gives the opt-in callers one shared spelling.
+    helper just gives the opt-in callers one shared spelling (the
+    canonical knob read lives in :mod:`repro.knobs`; a non-default
+    ``env`` name reads that variable instead).
     """
-    raw = os.environ.get(env, "").strip().lower()
+    raw = (knobs.env_faults() if env == knobs.ENV_FAULTS
+           else os.environ.get(env, "")).strip().lower()
     if raw in ("", "off", "0", "0.0", "false", "none"):
         return None
     if raw in ("on", "true", "1"):

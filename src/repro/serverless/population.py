@@ -56,6 +56,7 @@ import numpy as np
 from repro.core import cost_model as cm
 from repro.core.agg_engine import ExecutionBackend, get_backend
 from repro.core.cost_model import UploadModel, tree_groups
+from repro.core.fold_pool import ParallelFoldPool, get_pool
 from repro.core.geo_tiered import k_edge_partial, k_region_partial
 from repro.core.sharding import make_plan, reconstruct
 from repro.core.topology import (AggregationResult, Topology, _alloc_mb,
@@ -145,21 +146,46 @@ class ClientPopulation:
 # Value plane: chunked replays of the streaming backend's arithmetic
 # ---------------------------------------------------------------------------
 
-def _fold_chunks(chunks, weighted: bool, count: int) -> np.ndarray:
+def _accumulate_rows(acc, rows: np.ndarray,
+                     pool: ParallelFoldPool | None) -> np.ndarray:
+    """One ``np.add.accumulate`` step of the chunked left fold, workers
+    splitting the element (column) axis. The accumulate runs down axis 0
+    independently per column, so a column-span split replays the exact
+    same per-element op sequence — bit-identical at any worker count."""
+    g = rows.shape[1]
+    spans = pool.spans(g) if pool is not None else [(0, g)]
+    if len(spans) <= 1:
+        if acc is None:
+            return np.add.accumulate(rows, axis=0)[-1]
+        return np.add.accumulate(
+            np.concatenate([acc[None, :], rows]), axis=0)[-1]
+    out = np.empty(g, rows.dtype)
+
+    def run(lo: int, hi: int) -> None:
+        if acc is None:
+            out[lo:hi] = np.add.accumulate(rows[:, lo:hi], axis=0)[-1]
+        else:
+            out[lo:hi] = np.add.accumulate(
+                np.concatenate([acc[None, lo:hi], rows[:, lo:hi]]),
+                axis=0)[-1]
+
+    pool.map(run, spans)
+    return out
+
+
+def _fold_chunks(chunks, weighted: bool, count: int,
+                 pool: ParallelFoldPool | None = None) -> np.ndarray:
     """Left-fold row chunks exactly like ``StreamingBackend``: f32
     sequential adds (unweighted) or f64 all-ones weighted adds, one
     divide by ``float(count)``, f32 cast. ``np.add.accumulate`` is a
     sequential (never pairwise) left fold, so bits match the scalar
-    client-by-client loop."""
+    client-by-client loop; the optional fold pool splits the element
+    axis only (see :func:`_accumulate_rows`)."""
     acc = None
     for rows in chunks:
         if weighted:
             rows = rows.astype(np.float64)   # *1.0 weight is the identity
-        if acc is None:
-            acc = np.add.accumulate(rows, axis=0)[-1]
-        else:
-            acc = np.add.accumulate(
-                np.concatenate([acc[None, :], rows]), axis=0)[-1]
+        acc = _accumulate_rows(acc, rows, pool)
     return (acc / float(count)).astype(np.float32)
 
 
@@ -185,12 +211,13 @@ def _decode_rows_sharded(rows, cdc, backend, plan) -> np.ndarray:
 
 
 def _client_fold(pop: ClientPopulation, rnd: int, member_ids, cdc, wire: bool,
-                 backend, weighted: bool) -> np.ndarray:
+                 backend, weighted: bool,
+                 pool: ParallelFoldPool | None = None) -> np.ndarray:
     """One aggregator's output over a contiguous member slice."""
     chunks = pop.iter_grads(rnd, member_ids)
     if wire:
         chunks = (_decode_rows(rows, cdc, backend) for rows in chunks)
-    return _fold_chunks(chunks, weighted, len(member_ids))
+    return _fold_chunks(chunks, weighted, len(member_ids), pool)
 
 
 def _key_fold(values: Sequence[np.ndarray], weights,
@@ -206,13 +233,14 @@ def _key_fold(values: Sequence[np.ndarray], weights,
 
 
 def _pop_codec_error(cdc: WireCodec, avg: np.ndarray, pop: ClientPopulation,
-                     rnd: int, members) -> float:
+                     rnd: int, members,
+                     pool: ParallelFoldPool | None = None) -> float:
     """Chunked twin of ``topology._codec_error`` (unweighted branch —
     the population engine folds no stale re-entries)."""
     if cdc.lossless or avg.size == 0:
         return 0.0
     ref = _fold_chunks(pop.iter_grads(rnd, members), weighted=False,
-                       count=len(members))
+                       count=len(members), pool=pool)
     return float(np.max(np.abs(avg - ref)))
 
 
@@ -278,9 +306,13 @@ _POP_PLANS: dict[str, Callable] = {}
 
 def register_population_plan(name: str, *, replace: bool = False):
     """Register a topology's population entry: a callable
-    ``fn(topo, pop, rnd, cdc, limits, options) -> PopPlan``. The name
-    must match the topology-registry name :func:`run_population_round`
-    dispatches on."""
+    ``fn(topo, pop, rnd, cdc, limits, options, pool=None) -> PopPlan``.
+    The name must match the topology-registry name
+    :func:`run_population_round` dispatches on; ``pool`` is the round's
+    :class:`~repro.core.fold_pool.ParallelFoldPool` (thread it into
+    ``_fold_chunks``/``_client_fold`` so the ``workers`` knob reaches the
+    value plane — splitting the element axis only keeps ``avg_flat``
+    bit-identical at any worker count)."""
 
     def deco(fn):
         if not replace and name in _POP_PLANS:
@@ -366,7 +398,8 @@ def _virtual_body(f: VirtualFold, store: ObjectStore, readahead_k: int,
 # ---------------------------------------------------------------------------
 
 @register_population_plan("gradssharding")
-def _plan_gradssharding(topo, pop, rnd, cdc, limits, options):
+def _plan_gradssharding(topo, pop, rnd, cdc, limits, options,
+                        pool=None):
     plan = options.get("plan") or make_plan(
         options.get("partition", "uniform"), pop.grad_elems,
         options.get("n_shards", 4), options.get("tensor_sizes"))
@@ -385,7 +418,8 @@ def _plan_gradssharding(topo, pop, rnd, cdc, limits, options):
                       for rows in chunks)
         # elementwise adds commute with the shard partition, so one full
         # accumulate pass yields every per-shard fold at once
-        avg_full = _fold_chunks(chunks, weighted=False, count=nm)
+        avg_full = _fold_chunks(chunks, weighted=False, count=nm,
+                                pool=pool)
         shard_avgs = backend.shard_values(avg_full, plan)
         folds = tuple(
             VirtualFold(
@@ -410,7 +444,7 @@ def _plan_gradssharding(topo, pop, rnd, cdc, limits, options):
 
 
 @register_population_plan("lambda_fl")
-def _plan_lambda_fl(topo, pop, rnd, cdc, limits, options):
+def _plan_lambda_fl(topo, pop, rnd, cdc, limits, options, pool=None):
     gb = pop.grad_bytes
     wire_g = cdc.wire_bytes(gb)
     wire, store_g = _wire_probe(cdc, pop.grad_elems)
@@ -424,7 +458,8 @@ def _plan_lambda_fl(topo, pop, rnd, cdc, limits, options):
         for leaf, g in enumerate(groups):
             g0, g1 = g[0], g[-1] + 1
             leaf_vals.append(_client_fold(pop, rnd, members[g0:g1], cdc,
-                                          wire, backend, weighted=False))
+                                          wire, backend, weighted=False,
+                                          pool=pool))
             leaves.append(VirtualFold(
                 fn_name=f"r{rnd}-leaf{leaf}", out_key=k_partial(rnd, 1, leaf),
                 n_in=len(g), in_nb=store_g, raw_nb=gb, wire=wire,
@@ -446,7 +481,7 @@ def _plan_lambda_fl(topo, pop, rnd, cdc, limits, options):
 
 
 @register_population_plan("lifl")
-def _plan_lifl(topo, pop, rnd, cdc, limits, options):
+def _plan_lifl(topo, pop, rnd, cdc, limits, options, pool=None):
     gb = pop.grad_bytes
     wire_g = cdc.wire_bytes(gb)
     wire, store_g = _wire_probe(cdc, pop.grad_elems)
@@ -473,7 +508,7 @@ def _plan_lifl(topo, pop, rnd, cdc, limits, options):
         for g in groups2:
             v1 = [_client_fold(
                 pop, rnd, members[groups1[i][0]:groups1[i][-1] + 1], cdc,
-                wire, backend, weighted=True) for i in g]
+                wire, backend, weighted=True, pool=pool) for i in g]
             vals2.append(_key_fold(v1, [w1[i] for i in g], backend))
             w2.append(float(sum(w1[i] for i in g)))
         level2 = tuple(
@@ -499,7 +534,7 @@ def _plan_lifl(topo, pop, rnd, cdc, limits, options):
 
 
 @register_population_plan("geo_tiered")
-def _plan_geo_tiered(topo, pop, rnd, cdc, limits, options):
+def _plan_geo_tiered(topo, pop, rnd, cdc, limits, options, pool=None):
     edge_fanin = int(options.get("edge_fanin", topo.edge_fanin))
     region_fanin = int(options.get("region_fanin", topo.region_fanin))
     edge_mbps = options.get("edge_mbps", topo.edge_mbps)
@@ -529,7 +564,7 @@ def _plan_geo_tiered(topo, pop, rnd, cdc, limits, options):
         for g in groups_r:
             ve = [_client_fold(
                 pop, rnd, members[groups_e[i][0]:groups_e[i][-1] + 1], cdc,
-                wire, backend, weighted=True) for i in g]
+                wire, backend, weighted=True, pool=pool) for i in g]
             vals_r.append(_key_fold(ve, [edge_w[i] for i in g], backend))
             region_w.append(float(sum(edge_w[i] for i in g)))
         regions = tuple(
@@ -588,6 +623,8 @@ def run_population_round(topology: str | Topology, pop: ClientPopulation, *,
                          quorum: int | None = None,
                          staleness_policy=None, stale_buffer=None,
                          hedge_factor: float | None = None,
+                         workers: int | str | None = None,
+                         host_mesh: int | None = None,
                          **options) -> AggregationResult:
     """One aggregation round over a lazy :class:`ClientPopulation`.
 
@@ -598,7 +635,10 @@ def run_population_round(topology: str | Topology, pop: ClientPopulation, *,
     ``engine`` is validated and ignored: invocation accounting is
     value-agnostic (identical across engines), and the value plane
     replays the streaming reference arithmetic every engine matches
-    bit-for-bit; results report ``engine="streaming"``.
+    bit-for-bit; results report ``engine="streaming"``. ``workers``
+    sizes the fold pool behind the chunked ``np.add.accumulate``
+    replays — the pool splits the element axis only, so ``avg_flat``
+    stays bit-identical at every worker count.
     """
     topo = topology if isinstance(topology, Topology) \
         else get_topology(topology)
@@ -620,7 +660,8 @@ def run_population_round(topology: str | Topology, pop: ClientPopulation, *,
         raise NotImplementedError(
             "the population engine does not support speculative hedging "
             "(hedge_factor)")
-    get_backend(engine)                       # fail fast on unknown names
+    get_backend(engine, host_mesh=host_mesh)  # fail fast on unknown names
+    pool = get_pool(workers)
     sched = get_schedule(schedule)
     barrier = sched == "barrier"
     readahead = get_readahead(readahead_k)
@@ -658,7 +699,8 @@ def run_population_round(topology: str | Topology, pop: ClientPopulation, *,
             f" (dropout_rate={faults.dropout_rate}, seed={faults.seed})")
         raise RuntimeError(f"round {rnd}: no active participants{detail}")
 
-    plan = _POP_PLANS[topo.name](topo, pop, rnd, cdc, limits, options)
+    plan = _POP_PLANS[topo.name](topo, pop, rnd, cdc, limits, options,
+                                 pool=pool)
     um = upload or UploadModel()
     ready_all = None if client_ready_s is None \
         else np.asarray(client_ready_s, np.float64)
@@ -799,7 +841,7 @@ def run_population_round(topology: str | Topology, pop: ClientPopulation, *,
         peak_memory_mb=max(r.peak_memory_mb for r in recs),
         engine="streaming", schedule=sched, readahead_k=readahead,
         codec=cdc.name,
-        codec_error=_pop_codec_error(cdc, avg, pop, rnd, order)
+        codec_error=_pop_codec_error(cdc, avg, pop, rnd, order, pool=pool)
         if track_codec_error else float("nan"),
         round_start_s=base, round_end_s=round_end,
         client_done_s=client_done,

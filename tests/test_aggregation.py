@@ -191,11 +191,11 @@ def test_straggler_speculative_duplicate():
 def test_lifl_colocated_fewer_s3_ops_and_faster():
     grads = _grads(20, 65_536)
     store1, rt1 = ObjectStore(), LambdaRuntime()
-    r_lambda = agg.lifl_round(grads, rnd=0, store=store1, runtime=rt1,
-                              colocated=False)
+    r_lambda = agg.aggregate_round("lifl", grads, rnd=0, store=store1,
+                                   runtime=rt1, colocated=False)
     store2, rt2 = ObjectStore(), LambdaRuntime()
-    r_coloc = agg.lifl_round(grads, rnd=0, store=store2, runtime=rt2,
-                             colocated=True)
+    r_coloc = agg.aggregate_round("lifl", grads, rnd=0, store=store2,
+                                  runtime=rt2, colocated=True)
     np.testing.assert_allclose(r_coloc.avg_flat, r_lambda.avg_flat,
                                rtol=1e-6)
     assert r_coloc.puts < r_lambda.puts

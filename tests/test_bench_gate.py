@@ -41,11 +41,14 @@ def test_compare_flags_every_drift_class():
 
 @pytest.mark.slow
 def test_committed_expectations_match_regenerated_invariants():
-    from benchmarks import smoke_invariants
+    # regenerate every invariant the CI smoke job records: the smoke grid
+    # plus the roofline host-fold determinism keys
+    from benchmarks import roofline, smoke_invariants
     saved = dict(common.INVARIANTS)
     common.INVARIANTS.clear()
     try:
         smoke_invariants.main()
+        roofline.host_fold_main(smoke=True)
         regenerated = dict(common.INVARIANTS)
     finally:
         common.INVARIANTS.clear()

@@ -266,3 +266,85 @@ def test_moe_local_dispatch_matches_global():
         assert np.isfinite(gn) and gn > 0
         print("MOE_LOCAL_OK")
     """)
+
+
+# ---------------------------------------------------------------------------
+# host_mesh engine: shard_map folds over fake CPU devices (PR 9)
+# ---------------------------------------------------------------------------
+
+def test_host_mesh_fold_sum_bit_identical_to_numpy_chain():
+    """The on-device sequential left-fold must replay the exact f32 add
+    chain of the streaming reference — bit-identical, not allclose —
+    on 8-, 4- and 2-device meshes (element sharding never reorders the
+    per-element op sequence)."""
+    run_subprocess("""
+        from repro.core import device_agg
+
+        rng = np.random.default_rng(2)
+        stack = rng.standard_normal((7, 5_003)).astype(np.float32)
+        ref = stack[0].copy()
+        for i in range(1, 7):
+            ref = ref + stack[i]
+        for nd in (8, 4, 2, None):
+            mesh = device_agg.make_fold_mesh(nd)
+            total = device_agg.mesh_fold_sum(mesh, stack)
+            assert np.array_equal(total, ref), nd
+        # host-side divide completes the engine's op sequence
+        avg = np.empty(5_003, np.float32)
+        np.divide(ref, np.float32(7.0), out=avg)
+        assert np.array_equal(avg, (ref / np.float32(7.0)))
+        print("MESH_FOLD_OK")
+    """)
+
+
+def test_host_mesh_engine_end_to_end_bit_identical():
+    """run_round(engine='host_mesh') == streaming, bit for bit, on both
+    an unweighted tree (lambda_fl) and the sharded topology; weighted
+    folds fall back to the numpy evaluator inside the same backend."""
+    run_subprocess("""
+        from repro.core.topology import run_round
+        from repro.serverless.runtime import LambdaRuntime
+        from repro.store import ObjectStore
+
+        rng = np.random.default_rng(3)
+        grads = [rng.standard_normal(4_099).astype(np.float32)
+                 for _ in range(9)]
+        for topology, opts in [("lambda_fl", {}),
+                               ("gradssharding", {"n_shards": 4})]:
+            ref = run_round(topology, grads, rnd=0, store=ObjectStore(),
+                            runtime=LambdaRuntime(), engine="streaming",
+                            **opts)
+            got = run_round(topology, grads, rnd=0, store=ObjectStore(),
+                            runtime=LambdaRuntime(), engine="host_mesh",
+                            host_mesh=4, **opts)
+            assert np.array_equal(got.avg_flat, ref.avg_flat), topology
+            assert (got.puts, got.gets) == (ref.puts, ref.gets)
+            assert got.wall_clock_s == ref.wall_clock_s
+        print("HOST_MESH_ROUND_OK")
+    """)
+
+
+def test_host_mesh_session_and_errors():
+    """SessionConfig(engine='host_mesh', host_mesh=N) drives the engine
+    through the facade; an oversized device request names the XLA_FLAGS
+    fix; the knob is rejected on other engines."""
+    run_subprocess("""
+        from repro.api import FederatedSession, SessionConfig
+
+        rng = np.random.default_rng(4)
+        grads = [rng.standard_normal(2_048).astype(np.float32)
+                 for _ in range(6)]
+        ref = FederatedSession(SessionConfig(
+            topology="lifl", engine="streaming")).round(grads)
+        got = FederatedSession(SessionConfig(
+            topology="lifl", engine="host_mesh", host_mesh=8)).round(grads)
+        assert np.array_equal(got.avg_flat, ref.avg_flat)
+
+        try:
+            FederatedSession(SessionConfig(
+                engine="host_mesh", host_mesh=64)).round(grads)
+            raise SystemExit("oversized mesh should have raised")
+        except ValueError as e:
+            assert "xla_force_host_platform_device_count" in str(e)
+        print("HOST_MESH_SESSION_OK")
+    """)

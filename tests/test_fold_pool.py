@@ -1,0 +1,297 @@
+"""Shard-parallel host execution: the worker-count invariance contract.
+
+The PR's load-bearing property: ``avg_flat`` (and every modeled counter —
+op counts, billed GB-s) is **bit-identical at every worker count**,
+because the fold pool splits the element axis only and each worker
+replays the exact sequential IEEE op order inside its span. Pinned here
+at three layers:
+
+  * unit — ``partition``/``spans``/``run_spans``/``map`` determinism;
+  * evaluator — the batched DAG pass and the population engine's chunked
+    ``np.add.accumulate`` replays, driven with small-chunk pools so real
+    multi-span splits happen on test-sized arrays;
+  * end-to-end — ``workers ∈ {1,2,4,8}`` × engine × topology × codec
+    through the public drivers (plus the population engine and a seeded
+    arrival-permutation property under the pipelined schedule).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                  # pragma: no cover
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
+
+from repro.api import FederatedSession, SessionConfig
+from repro.core import agg_engine, fold_pool
+from repro.core.agg_engine import BatchedBackend, LazyAverage
+from repro.core.cost_model import UploadModel
+from repro.core.fold_pool import (CHUNK_ELEMS, ParallelFoldPool, get_pool,
+                                  partition)
+from repro.serverless.population import ClientPopulation, _fold_chunks
+from repro.store import ObjectStore
+
+WORKER_GRID = (1, 2, 4, 8)
+
+
+def _grads(n=6, size=2_003, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal(size).astype(np.float32) for _ in range(n)]
+
+
+def _small_pool(workers, chunk=64):
+    return ParallelFoldPool(workers, chunk=chunk, min_parallel_elems=1)
+
+
+# ---------------------------------------------------------------------------
+# partition / spans: the deterministic split
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("size", [1, 63, 64, 65, 1_000, 4_096, 5_003])
+@pytest.mark.parametrize("workers", WORKER_GRID)
+def test_partition_covers_exactly_in_order(size, workers):
+    spans = partition(size, workers, chunk=64)
+    assert spans[0][0] == 0 and spans[-1][1] == size
+    for (lo, hi), (lo2, _hi2) in zip(spans, spans[1:]):
+        assert hi == lo2                     # contiguous, ascending
+    for lo, hi in spans:
+        assert lo < hi
+    assert len(spans) <= workers
+    # every interior boundary is chunk-aligned, so a worker's chunk walk
+    # lines up with the single-threaded evaluator's
+    for lo, _hi in spans[1:]:
+        assert lo % 64 == 0
+
+
+def test_partition_is_pure():
+    assert partition(100_000, 4) == partition(100_000, 4)
+    assert partition(0, 4) == []
+    assert partition(-3, 4) == []
+    assert partition(100, 1) == [(0, 100)]
+
+
+def test_spans_threshold_and_worker_gate():
+    pool = ParallelFoldPool(4, chunk=64, min_parallel_elems=1_000)
+    assert pool.spans(999) == [(0, 999)]     # below threshold: inline
+    assert len(pool.spans(1_000)) > 1        # at threshold: split
+    assert pool.spans(0) == []
+    assert ParallelFoldPool(1).spans(1 << 22) == [(0, 1 << 22)]
+
+
+def test_run_spans_executes_all_and_propagates_errors():
+    pool = _small_pool(4)
+    seen = {}
+
+    def fn(lo, hi):
+        seen[lo] = hi
+
+    pool.run_spans(fn, 1_000)
+    assert sorted((lo, hi) for lo, hi in seen.items()) == pool.spans(1_000)
+
+    def boom(lo, hi):
+        raise RuntimeError("span failed")
+
+    with pytest.raises(RuntimeError, match="span failed"):
+        pool.run_spans(boom, 1_000)
+    pool.close()
+
+
+def test_map_keeps_task_order():
+    pool = _small_pool(4)
+    out = pool.map(lambda a, b: a * b, [(i, 2) for i in range(37)])
+    assert out == [i * 2 for i in range(37)]
+    pool.close()
+
+
+def test_default_pool_threshold_keeps_small_folds_inline():
+    # test-sized folds never pay the thread hand-off on the shared pools
+    assert get_pool(8).spans(100_000) == [(0, 100_000)]
+
+
+# ---------------------------------------------------------------------------
+# batched DAG evaluator: real multi-span splits, bit-identical
+# ---------------------------------------------------------------------------
+
+def _dag_nodes(size=5_003, n=7, seed=1):
+    """An unweighted node, a weighted node, and a second-level node whose
+    inputs include the first (lazy-ancestor ordering under the pool)."""
+    rng = np.random.default_rng(seed)
+    ins = [rng.standard_normal(size).astype(np.float32) for _ in range(n)]
+    leaf = LazyAverage(ins[:4], None)
+    weighted = LazyAverage(ins[4:], [1.0, 0.5, 2.0])
+    root = LazyAverage([leaf, ins[1], ins[2]], None)
+    return [leaf, weighted, root]
+
+
+def test_evaluate_nodes_bit_identical_across_worker_counts():
+    ref = None
+    for workers in WORKER_GRID:
+        nodes = _dag_nodes()
+        agg_engine._evaluate_nodes(nodes, chunk=64,
+                                   pool=_small_pool(workers))
+        outs = [nd.out for nd in nodes]
+        assert all(len(partition(nd.size, workers, 64)) ==
+                   (min(workers, -(-nd.size // 64)) if workers > 1 else 1)
+                   for nd in nodes)
+        if ref is None:
+            ref = outs
+        else:
+            for a, b in zip(ref, outs):
+                np.testing.assert_array_equal(a, b)
+
+
+def test_evaluate_nodes_matches_streaming_reference():
+    nodes = _dag_nodes()
+    agg_engine._evaluate_nodes(nodes, chunk=64, pool=_small_pool(8))
+    leaf, weighted, _root = nodes
+    acc = leaf.inputs[0].astype(np.float32).copy()
+    for x in leaf.inputs[1:]:
+        acc += x
+    np.testing.assert_array_equal(leaf.out,
+                                  (acc / float(len(leaf.inputs)))
+                                  .astype(np.float32))
+    w = weighted.weights
+    wacc = weighted.inputs[0].astype(np.float64) * w[0]
+    for i in range(1, 3):
+        wacc += weighted.inputs[i].astype(np.float64) * w[i]
+    np.testing.assert_array_equal(
+        weighted.out, (wacc / float(sum(w))).astype(np.float32))
+
+
+def test_chunk_size_never_changes_bits():
+    base = None
+    for chunk in (32, 64, 1_000, CHUNK_ELEMS):
+        nodes = _dag_nodes()
+        agg_engine._evaluate_nodes(nodes, chunk=chunk, pool=_small_pool(4))
+        if base is None:
+            base = [nd.out for nd in nodes]
+        else:
+            for a, nd in zip(base, nodes):
+                np.testing.assert_array_equal(a, nd.out)
+
+
+# ---------------------------------------------------------------------------
+# population value plane: column-axis splits, bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("weighted", [False, True])
+def test_fold_chunks_bit_identical_across_worker_counts(weighted):
+    rng = np.random.default_rng(5)
+    chunks = [rng.standard_normal((4, 1_003)).astype(np.float32)
+              for _ in range(3)]
+    ref = _fold_chunks(iter([c.copy() for c in chunks]), weighted, 12,
+                       pool=None)
+    for workers in WORKER_GRID:
+        got = _fold_chunks(iter([c.copy() for c in chunks]), weighted, 12,
+                           pool=_small_pool(workers, chunk=128))
+        np.testing.assert_array_equal(ref, got)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: workers grid x engine x topology x codec
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec", ["identity", "qsgd8"])
+@pytest.mark.parametrize("topology", ["gradssharding", "lambda_fl", "lifl"])
+def test_worker_grid_invariance(topology, codec):
+    grads = _grads()
+    ref = {}
+    for engine in ("streaming", "batched", "incremental"):
+        for workers in WORKER_GRID:
+            session = FederatedSession(SessionConfig(
+                topology=topology, n_shards=4, engine=engine, codec=codec,
+                workers=workers))
+            r = session.round(grads)
+            sig = (r.puts, r.gets, r.wall_clock_s,
+                   sum(rec.billed_gb_s for rec in r.records))
+            if not ref:
+                ref = {"avg": r.avg_flat, "sig": sig}
+            # bit-identity AND accounting invariance across the whole
+            # workers x engine plane (per topology x codec)
+            assert np.array_equal(r.avg_flat, ref["avg"]), \
+                (engine, workers)
+            assert sig == ref["sig"], (engine, workers)
+
+
+def test_worker_grid_population_engine():
+    pop = ClientPopulation(n_clients=96, grad_elems=1_024, seed=7)
+    ref = None
+    for workers in WORKER_GRID:
+        session = FederatedSession(SessionConfig(
+            topology="gradssharding", n_shards=4, population=pop,
+            workers=workers, log_ops=False))
+        r = session.round()
+        if ref is None:
+            ref = r
+        else:
+            assert np.array_equal(r.avg_flat, ref.avg_flat), workers
+            assert (r.puts, r.gets) == (ref.puts, ref.gets)
+            assert r.wall_clock_s == ref.wall_clock_s
+
+
+def test_worker_grid_real_splits_through_run_round():
+    """Force actual multi-span parallel evaluation through the public
+    driver: inject small-threshold pools into the process cache so the
+    default CHUNK_ELEMS alignment still yields several spans."""
+    size = 3 * CHUNK_ELEMS + 17
+    grads = _grads(n=4, size=size, seed=9)
+    saved = dict(fold_pool._POOLS)
+    try:
+        ref = None
+        for workers in (1, 2, 4):
+            fold_pool._POOLS.clear()
+            fold_pool._POOLS[workers] = ParallelFoldPool(
+                workers, min_parallel_elems=1)
+            assert len(fold_pool._POOLS[workers].spans(size)) == \
+                min(workers, 4)
+            session = FederatedSession(SessionConfig(
+                topology="lambda_fl", engine="batched", workers=workers))
+            r = session.round(grads)
+            if ref is None:
+                ref = r.avg_flat
+            else:
+                assert np.array_equal(r.avg_flat, ref), workers
+    finally:
+        fold_pool._POOLS.clear()
+        fold_pool._POOLS.update(saved)
+
+
+# ---------------------------------------------------------------------------
+# arrival permutations x workers: the pipelined fold order is by client
+# index, so jittered upload arrival order never changes bits either
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       workers=st.sampled_from(WORKER_GRID))
+def test_arrival_permutation_property(seed, workers):
+    grads = _grads(n=8, size=769, seed=3)
+    barrier = FederatedSession(SessionConfig(
+        topology="gradssharding", n_shards=2, engine="streaming",
+        workers=1)).round(grads)
+    jitter = UploadModel(mbps=16.0, jitter_s=5.0, rate_jitter=0.5,
+                         seed=seed)
+    piped = FederatedSession(SessionConfig(
+        topology="gradssharding", n_shards=2, engine="batched",
+        schedule="pipelined", readahead_k=4, upload=jitter,
+        workers=workers)).round(grads)
+    assert np.array_equal(piped.avg_flat, barrier.avg_flat)
+    assert (piped.puts, piped.gets) == (barrier.puts, barrier.gets)
+
+
+# ---------------------------------------------------------------------------
+# kernels: bucketed interpret-mode dispatch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_fedavg_multi_worker_buckets_bit_identical():
+    from repro.kernels import ops
+    rng = np.random.default_rng(13)
+    stacks = [rng.standard_normal((5, l)).astype(np.float32)
+              for l in (300, 640, 7, 1_024)]
+    ref = [np.asarray(v) for v in ops.fedavg_multi(stacks, workers=1)]
+    for workers in (2, 4, 8):
+        got = ops.fedavg_multi(stacks, workers=workers)
+        for a, b in zip(ref, got):
+            np.testing.assert_array_equal(a, np.asarray(b))

@@ -1,0 +1,207 @@
+"""The REPRO_AGG_* knob surface: one env home (`repro.knobs`), one
+snapshot entry point (`SessionConfig.from_env`), one precedence contract.
+
+    explicit argument  >  REPRO_AGG_* env var  >  built-in default
+
+Every resolver is probed through its public entry; `from_env` is checked
+to snapshot eagerly (parse + validate at call time, immune to later env
+changes) and to leave unset knobs at their `None` defaults.
+"""
+import numpy as np
+import pytest
+
+from repro import knobs
+from repro.api import FederatedSession, SessionConfig
+from repro.core import fold_pool
+from repro.core.agg_engine import get_backend
+from repro.core.fold_pool import get_workers, host_cores
+from repro.core.topology import get_readahead, get_schedule
+from repro.core.wire_codec import get_codec
+from repro.serverless.faults import FaultModel
+
+
+# ---------------------------------------------------------------------------
+# knobs module: the env table
+# ---------------------------------------------------------------------------
+
+def test_all_knobs_enumerated():
+    assert set(knobs.ALL_KNOBS) == {
+        "REPRO_AGG_ENGINE", "REPRO_AGG_SCHEDULE", "REPRO_AGG_READAHEAD",
+        "REPRO_AGG_CODEC", "REPRO_AGG_FAULTS", "REPRO_AGG_WORKERS",
+        "REPRO_AGG_PALLAS"}
+
+
+def test_env_pallas_tristate(monkeypatch):
+    monkeypatch.delenv(knobs.ENV_PALLAS, raising=False)
+    assert knobs.env_pallas() is None
+    for raw, want in [("1", True), ("yes", True), ("0", False),
+                      ("", False), ("false", False), ("False", False)]:
+        monkeypatch.setenv(knobs.ENV_PALLAS, raw)
+        assert knobs.env_pallas() is want
+
+
+# ---------------------------------------------------------------------------
+# get_workers: explicit > env > host cores
+# ---------------------------------------------------------------------------
+
+def test_workers_default_is_host_cores(monkeypatch):
+    monkeypatch.delenv(knobs.ENV_WORKERS, raising=False)
+    assert get_workers() == host_cores()
+    assert get_workers("auto") == host_cores()
+
+
+def test_workers_env_beats_default(monkeypatch):
+    monkeypatch.setenv(knobs.ENV_WORKERS, "3")
+    assert get_workers() == 3
+    assert get_workers("auto") == 3
+    monkeypatch.setenv(knobs.ENV_WORKERS, "auto")
+    assert get_workers() == host_cores()
+
+
+def test_workers_explicit_beats_env(monkeypatch):
+    monkeypatch.setenv(knobs.ENV_WORKERS, "3")
+    assert get_workers(7) == 7
+    assert get_workers("2") == 2
+
+
+@pytest.mark.parametrize("bad", [0, -1, 1.5, "1.5", "zero", ""])
+def test_workers_rejects_bad_values(bad):
+    with pytest.raises(ValueError, match="workers"):
+        get_workers(bad)
+
+
+def test_workers_env_bad_value_raises_at_resolve(monkeypatch):
+    monkeypatch.setenv(knobs.ENV_WORKERS, "many")
+    with pytest.raises(ValueError, match="workers"):
+        get_workers()
+
+
+def test_backend_pool_width_follows_env(monkeypatch):
+    monkeypatch.setenv(knobs.ENV_WORKERS, "2")
+    assert get_backend("batched")._pool.workers == 2
+    assert get_backend("batched", workers=5)._pool.workers == 5
+
+
+# ---------------------------------------------------------------------------
+# the other resolvers still read their envs through knobs
+# ---------------------------------------------------------------------------
+
+def test_resolver_env_precedence(monkeypatch):
+    monkeypatch.setenv(knobs.ENV_SCHEDULE, "pipelined")
+    monkeypatch.setenv(knobs.ENV_READAHEAD, "4")
+    monkeypatch.setenv(knobs.ENV_CODEC, "fp16")
+    monkeypatch.setenv(knobs.ENV_ENGINE, "incremental")
+    assert get_schedule() == "pipelined"
+    assert get_schedule("barrier") == "barrier"      # explicit beats env
+    assert get_readahead() == 4
+    assert get_readahead(2) == 2
+    assert get_codec().name == "fp16"
+    assert get_codec("identity").name == "identity"
+    assert get_backend().name == "incremental"
+    assert get_backend("streaming").name == "streaming"
+
+
+# ---------------------------------------------------------------------------
+# SessionConfig.from_env: the one snapshot entry point
+# ---------------------------------------------------------------------------
+
+def _clear_env(monkeypatch):
+    for var in knobs.ALL_KNOBS:
+        monkeypatch.delenv(var, raising=False)
+
+
+def test_from_env_unset_equals_defaults(monkeypatch):
+    _clear_env(monkeypatch)
+    assert SessionConfig.from_env() == SessionConfig()
+
+
+def test_from_env_snapshots_every_knob(monkeypatch):
+    _clear_env(monkeypatch)
+    monkeypatch.setenv(knobs.ENV_ENGINE, "incremental")
+    monkeypatch.setenv(knobs.ENV_SCHEDULE, "pipelined")
+    monkeypatch.setenv(knobs.ENV_READAHEAD, "4")
+    monkeypatch.setenv(knobs.ENV_CODEC, "fp16")
+    monkeypatch.setenv(knobs.ENV_FAULTS, "on")
+    monkeypatch.setenv(knobs.ENV_WORKERS, "3")
+    cfg = SessionConfig.from_env()
+    assert cfg.engine == "incremental"
+    assert cfg.schedule == "pipelined"
+    assert cfg.readahead_k == 4
+    assert cfg.codec == "fp16"
+    assert isinstance(cfg.faults, FaultModel)
+    assert cfg.workers == 3
+    # a snapshot: later env changes don't touch the pinned config
+    _clear_env(monkeypatch)
+    assert cfg.workers == 3 and cfg.codec == "fp16"
+
+
+def test_from_env_kwargs_beat_env(monkeypatch):
+    _clear_env(monkeypatch)
+    monkeypatch.setenv(knobs.ENV_WORKERS, "3")
+    monkeypatch.setenv(knobs.ENV_CODEC, "fp16")
+    cfg = SessionConfig.from_env(workers=5, codec="identity",
+                                 topology="lifl")
+    assert cfg.workers == 5
+    assert cfg.codec == "identity"
+    assert cfg.topology == "lifl"
+
+
+def test_from_env_resolves_auto_workers_now(monkeypatch):
+    _clear_env(monkeypatch)
+    monkeypatch.setenv(knobs.ENV_WORKERS, "auto")
+    assert SessionConfig.from_env().workers == host_cores()
+
+
+def test_from_env_validates_eagerly(monkeypatch):
+    _clear_env(monkeypatch)
+    monkeypatch.setenv(knobs.ENV_READAHEAD, "0")
+    with pytest.raises(ValueError, match="readahead"):
+        SessionConfig.from_env()
+    _clear_env(monkeypatch)
+    monkeypatch.setenv(knobs.ENV_ENGINE, "bogus")
+    with pytest.raises(ValueError, match="bogus"):
+        SessionConfig.from_env()
+    _clear_env(monkeypatch)
+    monkeypatch.setenv(knobs.ENV_WORKERS, "-2")
+    with pytest.raises(ValueError, match="workers"):
+        SessionConfig.from_env()
+
+
+def test_from_env_config_runs_a_round(monkeypatch):
+    _clear_env(monkeypatch)
+    monkeypatch.setenv(knobs.ENV_WORKERS, "2")
+    monkeypatch.setenv(knobs.ENV_ENGINE, "batched")
+    session = FederatedSession(SessionConfig.from_env(n_shards=2))
+    grads = [np.full(512, float(i + 1), np.float32) for i in range(4)]
+    result = session.round(grads)
+    np.testing.assert_array_equal(result.avg_flat,
+                                  np.full(512, 2.5, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# session knob validation
+# ---------------------------------------------------------------------------
+
+def test_session_rejects_bad_workers_eagerly():
+    with pytest.raises(ValueError, match="workers"):
+        FederatedSession(SessionConfig(workers=0))
+
+
+def test_session_rejects_host_mesh_without_engine():
+    with pytest.raises(ValueError, match="host_mesh"):
+        FederatedSession(SessionConfig(engine="batched", host_mesh=2))
+    with pytest.raises(ValueError, match="host_mesh"):
+        FederatedSession(SessionConfig(host_mesh=2))   # default engine
+
+
+def test_get_backend_rejects_host_mesh_mismatch():
+    with pytest.raises(ValueError, match="host_mesh"):
+        get_backend("streaming", host_mesh=4)
+
+
+def test_pool_cache_is_per_worker_count():
+    a = fold_pool.get_pool(2)
+    b = fold_pool.get_pool(2)
+    c = fold_pool.get_pool(3)
+    assert a is b and a is not c
+    assert a.workers == 2 and c.workers == 3

@@ -1,12 +1,13 @@
-"""Topology strategy registry + shared round driver + back-compat shims.
+"""Topology strategy registry + shared round driver + functional alias.
 
-The tentpole invariants: (1) the legacy monolithic round functions are now
-thin shims over the shared driver and stay bit-identical (values *and*
-modeled accounting) to the new entry points across the full topology ×
-engine × schedule grid; (2) a topology registered purely through the
-public ``@register_topology`` API — the ``sharded_tree`` hybrid — runs
-through the same driver, inherits every engine/schedule, and carries its
-own analytical cost entries.
+The tentpole invariants: (1) the functional ``aggregate_round`` alias
+stays bit-identical (values *and* modeled accounting) to
+``FederatedSession.round`` across the full topology × engine × schedule
+grid, and the PR-3 deprecated per-topology shims are verifiably gone;
+(2) a topology registered purely through the public
+``@register_topology`` API — the ``sharded_tree`` hybrid — runs through
+the same driver, inherits every engine/schedule, and carries its own
+analytical cost entries.
 """
 import warnings
 
@@ -71,19 +72,28 @@ def test_grid_old_vs_new_bit_identical(topology, engine, schedule,
         sum(r.billed_gb_s for r in new.records)
 
 
-def test_deprecated_shims_delegate_and_warn():
+def test_deprecated_shims_removed():
+    # the PR-3 shims are gone — run_round/aggregate_round are the only
+    # functional entry points; old imports must fail loudly, not drift
+    for name in ("gradssharding_round", "lambda_fl_round", "lifl_round"):
+        assert not hasattr(agg, name)
+
+
+def test_functional_alias_matches_session_per_topology():
+    # the shims' delegation guarantee, restated against the supported
+    # surface: aggregate_round == FederatedSession.round on every builtin
     grads = _grads(n=8, size=1_024)
     plan = make_plan("uniform", 1_024, 4, None)
-    for fn, kw in [
-        (agg.gradssharding_round, {"plan": plan}),
-        (agg.lambda_fl_round, {}),
-        (agg.lifl_round, {}),
-        (agg.lifl_round, {"colocated": True}),
+    for topology, kw in [
+        ("gradssharding", {"plan": plan}),
+        ("lambda_fl", {}),
+        ("lifl", {}),
+        ("lifl", {"colocated": True}),
     ]:
         store, rt = ObjectStore(), LambdaRuntime()
-        with pytest.warns(DeprecationWarning, match="FederatedSession"):
-            old = fn(grads, rnd=0, store=store, runtime=rt, **kw)
-        new = _new(old.topology, grads, n_shards=4,
+        old = agg.aggregate_round(topology, grads, rnd=0, store=store,
+                                  runtime=rt, n_shards=4, **kw)
+        new = _new(topology, grads, n_shards=4,
                    colocated=bool(kw.get("colocated")))
         assert np.array_equal(old.avg_flat, new.avg_flat)
         assert (old.puts, old.gets) == (new.puts, new.gets)

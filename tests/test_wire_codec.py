@@ -473,11 +473,11 @@ def test_lifl_weighted_feasibility_matches_sim_oom():
         cm.lambda_memory_mb("lifl", grad_b, codec="qsgd8")
 
 
-def test_legacy_plugin_cost_hooks_still_work_under_identity():
-    """A topology plugin written before the codec axis (no ``codec=`` on
-    its cost hooks) keeps pricing rounds under the identity codec, and
-    gets a clear error — not silently raw-wire numbers — when a
-    compressing codec is requested."""
+def test_legacy_plugin_cost_hooks_rejected_with_migration_error():
+    """The v1 signature-sniffing back-compat is gone: a plugin whose cost
+    hooks predate the v2 keyword-only protocol (no ``codec=``) gets a
+    pointed migration error under *every* codec — identity included —
+    instead of working by accident until someone flips the codec knob."""
     from repro.core import topology as topo
 
     @topo.register_topology("_legacy_hooks")
@@ -493,12 +493,38 @@ def test_legacy_plugin_cost_hooks_still_work_under_identity():
                                           limits), 1)]
 
     try:
-        rc = cm.round_cost("_legacy_hooks", MB, 8, codec="identity")
-        assert rc.wall_clock_s > 0
-        with pytest.raises(NotImplementedError, match="wire-codec"):
-            cm.round_cost("_legacy_hooks", MB, 8, codec="qsgd8")
+        for codec in ("identity", "qsgd8"):
+            with pytest.raises(TypeError, match="v2 cost-hook protocol"):
+                cm.round_cost("_legacy_hooks", MB, 8, codec=codec)
     finally:
         del topo._REGISTRY["_legacy_hooks"]
+
+
+def test_declared_v1_plugin_rejected_even_with_codec_kwarg():
+    """Declaring ``cost_api_version = 1`` opts a plugin out of the v2
+    contract explicitly — the cost model refuses it up front, before
+    calling any hook."""
+    from repro.core import topology as topo
+
+    @topo.register_topology("_v1_hooks")
+    class V1(topo.Topology):
+        cost_api_version = 1
+
+        def cost_s3_ops(self, n, m=1):
+            return cm.S3Ops(n, n, n)
+
+        def cost_collect_fanin(self, n, m=1):
+            return n
+
+        def cost_phase_plan(self, grad_bytes, n, m, limits, *, codec):
+            return [(cm.aggregator_timing(grad_bytes, n, grad_bytes,
+                                          limits), 1)]
+
+    try:
+        with pytest.raises(TypeError, match="cost_api_version=1"):
+            cm.round_cost("_v1_hooks", MB, 8, codec="identity")
+    finally:
+        del topo._REGISTRY["_v1_hooks"]
 
 
 def test_track_codec_error_opt_out():
