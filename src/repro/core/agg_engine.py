@@ -276,6 +276,8 @@ def _evaluate_nodes(nodes: Sequence[LazyAverage],
         nd.out = np.empty(nd.size, np.float32)
         groups.setdefault(nd.size, []).append(nd)
 
+    # detlint: allow[ORD001] groups is insertion-ordered by node creation
+    # (= phase/topological) order — that IS the canonical fold order
     for size, group in groups.items():
         if size == 0:
             continue
@@ -630,6 +632,8 @@ class BatchedBackend(ExecutionBackend):
         by_n: dict[int, list[LazyAverage]] = {}
         for nd in ready:
             by_n.setdefault(len(nd.inputs), []).append(nd)
+        # detlint: allow[ORD001] by_n is insertion-ordered by ready-node
+        # creation order; each bucket evaluates independently
         for nds in by_n.values():
             stacks = [np.stack([np.asarray(_materialize(x), np.float32)
                                 for x in nd.inputs]) for nd in nds]

@@ -90,6 +90,8 @@ class PartitionPlan:
         return len(self.segments)
 
     def shard_sizes(self) -> list[int]:
+        # detlint: allow[ORD001] integer span lengths over the ordered
+        # segment tuple — no float accumulation involved
         return [sum(b - a for a, b in segs) for segs in self.segments]
 
     def max_shard(self) -> int:

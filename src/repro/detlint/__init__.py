@@ -1,0 +1,28 @@
+"""detlint: static enforcement of the repo's determinism contracts.
+
+The dynamic suite proves the invariants hold on the paths it runs;
+detlint proves the *bug classes* stay out of every file — unseeded RNG
+(DET001), wall-clock reads in the event-time planes (DET002), env access
+outside ``repro.knobs`` (ENV001), order-sensitive accumulation in the
+value-plane modules (ORD001), shared-state mutation in fold-pool
+callables (THR001) — plus a registry conformance audit (REG001-REG004)
+that machine-checks the ``@register_topology``/``@register_codec`` plugin
+contracts and the smoke-gate schema.
+
+See ``DETERMINISM.md`` at the repo root for the contracts each rule
+enforces, and :mod:`repro.detlint.engine` for pragma syntax and the
+``@register_rule`` extension point.
+"""
+
+from repro.detlint.engine import (  # noqa: F401
+    PARSE_CODE,
+    PRAGMA_CODE,
+    Rule,
+    Violation,
+    available_rules,
+    get_rules,
+    lint_file,
+    lint_paths,
+    lint_source,
+    register_rule,
+)

@@ -1,0 +1,128 @@
+"""ORD001 — accumulation-order hazards in the value-plane modules.
+
+Contract: ``avg_flat`` is bit-identical across topology x engine x
+schedule x codec x workers because every fold replays one canonical
+IEEE op order. Float addition does not commute, so in the modules that
+own fold arithmetic or feed its accounting, iteration order must be
+provably deterministic:
+
+* iterating a ``set``/``frozenset`` hands the fold hash order
+  (PYTHONHASHSEED-dependent for strings) — always flagged;
+* iterating a dict view (``.keys()/.values()/.items()``) without
+  ``sorted()`` ties the fold to insertion order — flagged so each site
+  either sorts or documents (pragma) why insertion order is the
+  canonical order;
+* a bare ``sum()`` over a generator buries a float accumulation order in
+  a one-liner — flagged (integer-literal counting like ``sum(1 for ..)``
+  is exempt) so each site documents the ordered iterable it walks.
+
+The rule is scoped to :data:`VALUE_PLANE` — the fold/accounting modules —
+rather than the whole tree; elsewhere these constructs are ordinary
+Python.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.detlint.engine import Rule, register_rule
+
+#: repro-relative paths of the modules that own fold arithmetic or the
+#: accounting the fold's results bill against
+VALUE_PLANE = frozenset({
+    "core/agg_engine.py",
+    "core/device_agg.py",
+    "core/fedavg.py",
+    "core/fold_pool.py",
+    "core/sharding.py",
+    "kernels/ops.py",
+    "serverless/population.py",
+})
+
+_DICT_VIEWS = frozenset({"keys", "values", "items"})
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    return (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id in ("set", "frozenset"))
+
+
+def _is_dict_view(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in _DICT_VIEWS
+            and not node.args and not node.keywords)
+
+
+def _set_named(tree: ast.AST) -> frozenset[str]:
+    """Names whose *every* binding in the file is a set expression —
+    conservative: one non-set rebinding anywhere clears the name."""
+    is_set: dict[str, bool] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            pairs = [(t, node.value) for t in node.targets]
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            pairs = [(node.target, node.value)]
+        else:
+            continue
+        for target, value in pairs:
+            if isinstance(target, ast.Name):
+                is_set[target.id] = (_is_set_expr(value)
+                                     and is_set.get(target.id, True))
+    return frozenset(n for n, ok in is_set.items() if ok)
+
+
+def _iterables(node: ast.AST):
+    """(lineno-bearing node, iterable expr) pairs for loops/comprehensions."""
+    if isinstance(node, (ast.For, ast.AsyncFor)):
+        yield node, node.iter
+    elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                           ast.GeneratorExp)):
+        for gen in node.generators:
+            yield node, gen.iter
+
+
+@register_rule
+class AccumulationOrderRule(Rule):
+    code = "ORD001"
+    title = "order-sensitive accumulation in a value-plane module"
+
+    def check(self, ctx):
+        if ctx.repro_rel not in VALUE_PLANE:
+            return
+        set_names = _set_named(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            for holder, it in _iterables(node):
+                if _is_set_expr(it) or (isinstance(it, ast.Name)
+                                        and it.id in set_names):
+                    yield (holder, 0,
+                           "iterating a set in a value-plane module — "
+                           "set order is hash order; iterate a sorted() "
+                           "or index-ordered sequence instead")
+                elif _is_dict_view(it):
+                    yield (holder, 0,
+                           f"iterating {ast.unparse(it)} without sorted() "
+                           f"in a value-plane module ties the fold to "
+                           f"insertion order — sort, or pragma why "
+                           f"insertion order is canonical")
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "sum" and node.args):
+                arg = node.args[0]
+                if _is_set_expr(arg) or _is_dict_view(arg):
+                    yield (node, 0,
+                           "sum() over an unordered collection in a "
+                           "value-plane module — accumulation order is "
+                           "undefined; sort first")
+                elif isinstance(arg, ast.GeneratorExp):
+                    elt = arg.elt
+                    if isinstance(elt, ast.Constant) \
+                            and isinstance(elt.value, int):
+                        continue        # sum(1 for ...): pure counting
+                    yield (node, 0,
+                           "bare sum() over a generator in a value-plane "
+                           "module hides a float accumulation order — "
+                           "fold explicitly, or pragma the ordered "
+                           "iterable it walks")

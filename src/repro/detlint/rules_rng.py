@@ -1,0 +1,66 @@
+"""DET001 — unseeded randomness inside the repro package.
+
+Contract: every random draw in the aggregation stack flows from an
+explicit ``(seed, round, stream)`` key (``serverless.streams``,
+``np.random.default_rng(seed)``). Module-level RNG state — the
+``np.random.*`` convenience functions, the stdlib ``random`` module, an
+argless ``default_rng()`` — draws from process-global or OS entropy and
+silently breaks the replay guarantees every schedule/fault/population
+stream depends on.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.detlint.engine import Rule, register_rule
+
+#: numpy.random attributes that *construct seeded streams* — fine to call
+#: (argless default_rng is handled separately)
+_SEEDED_CTORS = frozenset({
+    "default_rng", "Generator", "SeedSequence", "BitGenerator",
+    "PCG64", "PCG64DXSM", "Philox", "MT19937", "SFC64",
+})
+
+#: stdlib ``random`` attributes that are fine to call with a seed argument
+_STDLIB_SEEDED_CTORS = frozenset({"Random"})
+
+
+@register_rule
+class UnseededRngRule(Rule):
+    code = "DET001"
+    title = "unseeded RNG (module-level np.random / stdlib random)"
+
+    def check(self, ctx):
+        if not ctx.in_repro():
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            canon = ctx.imports.resolve(node.func)
+            if canon is None:
+                continue
+            if canon.startswith("numpy.random."):
+                attr = canon.split(".", 2)[2]
+                if attr == "default_rng":
+                    if not node.args and not node.keywords:
+                        yield (node, 0,
+                               "argless default_rng() seeds from OS "
+                               "entropy — pass an explicit seed")
+                elif attr not in _SEEDED_CTORS:
+                    yield (node, 0,
+                           f"module-level numpy.random.{attr}() draws "
+                           f"from global RNG state — use a seeded "
+                           f"default_rng(seed) / streams key instead")
+            elif canon.startswith("random.") and canon.count(".") == 1:
+                attr = canon.split(".", 1)[1]
+                if attr in _STDLIB_SEEDED_CTORS:
+                    if not node.args and not node.keywords:
+                        yield (node, 0,
+                               "argless random.Random() seeds from OS "
+                               "entropy — pass an explicit seed")
+                else:
+                    yield (node, 0,
+                           f"stdlib random.{attr}() uses process-global "
+                           f"RNG state — use a seeded "
+                           f"np.random.default_rng(seed) instead")

@@ -42,8 +42,23 @@ ENV_FAULTS = "REPRO_AGG_FAULTS"
 ENV_WORKERS = "REPRO_AGG_WORKERS"
 ENV_PALLAS = "REPRO_AGG_PALLAS"
 
+#: launcher-side: opt out of the tcmalloc LD_PRELOAD re-exec
+#: (``repro.launch.hostenv.maybe_preload_tcmalloc``) with ``off``/``0``
+ENV_TCMALLOC = "REPRO_TCMALLOC"
+
 ALL_KNOBS = (ENV_ENGINE, ENV_SCHEDULE, ENV_READAHEAD, ENV_CODEC,
              ENV_FAULTS, ENV_WORKERS, ENV_PALLAS)
+
+
+def env_raw(name: str, default: str = "") -> str:
+    """Read an arbitrary env var through the single env home.
+
+    For callers whose variable *name* is itself a parameter (e.g.
+    ``fault_model_from_env(env=...)``) — everything with a fixed name
+    should use its dedicated ``env_*`` reader so the knob table above
+    stays the complete inventory.
+    """
+    return os.environ.get(name, default)
 
 
 def env_engine(default: str) -> str:
@@ -68,6 +83,10 @@ def env_faults(default: str = "") -> str:
 
 def env_workers(default=None):
     return os.environ.get(ENV_WORKERS, default)
+
+
+def env_tcmalloc() -> str:
+    return os.environ.get(ENV_TCMALLOC, "")
 
 
 def env_pallas() -> bool | None:

@@ -1,4 +1,6 @@
 import os
+# detlint: allow[ENV001] launcher-side bootstrap: XLA_FLAGS must be in
+# the environment before any jax import locks the device count
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # ^ MUST precede every other import (jax locks device count on first init).
 
@@ -25,7 +27,6 @@ import argparse
 import dataclasses
 import json
 import re
-import time
 import traceback
 
 import numpy as np
@@ -40,6 +41,7 @@ from repro.config import (
 )
 from repro.configs import ASSIGNED, get_arch
 from repro.launch import partitioning as parts
+from repro.launch.hostenv import host_timer, maybe_preload_tcmalloc
 from repro.launch.mesh import make_mesh, make_production_mesh
 from repro.launch.serve import make_serve_step
 from repro.launch.train import jit_train_step
@@ -211,7 +213,7 @@ def analyze_cell(arch_id: str, shape: ShapeConfig, mesh, mesh_name: str,
     cfg = spec.model
     if cfg_overrides:
         cfg = dataclasses.replace(cfg, **cfg_overrides)
-    t0 = time.time()
+    t0 = host_timer()
 
     # --- 1. full-depth scan compile: memory analysis + proof it compiles ---
     cfg_scan = dataclasses.replace(cfg, scan_layers=True)
@@ -291,7 +293,7 @@ def analyze_cell(arch_id: str, shape: ShapeConfig, mesh, mesh_name: str,
         "mesh_shape": list(mesh.devices.shape), "n_chips": n_chips,
         "plan": dataclasses.asdict(plan), "mode": mode,
         "kind": shape.kind,
-        "compile_s": round(time.time() - t0, 1),
+        "compile_s": round(host_timer() - t0, 1),
         "memory": mem,
         "hbm_per_device_gb": round((mem["argument_size_in_bytes"]
                                     + mem["temp_size_in_bytes"]) / 2**30, 3),
@@ -408,4 +410,5 @@ def main(argv=None):
 
 
 if __name__ == "__main__":
+    maybe_preload_tcmalloc()
     raise SystemExit(main())

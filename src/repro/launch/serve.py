@@ -9,7 +9,6 @@ of requests on the host's devices.
 from __future__ import annotations
 
 import argparse
-import time
 from typing import Any
 
 import numpy as np
@@ -20,6 +19,7 @@ from jax.sharding import Mesh
 
 from repro.config import ModelConfig, ShapeConfig
 from repro.launch import partitioning as parts
+from repro.launch.hostenv import host_timer, maybe_preload_tcmalloc
 from repro.models import registry as models
 
 Pytree = Any
@@ -71,7 +71,7 @@ def serve_loop(cfg: ModelConfig, *, batch: int = 4, prompt_len: int = 8,
     prompt = rng.integers(0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
     generated = []
     tok = jnp.asarray(prompt[:, :1])
-    t0 = time.time()
+    t0 = host_timer()
     logits = None
     for t in range(prompt_len + max_new_tokens - 1):
         logits, cache = step_fn(params, tok, cache)
@@ -82,7 +82,7 @@ def serve_loop(cfg: ModelConfig, *, batch: int = 4, prompt_len: int = 8,
                 jax.random.categorical(jax.random.PRNGKey(t), logits[:, -1])
             tok = nxt[:, None].astype(jnp.int32)
             generated.append(np.asarray(tok))
-    dt = time.time() - t0
+    dt = host_timer() - t0
     gen = np.concatenate(generated, axis=1) if generated else np.zeros((batch, 0))
     total_tokens = batch * (prompt_len + max_new_tokens - 1)
     return {"generated": gen, "tokens_per_s": total_tokens / dt,
@@ -106,4 +106,5 @@ def main(argv=None):
 
 
 if __name__ == "__main__":
+    maybe_preload_tcmalloc()
     main()

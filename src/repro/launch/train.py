@@ -28,7 +28,6 @@ barrier schedule.
 from __future__ import annotations
 
 import argparse
-import time
 from typing import Any
 
 import numpy as np
@@ -41,6 +40,7 @@ from repro.config import ModelConfig, ShapeConfig, ShardingPlan
 from repro.core import device_agg
 from repro.core.sharding import flatten, unflatten
 from repro.launch import partitioning as parts
+from repro.launch.hostenv import host_timer, maybe_preload_tcmalloc
 from repro.models import registry as models
 from repro.optim import Optimizer, adamw, apply_updates
 
@@ -302,7 +302,7 @@ def train_loop(cfg: ModelConfig, *, steps: int, batch_size: int, seq_len: int,
     b_shardings = parts.to_named(
         mesh, parts.batch_pspecs(cfg, shape, mesh))
     losses = []
-    t0 = time.time()
+    t0 = host_timer()
     for step in range(start_step, steps):
         batch = data.batch(client=0, step=step, batch_size=batch_size)
         batch = jax.tree.map(
@@ -312,7 +312,7 @@ def train_loop(cfg: ModelConfig, *, steps: int, batch_size: int, seq_len: int,
         losses.append(float(metrics["loss"]))
         if log_every and step % log_every == 0:
             print(f"[train] step {step:5d} loss {losses[-1]:.4f} "
-                  f"({time.time() - t0:.1f}s)")
+                  f"({host_timer() - t0:.1f}s)")
         if manager is not None and (step + 1) % ckpt_every == 0:
             manager.save(step + 1, (params, opt_state))
     if manager is not None:
@@ -350,4 +350,5 @@ def main(argv=None):
 
 
 if __name__ == "__main__":
+    maybe_preload_tcmalloc()
     main()

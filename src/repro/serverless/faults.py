@@ -54,7 +54,6 @@ when handed one (see ``run_round(faults=...)``).
 """
 from __future__ import annotations
 
-import os
 import zlib
 from dataclasses import dataclass
 
@@ -304,7 +303,7 @@ def fault_model_from_env(env: str = "REPRO_AGG_FAULTS",
     ``env`` name reads that variable instead).
     """
     raw = (knobs.env_faults() if env == knobs.ENV_FAULTS
-           else os.environ.get(env, "")).strip().lower()
+           else knobs.env_raw(env)).strip().lower()
     if raw in ("", "off", "0", "0.0", "false", "none"):
         return None
     if raw in ("on", "true", "1"):

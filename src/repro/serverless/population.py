@@ -407,6 +407,8 @@ def _plan_gradssharding(topo, pop, rnd, cdc, limits, options,
     shard_elems = plan.shard_sizes()
     shard_bytes = [s * 4 for s in shard_elems]
     wire_nb = [cdc.wire_bytes(b) for b in shard_bytes]
+    # detlint: allow[ORD001] size-keyed probe cache; iteration only
+    # builds a lookup dict, no value folds through it
     probes = {e: _wire_probe(cdc, e) for e in set(shard_elems)}
     backend = get_backend("streaming")
 
@@ -510,6 +512,8 @@ def _plan_lifl(topo, pop, rnd, cdc, limits, options, pool=None):
                 pop, rnd, members[groups1[i][0]:groups1[i][-1] + 1], cdc,
                 wire, backend, weighted=True, pool=pool) for i in g]
             vals2.append(_key_fold(v1, [w1[i] for i in g], backend))
+            # detlint: allow[ORD001] g is a contiguous ascending index
+            # run — replays the eager driver's exact summation order
             w2.append(float(sum(w1[i] for i in g)))
         level2 = tuple(
             VirtualFold(
@@ -566,6 +570,8 @@ def _plan_geo_tiered(topo, pop, rnd, cdc, limits, options, pool=None):
                 pop, rnd, members[groups_e[i][0]:groups_e[i][-1] + 1], cdc,
                 wire, backend, weighted=True, pool=pool) for i in g]
             vals_r.append(_key_fold(ve, [edge_w[i] for i in g], backend))
+            # detlint: allow[ORD001] g is a contiguous ascending index
+            # run — replays the eager driver's exact summation order
             region_w.append(float(sum(edge_w[i] for i in g)))
         regions = tuple(
             VirtualFold(
@@ -767,6 +773,8 @@ def run_population_round(topology: str | Topology, pop: ClientPopulation, *,
     # -- client uploads: aggregate accounting, no store keys -----------------
     store.account_io(
         puts=len(order) * len(plan.upload_key_bytes),
+        # detlint: allow[ORD001] integer wire-byte counts over the
+        # plan's ordered upload-key tuple
         bytes_written=len(order) * sum(snb for _w, snb
                                        in plan.upload_key_bytes))
 
@@ -809,6 +817,8 @@ def run_population_round(topology: str | Topology, pop: ClientPopulation, *,
         agg_end = max(agg_end, deadline_abs)
         runtime.advance_to(agg_end)
     if barrier:
+        # detlint: allow[ORD001] handles is the phase list in plan order
+        # — the same order the eager driver sums barrier walls in
         wall = (first_start - base) + sum(ph.wall_s for ph in handles)
         phases = tuple(ph.wall_s for ph in handles)
     else:

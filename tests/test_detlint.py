@@ -1,0 +1,581 @@
+"""detlint: the determinism-contract linter and registry audit.
+
+Three layers under test:
+
+* the AST rules (DET001/DET002/ENV001/ORD001/THR001) — each gets a
+  positive fixture (fires), a negative fixture (stays quiet), and a
+  pragma-suppressed fixture, linted through `lint_source` with a
+  repro-relative path so the contract scoping engages;
+* the pragma/CLI machinery — reasons are mandatory, unknown codes are
+  rejected, `--json` emits the documented shape, exit codes are 0/1/2;
+* the registry audit — REG001..REG004 fire on seeded bad registrations
+  via the injectable-registry parameters, and the *live* registries are
+  conformant.
+
+The suite also pins the two violations this PR fixed (the faults.py
+os.getenv read and the launch/ wall-clock reads) as fixtures, and ends
+with the self-clean gate: the real tree lints clean.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.detlint import (
+    PARSE_CODE,
+    PRAGMA_CODE,
+    available_rules,
+    get_rules,
+    lint_paths,
+    lint_source,
+)
+from repro.detlint.audit import (
+    audit_codecs,
+    audit_smoke_schema,
+    audit_topologies,
+    run_audit,
+)
+from repro.detlint.cli import main as cli_main
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def lint(source: str, rel: str = "core/mod.py", select=None):
+    """Lint dedented source as if it lived at src/repro/<rel>."""
+    rules = get_rules(select) if select else None
+    return lint_source(textwrap.dedent(source), f"src/repro/{rel}",
+                       rules, repro_rel=rel)
+
+
+def codes(violations):
+    return [v.code for v in violations]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_builtin_rules_registered():
+    assert set(available_rules()) >= {
+        "DET001", "DET002", "ENV001", "ORD001", "THR001"}
+
+
+def test_get_rules_select_and_unknown():
+    only = get_rules(["DET001"])
+    assert [r.code for r in only] == ["DET001"]
+    with pytest.raises(ValueError, match="NOPE999"):
+        get_rules(["NOPE999"])
+
+
+# ---------------------------------------------------------------------------
+# DET001 — unseeded RNG
+# ---------------------------------------------------------------------------
+
+def test_det001_fires_on_unseeded_rng():
+    vs = lint("""
+        import random
+        import numpy as np
+        from numpy.random import default_rng
+
+        x = np.random.rand(3)
+        y = random.random()
+        g = default_rng()
+    """)
+    assert codes(vs) == ["DET001"] * 3
+
+
+def test_det001_quiet_on_seeded_streams():
+    vs = lint("""
+        import random
+        from numpy.random import default_rng
+
+        g = default_rng(1234)
+        r = random.Random(7)
+        v = g.normal(size=3)
+    """)
+    assert vs == []
+
+
+def test_det001_pragma_suppresses_with_reason():
+    vs = lint("""
+        import numpy as np
+
+        # detlint: allow[DET001] demo fixture, stream never folded
+        x = np.random.rand(3)
+    """)
+    assert vs == []
+
+
+def test_det001_scoped_to_repro_tree():
+    src = "import numpy as np\nx = np.random.rand(3)\n"
+    assert lint_source(src, "scripts/foreign.py", repro_rel=None) == []
+
+
+def test_det001_resolves_import_aliases():
+    vs = lint("""
+        from numpy import random as rng
+
+        x = rng.rand(3)
+    """)
+    assert codes(vs) == ["DET001"]
+
+
+# ---------------------------------------------------------------------------
+# DET002 — wall-clock reads (reproduces the pre-fix launch/ hits)
+# ---------------------------------------------------------------------------
+
+def test_det002_fires_in_event_planes():
+    for rel in ("core/agg.py", "serverless/runtime.py"):
+        vs = lint("""
+            import time
+
+            t0 = time.time()
+            t1 = time.perf_counter()
+        """, rel=rel)
+        assert codes(vs) == ["DET002"] * 2
+        assert "event heap" in vs[0].message
+
+
+def test_det002_fires_on_launch_wall_clock():
+    # the exact pattern launch/dryrun.py|serve.py|train.py had pre-fix
+    vs = lint("""
+        import time
+
+        t0 = time.time()
+        run()
+        dt = time.time() - t0
+    """, rel="launch/dryrun.py")
+    assert codes(vs) == ["DET002"] * 2
+    assert "host_timer" in vs[0].message
+
+
+def test_det002_datetime_and_aliases():
+    vs = lint("""
+        import datetime
+        from time import perf_counter as clock
+
+        now = datetime.datetime.now()
+        t = clock()
+    """)
+    assert codes(vs) == ["DET002"] * 2
+
+
+def test_det002_quiet_on_host_timer_route():
+    vs = lint("""
+        from repro.launch.hostenv import host_timer
+
+        t0 = host_timer()
+    """, rel="launch/dryrun.py")
+    assert vs == []
+
+
+# ---------------------------------------------------------------------------
+# ENV001 — env reads outside knobs.py (reproduces the pre-fix faults.py hit)
+# ---------------------------------------------------------------------------
+
+def test_env001_fires_on_getenv_and_environ():
+    # the os.getenv read fault_model_from_env had before routing through
+    # knobs.env_raw
+    vs = lint("""
+        import os
+
+        raw = (os.getenv("REPRO_AGG_FAULTS") or "").strip().lower()
+        flag = os.environ["REPRO_AGG_ENGINE"]
+    """, rel="serverless/faults.py")
+    assert codes(vs) == ["ENV001"] * 2
+
+
+def test_env001_exempts_knobs_module():
+    vs = lint("""
+        import os
+
+        def env_engine(default):
+            return os.environ.get("REPRO_AGG_ENGINE", default)
+    """, rel="knobs.py")
+    assert vs == []
+
+
+def test_env001_quiet_on_knobs_reader():
+    vs = lint("""
+        from repro import knobs
+
+        raw = knobs.env_raw("REPRO_AGG_FAULTS")
+    """, rel="serverless/faults.py")
+    assert vs == []
+
+
+def test_env001_pragma_suppresses():
+    vs = lint("""
+        import os
+
+        # detlint: allow[ENV001] bootstrap: LD_PRELOAD staged before exec
+        env = dict(os.environ)
+    """, rel="launch/hostenv.py")
+    assert vs == []
+
+
+# ---------------------------------------------------------------------------
+# ORD001 — unordered iteration in value-plane modules
+# ---------------------------------------------------------------------------
+
+def test_ord001_fires_on_set_iteration_in_value_plane():
+    vs = lint("""
+        def fold(shards):
+            seen = {s.nid for s in shards}
+            for nid in seen:
+                touch(nid)
+    """, rel="core/fedavg.py")
+    assert codes(vs) == ["ORD001"]
+
+
+def test_ord001_fires_on_unsorted_dict_views_and_float_sum():
+    vs = lint("""
+        def fold(groups, parts):
+            for k in groups.keys():
+                touch(k)
+            total = sum(p.w for p in parts)
+    """, rel="core/agg_engine.py")
+    assert codes(vs) == ["ORD001"] * 2
+
+
+def test_ord001_quiet_on_sorted_views_and_counting_sum():
+    vs = lint("""
+        def fold(groups, parts):
+            for k in sorted(groups.keys()):
+                touch(k)
+            n = sum(1 for p in parts if p.ok)
+    """, rel="core/agg_engine.py")
+    assert vs == []
+
+
+def test_ord001_scoped_to_value_plane_modules():
+    src = """
+        def fold(shards):
+            seen = {s.nid for s in shards}
+            for nid in seen:
+                touch(nid)
+    """
+    assert lint(src, rel="launch/dryrun.py") == []
+
+
+def test_ord001_pragma_suppresses():
+    vs = lint("""
+        def fold(groups):
+            # detlint: allow[ORD001] insertion order IS the fold order
+            for size, group in groups.items():
+                touch(size, group)
+    """, rel="core/agg_engine.py")
+    assert vs == []
+
+
+# ---------------------------------------------------------------------------
+# THR001 — fold-pool callables mutating shared state
+# ---------------------------------------------------------------------------
+
+def test_thr001_fires_on_nonlocal_and_append():
+    vs = lint("""
+        def run(pool, spans):
+            total = 0.0
+            hits = []
+
+            def fn(lo, hi):
+                nonlocal total
+                total += work(lo, hi)
+                hits.append(lo)
+
+            pool.run_spans(fn, spans)
+    """, rel="core/device_agg.py")
+    assert codes(vs) == ["THR001"] * 2
+    assert "nonlocal 'total'" in vs[0].message
+    assert "hits.append()" in vs[1].message
+
+
+def test_thr001_quiet_on_span_indexed_writes():
+    vs = lint("""
+        def run(pool, spans, out):
+            def fn(lo, hi):
+                acc = work(lo, hi)
+                out[lo:hi] = acc
+
+            pool.run_spans(fn, spans)
+    """, rel="core/device_agg.py")
+    assert vs == []
+
+
+def test_thr001_fires_on_non_span_shared_write():
+    vs = lint("""
+        def run(pool, spans, out):
+            def fn(lo, hi):
+                out[0] = work(lo, hi)
+
+            pool.map(fn, spans)
+    """, rel="core/device_agg.py")
+    assert codes(vs) == ["THR001"]
+
+
+def test_thr001_resolves_callable_in_enclosing_scope():
+    # two workers both named fn in different functions must each resolve
+    # to their own definition, not collide file-wide
+    vs = lint("""
+        def racy(pool, spans):
+            total = 0.0
+
+            def fn(lo, hi):
+                nonlocal total
+                total += work(lo, hi)
+
+            pool.run_spans(fn, spans)
+
+        def clean(pool, spans, out):
+            def fn(lo, hi):
+                out[lo:hi] = work(lo, hi)
+
+            pool.run_spans(fn, spans)
+    """, rel="core/device_agg.py")
+    assert codes(vs) == ["THR001"]
+    assert "nonlocal 'total'" in vs[0].message
+
+
+def test_thr001_applies_outside_repro_tree():
+    src = textwrap.dedent("""
+        def run(pool, spans):
+            acc = []
+
+            def fn(lo, hi):
+                acc.append(lo)
+
+            pool.map(fn, spans)
+    """)
+    vs = lint_source(src, "examples/demo.py", repro_rel=None)
+    assert codes(vs) == ["THR001"]
+
+
+def test_thr001_ignores_non_pool_receivers():
+    vs = lint("""
+        def run(executor, spans):
+            acc = []
+
+            def fn(lo, hi):
+                acc.append(lo)
+
+            executor.map(fn, spans)
+    """, rel="core/device_agg.py")
+    assert vs == []
+
+
+# ---------------------------------------------------------------------------
+# pragmas
+# ---------------------------------------------------------------------------
+
+def test_pragma_without_reason_rejected_and_violation_kept():
+    vs = lint("""
+        import numpy as np
+
+        x = np.random.rand(3)  # detlint: allow[DET001]
+    """)
+    assert codes(vs) == ["DET001", PRAGMA_CODE]
+    assert "no reason" in vs[1].message
+
+
+def test_pragma_unknown_rule_rejected():
+    vs = lint("""
+        x = 1  # detlint: allow[ZZZ999] because reasons
+    """)
+    assert codes(vs) == [PRAGMA_CODE]
+    assert "unknown rule" in vs[0].message
+
+
+def test_pragma_malformed_rejected():
+    vs = lint("""
+        x = 1  # detlint:allow DET001 missing brackets
+    """)
+    assert codes(vs) == [PRAGMA_CODE]
+
+
+def test_pragma_comment_line_covers_next_statement():
+    vs = lint("""
+        import numpy as np
+
+        # detlint: allow[DET001] fixture stream, wrapped over two
+        # comment lines before the statement it covers
+        x = np.random.rand(3)
+    """)
+    assert vs == []
+
+
+def test_pragma_in_string_literal_is_not_a_pragma():
+    vs = lint("""
+        msg = "write # detlint: allow[DET001] to suppress"
+    """)
+    assert vs == []
+
+
+def test_syntax_error_is_a_violation():
+    vs = lint("def broken(:\n")
+    assert codes(vs) == [PARSE_CODE]
+
+
+# ---------------------------------------------------------------------------
+# CLI contract
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def bad_tree(tmp_path):
+    """A tmp src/repro mirror holding one DET001 violation."""
+    mod = tmp_path / "src" / "repro" / "core"
+    mod.mkdir(parents=True)
+    (mod / "bad.py").write_text(
+        "import numpy as np\nx = np.random.rand(3)\n")
+    return tmp_path / "src"
+
+
+def test_cli_exit_codes(bad_tree, tmp_path, capsys):
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    assert cli_main([str(clean)]) == 0
+    assert "detlint: clean" in capsys.readouterr().out
+    assert cli_main([str(bad_tree)]) == 1
+    assert "DET001" in capsys.readouterr().out
+
+
+def test_cli_json_output(bad_tree, capsys):
+    assert cli_main(["--json", str(bad_tree)]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["count"] == 1
+    (v,) = payload["violations"]
+    assert v["code"] == "DET001"
+    assert v["path"].endswith("src/repro/core/bad.py")
+    assert set(v) == {"path", "line", "col", "code", "message"}
+
+
+def test_cli_select_filters_rules(bad_tree, capsys):
+    assert cli_main(["--select", "DET002", str(bad_tree)]) == 0
+    capsys.readouterr()
+
+
+def test_cli_usage_errors_exit_2(bad_tree, capsys):
+    with pytest.raises(SystemExit) as e:
+        cli_main(["--select", "NOPE999", str(bad_tree)])
+    assert e.value.code == 2
+    with pytest.raises(SystemExit) as e:
+        cli_main(["/no/such/path.py"])
+    assert e.value.code == 2
+    capsys.readouterr()
+
+
+def test_cli_module_entrypoint_subprocess(bad_tree):
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.detlint", "--json", str(bad_tree)],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 1
+    assert json.loads(proc.stdout)["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# registry audit
+# ---------------------------------------------------------------------------
+
+class _V1Topology:
+    """A topology frozen at the PR 3 cost API."""
+    name = "legacy"
+    cost_api_version = 1
+
+    def cost_phase_plan(self, plan, link, codec):  # positional codec: v1
+        return 0.0
+
+    def cost_pipelined_plan(self, plan, link, *, codec=None):
+        return 0.0
+
+
+class _ConformantTopology:
+    name = "ok"
+    cost_api_version = 2
+
+    def cost_phase_plan(self, plan, link, *, codec=None):
+        return 0.0
+
+    def cost_pipelined_plan(self, plan, link, *, codec=None):
+        return 0.0
+
+
+def test_audit_topologies_flags_v1_hooks():
+    findings = audit_topologies({"legacy": _V1Topology()})
+    assert [f.code for f in findings] == ["REG001", "REG002"]
+    assert "cost_api_version is 1" in findings[0].message
+    assert "keyword-only" in findings[1].message
+
+
+def test_audit_topologies_flags_missing_hook():
+    class HalfTopology:
+        name = "half"
+        cost_api_version = 2
+
+        def cost_phase_plan(self, plan, link, *, codec=None):
+            return 0.0
+
+    findings = audit_topologies({"half": HalfTopology()})
+    assert [f.code for f in findings] == ["REG002"]
+    assert "cost_pipelined_plan" in findings[0].message
+
+
+def test_audit_topologies_passes_conformant():
+    assert audit_topologies({"ok": _ConformantTopology()}) == []
+
+
+def test_audit_codecs_flags_partial_surface():
+    from repro.core.wire_codec import WireCodec
+
+    class Partial(WireCodec):  # no decode, no decode_cost_s override
+        name = "partial"
+        lossless = "yes"  # not a bool
+
+        def encode(self, x):
+            return x
+
+        def wire_bytes(self, x):
+            return 0
+
+    findings = audit_codecs({"partial": Partial()})
+    reg3 = [f for f in findings if f.code == "REG003"]
+    assert len(reg3) == 2  # decode stub + lossless non-bool
+    assert any("decode" in f.message for f in reg3)
+    assert any("lossless" in f.message for f in reg3)
+
+
+def test_audit_smoke_schema_flags_bad_file(tmp_path):
+    bad = tmp_path / "expected_smoke.json"
+    bad.write_text(json.dumps({
+        "UPPER/bad key": 1.0,
+        "smoke/ok/metric": [1, 2],
+    }))
+    findings = audit_smoke_schema(bad)
+    assert [f.code for f in findings] == ["REG004", "REG004"]
+    missing = audit_smoke_schema(tmp_path / "nope.json")
+    assert [f.code for f in missing] == ["REG004"]
+    garbage = tmp_path / "garbage.json"
+    garbage.write_text("{not json")
+    assert [f.code for f in audit_smoke_schema(garbage)] == ["REG004"]
+
+
+def test_audit_smoke_schema_passes_committed_file():
+    assert audit_smoke_schema(REPO / "benchmarks"
+                              / "expected_smoke.json") == []
+
+
+# ---------------------------------------------------------------------------
+# self-clean gate: the real tree passes its own linter
+# ---------------------------------------------------------------------------
+
+def test_repo_tree_lints_clean():
+    violations = lint_paths([REPO / "src", REPO / "tests",
+                             REPO / "benchmarks", REPO / "examples"])
+    assert violations == [], "\n".join(v.render() for v in violations)
+
+
+def test_live_registries_conformant():
+    findings = run_audit(REPO / "benchmarks" / "expected_smoke.json")
+    assert findings == [], "\n".join(f.render() for f in findings)
